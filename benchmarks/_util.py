@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing + CSV contract (name,us_per_call,derived)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 1, repeat: int = 3) -> float:
+    """Median wall seconds per call (blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def ensure_devices(n: int = 8):
+    """Must be called before jax import in __main__ blocks; here just checks."""
+    import os
+    flags = os.environ.get("XLA_FLAGS", "")
+    assert f"device_count={n}" in flags or len(jax.devices()) >= n, (
+        f"run via benchmarks.run (needs {n} host devices), got {len(jax.devices())}")

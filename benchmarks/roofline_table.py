@@ -1,0 +1,55 @@
+"""Emit the EXPERIMENTS.md §Roofline table from dry-run JSON records."""
+
+import glob
+import json
+import os
+import sys
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = "16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | {r['reason'][:40]} |"
+    if r["status"] != "ok":
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR | {r['error'][:40]} |"
+    ro = r["roofline"]
+    mem = r["memory"]["bytes_per_device"] / 1e9
+    return ("| {arch} | {shape} | {tc:.2e} | {tm:.2e} | {tl:.2e} | {dom} | "
+            "{frac:.3f} | {useful:.2f} | {mem:.1f} |").format(
+        arch=r["arch"], shape=r["shape"],
+        tc=ro["t_compute_s"], tm=ro["t_memory_s"], tl=ro["t_collective_s"],
+        dom=ro["dominant"], frac=ro["roofline_fraction"],
+        useful=ro["useful_flops_ratio"], mem=mem)
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    recs = load_records(mesh)
+    print(f"### Roofline table ({mesh} mesh, {len(recs)} cells)")
+    print("| arch | shape | t_compute(s) | t_memory(s) | t_coll(s) | dominant "
+          "| roofline_frac | useful_ratio | mem/dev GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+        print(f"\ndominant-term census: {doms}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness entry (task spec deliverable (d)).
+
+One benchmark per paper table/figure; each runs in a subprocess so it can
+set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
+
+  Table 3  -> bench_comm           (collective costs vs Hockney model)
+  Table 4  -> bench_local_ops      (core local operator costs)
+  Fig 7/8  -> bench_join_breakdown (join comm/comp, strong+weak scaling)
+  Fig 10/11+Table 5 -> bench_scaling (Summit-style scaling + projection)
+  Fig 12   -> bench_vs_naive       (patterns vs baseline strategies)
+"""
+
+import os
+import subprocess
+import sys
+
+BENCHES = [
+    "benchmarks.bench_local_ops",
+    "benchmarks.bench_comm",
+    "benchmarks.bench_join_breakdown",
+    "benchmarks.bench_scaling",
+    "benchmarks.bench_vs_naive",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    failures = 0
+    for mod in BENCHES:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+        res = subprocess.run([sys.executable, "-m", mod], cwd=root,
+                             capture_output=True, text=True, timeout=3600, env=env)
+        sys.stdout.write(res.stdout)
+        if res.returncode != 0:
+            failures += 1
+            print(f"{mod},0.0,FAILED rc={res.returncode}")
+            sys.stderr.write(res.stderr[-2000:])
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: high-performance distributed dataframes + LM training on TPU/JAX.
+
+Reproduction and extension of "In-depth Analysis On Parallel Processing
+Patterns for High-Performance Dataframes" (Perera et al., 2023) as a
+production-grade JAX framework. See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,50 @@
+"""Assigned architecture configs (+ the paper's own dataframe workload).
+
+Each module exposes ``CONFIG`` (full-size, exercised only via the dry-run)
+and ``smoke_config()`` (reduced same-family config for CPU smoke tests).
+``get_config(name)`` / ``ARCHS`` are the registry.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "llava_next_mistral_7b",
+    "zamba2_1p2b",
+    "whisper_tiny",
+    "mamba2_1p3b",
+    "gemma2_9b",
+    "stablelm_3b",
+    "deepseek_67b",
+    "olmo_1b",
+    "granite_moe_3b",
+    "granite_moe_1b",
+]
+
+_ALIASES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "gemma2-9b": "gemma2_9b",
+    "stablelm-3b": "stablelm_3b",
+    "deepseek-67b": "deepseek_67b",
+    "olmo-1b": "olmo_1b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke_config()

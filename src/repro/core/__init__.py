@@ -1,0 +1,14 @@
+"""The paper's core: distributed dataframe parallel processing patterns.
+
+Public surface:
+- ``Table`` — one fixed-capacity columnar row partition (Arrow adaptation)
+- ``DDF`` / ``DDFContext`` — the distributed dataframe + execution env
+- ``operators`` — in-shard_map distributed operators (the 8 patterns)
+- ``cost_model`` — Hockney-model costs (paper Tables 3-4, §5.3) + strategy
+  selection (§5.4)
+- ``comm`` — the communication model (communicator / collectives / channels)
+"""
+
+from . import comm, cost_model, local_ops, operators, partition, patterns  # noqa: F401
+from .api import DDF, DDFContext  # noqa: F401
+from .dataframe import Table, from_arrays, from_numpy, to_numpy  # noqa: F401

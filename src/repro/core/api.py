@@ -1,0 +1,304 @@
+"""User-facing distributed dataframe API (paper §2.1, Fig. 2b).
+
+``DDF`` is the *virtual* collection of row partitions: users write
+single-partition-style programs; the runtime decides local vs distributed
+execution from operator semantics (paper Fig. 1). Globally a DDF is a set of
+device-sharded columns of shape (P*capacity, ...) plus per-partition valid
+counts (P,), laid out over the mesh's row-partition axes.
+
+Each method wraps the corresponding in-shard_map operator from
+``operators.py`` under jit (compiled callables are cached per (context,
+operator, schema, static-params) so steady-state calls don't re-trace).
+Planning (quota/capacity/strategy) is host-side via ``patterns.py``.
+
+Auxiliary outputs (overflow counters, pivots, ...) come back with a leading
+per-worker axis of size P.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import operators, patterns
+from .comm.communicator import Communicator, make_communicator
+from .dataframe import Table
+from .local_ops import select as local_select
+from .partition import default_quota
+
+__all__ = ["DDFContext", "DDF"]
+
+_OP_CACHE: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class DDFContext:
+    """Execution environment: mesh + row-partition axes (paper's `env`)."""
+
+    mesh: Mesh
+    axes: tuple[str, ...] = ("data",)
+    fabric: str = "ici"
+
+    @property
+    def nworkers(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    @property
+    def axis(self):
+        return self.axes if len(self.axes) > 1 else self.axes[0]
+
+    def comm(self) -> Communicator:
+        return make_communicator(self.axis, self.fabric)
+
+    def row_spec(self) -> P:
+        return P(self.axes)
+
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.row_spec())
+
+
+def _schema_sig(ddf: "DDF") -> tuple:
+    return tuple((k, str(v.dtype), v.shape) for k, v in sorted(ddf.columns.items()))
+
+
+def _build_op(ctx: DDFContext, fn: Callable, arg_schemas: tuple) -> Callable:
+    """Compile ``fn(comm, *local_tables) -> Table | (Table|aux, ...)`` into a
+    jitted shard_map over the context's row-partition axes."""
+    spec = P(ctx.axes)
+    nw = ctx.nworkers
+
+    def wrapper(*flat):
+        locs = []
+        for i in range(0, len(flat), 2):
+            cols, cnt = flat[i], flat[i + 1]
+            locs.append(Table(dict(cols), cnt.reshape(())))
+        res = fn(ctx.comm(), *locs)
+        if not isinstance(res, tuple):
+            res = (res,)
+        out = []
+        for r in res:
+            if isinstance(r, Table):
+                out.append((dict(r.columns), r.nvalid.reshape((1,))))
+            else:
+                # aux pytree: add a leading per-worker axis
+                out.append(jax.tree.map(lambda x: jnp.asarray(x)[None, ...], r))
+        return tuple(out)
+
+    in_specs = []
+    for schema in arg_schemas:
+        in_specs.append({k: spec for k, _, _ in schema})
+        in_specs.append(spec)
+    # Every output leaf carries a leading per-worker axis (table columns have
+    # their capacity dim; nvalid is reshaped (1,); aux leaves get [None]), so
+    # a single prefix spec shards the whole output pytree.
+    sm = jax.shard_map(wrapper, mesh=ctx.mesh, in_specs=tuple(in_specs),
+                       out_specs=spec, check_vma=False)
+    return jax.jit(sm)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DDF:
+    """Distributed dataframe: global columns (P*cap, ...) + counts (P,)."""
+
+    columns: dict[str, jax.Array]
+    counts: jax.Array  # (P,) int32 — valid rows per partition
+    ctx: DDFContext
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names) + (self.counts,), (names, self.ctx)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, ctx = aux
+        *cols, counts = children
+        return cls(dict(zip(names, cols)), counts, ctx)
+
+    # -- metadata --------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0] // self.ctx.nworkers
+
+    @property
+    def column_names(self):
+        return tuple(sorted(self.columns))
+
+    def num_rows(self) -> int:
+        return int(np.sum(np.asarray(self.counts)))
+
+    # -- construction ------------------------------------------------------------
+    @classmethod
+    def from_numpy(cls, data: Mapping[str, np.ndarray], ctx: DDFContext,
+                   capacity: int | None = None) -> "DDF":
+        """Partitioned input: rows split contiguously across workers
+        (paper §5.3.8 partitioned I/O)."""
+        nw = ctx.nworkers
+        n = len(next(iter(data.values())))
+        per = -(-n // nw)
+        cap = per if capacity is None else capacity
+        cols = {}
+        for k, v in data.items():
+            v = np.asarray(v)
+            buf = np.zeros((nw, cap) + v.shape[1:], v.dtype)
+            for w in range(nw):
+                chunk = v[w * per: (w + 1) * per][:cap]
+                buf[w, : len(chunk)] = chunk
+            cols[k] = jax.device_put(buf.reshape((nw * cap,) + v.shape[1:]), ctx.sharding())
+        counts = np.minimum(np.maximum(n - per * np.arange(nw), 0), min(per, cap)).astype(np.int32)
+        return cls(cols, jax.device_put(counts, ctx.sharding()), ctx)
+
+    def to_numpy(self) -> dict[str, np.ndarray]:
+        """Gather live rows to host, in partition order."""
+        counts = np.asarray(self.counts)
+        cap = self.capacity
+        out = {}
+        for k, v in self.columns.items():
+            v = np.asarray(v).reshape((self.ctx.nworkers, cap) + v.shape[1:])
+            out[k] = np.concatenate([v[w, : counts[w]] for w in range(self.ctx.nworkers)])
+        return out
+
+    # -- execution plumbing ---------------------------------------------------------
+    def _run(self, key: tuple, fn, *ddfs: "DDF"):
+        schemas = tuple(_schema_sig(d) for d in (self,) + ddfs)
+        cache_key = (id(self.ctx.mesh), self.ctx.axes, key, schemas)
+        op = _OP_CACHE.get(cache_key)
+        if op is None:
+            op = _build_op(self.ctx, fn, schemas)
+            _OP_CACHE[cache_key] = op
+        flat = []
+        for d in (self,) + ddfs:
+            flat.append(d.columns)
+            flat.append(d.counts)
+        results = op(*flat)
+        out = []
+        for item in results:
+            if isinstance(item, tuple) and len(item) == 2 and isinstance(item[0], dict) and not isinstance(item[1], dict):
+                out.append(DDF(item[0], item[1], self.ctx))
+            else:
+                out.append(item)
+        return out[0] if len(out) == 1 else tuple(out)
+
+    # -- embarrassingly parallel (paper §5.3.1) ----------------------------------
+    def select(self, pred, name: str = "pred") -> "DDF":
+        return self._run(("select", name), lambda comm, t: local_select(t, pred))
+
+    def project(self, names: Sequence[str]) -> "DDF":
+        return DDF({n: self.columns[n] for n in names}, self.counts, self.ctx)
+
+    def rename(self, mapping: Mapping[str, str]) -> "DDF":
+        """Column rename (paper Fig. 6 Modin-algebra surface; zero-copy)."""
+        return DDF({mapping.get(k, k): v for k, v in self.columns.items()},
+                   self.counts, self.ctx)
+
+    def map_columns(self, fn, name: str = "map") -> "DDF":
+        return self._run(("map", name), lambda comm, t: Table(dict(fn(t.columns)), t.nvalid))
+
+    # -- loosely synchronous ----------------------------------------------------
+    def join(self, other: "DDF", on: Sequence[str], strategy: str = "auto",
+             quota: int | None = None, capacity: int | None = None):
+        on = tuple(on)
+        nw = self.ctx.nworkers
+        if strategy == "auto":
+            plan = patterns.plan_join(self.num_rows(), other.num_rows(), nw, self.capacity)
+            strategy = plan.strategy
+        quota = quota or default_quota(self.capacity, nw)
+        capacity = capacity or 2 * self.capacity
+        if strategy == "broadcast":
+            small, big = (self, other) if self.num_rows() <= other.num_rows() else (other, self)
+            return big._run(("bjoin", on, capacity),
+                            lambda comm, b, s: operators.dist_join_broadcast(comm, b, s, on, capacity),
+                            small)
+        return self._run(("join", on, quota, capacity),
+                         lambda comm, l, r: operators.dist_join_shuffle(comm, l, r, on, quota, capacity),
+                         other)
+
+    def groupby(self, by: Sequence[str], aggs: Mapping[str, Sequence[str]],
+                pre_combine: bool | None = None, cardinality_hint: float | None = None,
+                quota: int | None = None, capacity: int | None = None):
+        by = tuple(by)
+        aggs = {k: tuple(v) for k, v in aggs.items()}
+        nw = self.ctx.nworkers
+        if pre_combine is None:
+            from .cost_model import choose_groupby_strategy
+            pre_combine = choose_groupby_strategy(
+                cardinality_hint if cardinality_hint is not None else 0.0)
+        quota = quota or default_quota(self.capacity, nw)
+        capacity = capacity or self.capacity
+        key = ("groupby", by, tuple(sorted(aggs.items())), pre_combine, quota, capacity)
+        return self._run(key, lambda comm, t: operators.dist_groupby(
+            comm, t, by, aggs, quota, capacity, pre_combine))
+
+    def unique(self, subset: Sequence[str], quota: int | None = None, capacity: int | None = None):
+        subset = tuple(subset)
+        nw = self.ctx.nworkers
+        quota = quota or default_quota(self.capacity, nw)
+        capacity = capacity or self.capacity
+        return self._run(("unique", subset, quota, capacity),
+                         lambda comm, t: operators.dist_unique(comm, t, subset, quota, capacity))
+
+    def union(self, other: "DDF", on: Sequence[str], quota: int | None = None,
+              capacity: int | None = None):
+        on = tuple(on)
+        nw = self.ctx.nworkers
+        cap = self.capacity + other.capacity
+        quota = quota or default_quota(cap, nw)
+        capacity = capacity or cap
+        return self._run(("union", on, quota, capacity),
+                         lambda comm, l, r: operators.dist_union(comm, l, r, on, quota, capacity),
+                         other)
+
+    def difference(self, other: "DDF", on: Sequence[str], quota: int | None = None,
+                   capacity: int | None = None):
+        on = tuple(on)
+        nw = self.ctx.nworkers
+        quota = quota or default_quota(self.capacity, nw)
+        capacity = capacity or self.capacity
+        return self._run(("difference", on, quota, capacity),
+                         lambda comm, l, r: operators.dist_difference(comm, l, r, on, quota, capacity),
+                         other)
+
+    def sort_values(self, by: str, descending: bool = False, quota: int | None = None,
+                    capacity: int | None = None):
+        nw = self.ctx.nworkers
+        quota = quota or default_quota(self.capacity, nw, safety=3.0)
+        capacity = capacity or 2 * self.capacity
+        return self._run(("sort", by, descending, quota, capacity),
+                         lambda comm, t: operators.dist_sort(
+                             comm, t, by, quota, capacity, descending=descending))
+
+    def agg(self, column: str, op: str):
+        out = self._run(("agg", column, op),
+                        lambda comm, t: (operators.dist_column_agg(comm, t, column, op),))
+        return np.asarray(out)[0]  # replicated; take worker 0's copy
+
+    def length(self) -> int:
+        out = self._run(("length",), lambda comm, t: (operators.dist_length(comm, t),))
+        return int(np.asarray(out)[0])
+
+    def rolling_sum(self, column: str, window: int):
+        return self._run(("rolling", column, window),
+                         lambda comm, t: operators.dist_window_sum(comm, t, column, window))
+
+    def rolling(self, column: str, window: int, op: str = "sum"):
+        """Rolling window aggregate: sum | mean | min | max (halo exchange)."""
+        return self._run(("rollagg", column, window, op),
+                         lambda comm, t: operators.dist_window_agg(comm, t, column, window, op))
+
+    def transpose(self) -> "DDF":
+        """Distributed transpose (gather-based; for matrix-shaped tables)."""
+        return self._run(("transpose", self.capacity),
+                         lambda comm, t: operators.dist_transpose(comm, t))
+
+    def rebalance(self, quota: int | None = None):
+        quota = quota or self.capacity
+        return self._run(("rebalance", quota),
+                         lambda comm, t: operators.rebalance(comm, t, quota))
+
+    def head(self, k: int) -> "DDF":
+        return self._run(("head", k), lambda comm, t: operators.dist_head(comm, t, k))

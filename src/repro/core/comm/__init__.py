@@ -1,0 +1,2 @@
+from .communicator import Communicator, make_communicator  # noqa: F401
+from . import collectives, channels  # noqa: F401

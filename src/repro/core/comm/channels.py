@@ -1,0 +1,55 @@
+"""Point-to-point channels (paper §3.2) as ``ppermute`` rings.
+
+Cylon's channels are non-blocking tag-matched send/recv pairs with metadata
+exchange followed by payload exchange. On TPU the analogous primitive is
+``jax.lax.ppermute`` — a compiler-scheduled neighbor permutation on the ICI
+torus. We expose:
+
+- ``shift``: send a fixed-size buffer k hops along the partition ring
+  (the halo-exchange building block, paper §5.3.6);
+- ``send_recv``: arbitrary permutation of fixed-size buffers + their
+  valid-counts (metadata travels with the payload, mirroring the channel's
+  two-phase metadata/payload protocol).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..dataframe import Table
+
+__all__ = ["shift", "send_recv", "halo_exchange"]
+
+
+def _ring_perm(P: int, offset: int) -> list[tuple[int, int]]:
+    return [(i, (i + offset) % P) for i in range(P)]
+
+
+def shift(x: jax.Array, axis, offset: int = 1) -> jax.Array:
+    """Every worker sends ``x`` to rank+offset (mod P) and receives from
+    rank-offset."""
+    P = jax.lax.axis_size(axis)
+    return jax.lax.ppermute(x, axis, perm=_ring_perm(P, offset))
+
+
+def send_recv(x: jax.Array, axis, perm: Sequence[tuple[int, int]]) -> jax.Array:
+    """General p2p: perm is a list of (src, dst) pairs; ranks not receiving
+    get zeros (channel with no matching recv)."""
+    return jax.lax.ppermute(x, axis, perm=list(perm))
+
+
+def halo_exchange(tail: jax.Array, head: jax.Array, axis) -> tuple[jax.Array, jax.Array]:
+    """Exchange boundary halos with ring neighbors (paper §5.3.6, windows).
+
+    ``tail``: this worker's last rows (sent rightward), ``head``: first rows
+    (sent leftward). Returns (left_halo, right_halo) = previous worker's tail
+    and next worker's head. Edge workers receive zeros (non-wrapping windows),
+    which callers mask by global position.
+    """
+    P = jax.lax.axis_size(axis)
+    left = jax.lax.ppermute(tail, axis, perm=[(i, i + 1) for i in range(P - 1)])
+    right = jax.lax.ppermute(head, axis, perm=[(i + 1, i) for i in range(P - 1)])
+    return left, right

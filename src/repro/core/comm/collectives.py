@@ -1,0 +1,203 @@
+"""Table/array/scalar collectives over ``jax.lax`` primitives (paper §3, Table 1).
+
+The Cylon communication model exposes composite-data-structure collectives
+(shuffle/gather/allgather/bcast/(all)reduce on tables, arrays, scalars) built
+on buffer-level primitives. The TPU adaptation implements each table
+collective as the corresponding ``jax.lax`` collective applied per column
+buffer *inside a ``shard_map`` region* — the abstract-collectives layer of the
+paper, with XLA's compiler-scheduled collectives replacing hand-progressed
+MPI requests (DESIGN.md §2).
+
+All functions here expect to run inside ``shard_map`` with ``axis`` naming
+the (possibly tuple of) mesh axes that carry the row partitions.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..dataframe import Table, valid_mask
+from ..partition import build_shuffle_buffers
+
+__all__ = [
+    "axis_size",
+    "axis_index",
+    "shuffle_table",
+    "allgather_table",
+    "gather_table",
+    "broadcast_table",
+    "allreduce_array",
+    "reduce_scatter_array",
+    "allgather_array",
+    "barrier",
+]
+
+
+def axis_size(axis) -> int:
+    return jax.lax.axis_size(axis)
+
+
+def axis_index(axis) -> jax.Array:
+    return jax.lax.axis_index(axis)
+
+
+# -- array / scalar collectives ----------------------------------------------
+
+def allreduce_array(x: jax.Array, axis, op: str = "sum") -> jax.Array:
+    if op == "sum":
+        return jax.lax.psum(x, axis)
+    if op == "max":
+        return jax.lax.pmax(x, axis)
+    if op == "min":
+        return jax.lax.pmin(x, axis)
+    if op == "mean":
+        return jax.lax.pmean(x, axis)
+    raise ValueError(f"unknown reduce op {op}")
+
+
+def reduce_scatter_array(x: jax.Array, axis) -> jax.Array:
+    return jax.lax.psum_scatter(x, axis, tiled=True)
+
+
+def allgather_array(x: jax.Array, axis, tiled: bool = False) -> jax.Array:
+    return jax.lax.all_gather(x, axis, tiled=tiled)
+
+
+def barrier(axis) -> None:
+    # BSP supersteps are implicit at shard_map boundaries; an explicit barrier
+    # (paper Table 1) is a zero-byte psum, used only by tests.
+    jax.lax.psum(jnp.zeros((), jnp.int32), axis)
+
+
+# -- table collectives ---------------------------------------------------------
+
+def _all_to_all(x: jax.Array, axis) -> jax.Array:
+    """(P, quota, ...) -> (P, quota, ...) where out[j] came from peer j."""
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+
+
+def shuffle_table(table: Table, dest: jax.Array, axis, quota: int,
+                  capacity: int | None = None, algorithm: str = "native") -> tuple[Table, jax.Array]:
+    """AllToAll shuffle of live rows to ``dest`` partitions (paper §3.1/§5.1).
+
+    Cylon implements shuffle on p2p channels because of "a mismatch in
+    traditional MPI_Alltoall"; on TPU the mismatch disappears once rows sit in
+    fixed quota buffers, so we use the native all-to-all (the paper's own
+    future-work recommendation: offload shuffle to the library).
+
+    ``algorithm``: "native" (XLA all-to-all) or "bruck" (paper §6.1.1 /
+    Table 3: O(log P) startup, O(log P * n/2) transfer — the latency-bound
+    choice for small payloads at large P, built from log2(P) ppermute
+    rounds; see ``choose_shuffle_algorithm``).
+
+    Returns (received table with capacity P*quota (or ``capacity``), overflow
+    count). Received rows are compacted to the front, grouped by source rank
+    (stable), preserving within-source order.
+    """
+    P = axis_size(axis)
+    bufs = build_shuffle_buffers(table, dest, P, quota)
+    if algorithm == "bruck":
+        recv_cols, recv_counts = _bruck_all_to_all(bufs.columns, bufs.counts, axis)
+    else:
+        recv_cols = {k: _all_to_all(v, axis) for k, v in bufs.columns.items()}
+        recv_counts = _all_to_all(bufs.counts.reshape(P, 1), axis).reshape(P)
+    # validity of the (P, quota) grid
+    keep = jnp.arange(quota, dtype=jnp.int32)[None, :] < recv_counts[:, None]
+    flat_keep = keep.reshape(P * quota)
+    out = Table({k: v.reshape((P * quota,) + v.shape[2:]) for k, v in recv_cols.items()},
+                jnp.asarray(P * quota, jnp.int32))
+    from ..dataframe import compact  # local import to avoid cycle at module load
+    out = compact(out, flat_keep, capacity=capacity)
+    return out, bufs.overflow
+
+
+def _bruck_all_to_all(columns: dict, counts: jax.Array, axis):
+    """Bruck all-to-all over ppermute rounds (Bruck et al. 1997; paper
+    Table 3). Blocks are first rotated to relative order (slot j = block for
+    rank+j), then round k ships every slot with bit k set to rank + 2^k —
+    the slot sets are STATIC, so each round moves exactly P/2 quota-blocks.
+    After ceil(log2 P) rounds slot j holds the block FROM rank-j; a final
+    inverse rotation restores source order (matching the native layout)."""
+    P = axis_size(axis)
+    rank = axis_index(axis)
+
+    rot = (jnp.arange(P) + rank) % P               # slot j <- block for rank+j
+    cols = {k: v[rot] for k, v in columns.items()}
+    cnts = counts[rot]
+
+    nbits = max((P - 1).bit_length(), 1)
+    for k in range(nbits):
+        bit = 1 << k
+        slots = [j for j in range(P) if j & bit]   # static slot set
+        if not slots:
+            continue
+        idx = jnp.asarray(slots, jnp.int32)
+        perm = [(i, (i + bit) % P) for i in range(P)]
+        new_cols = {}
+        for name, v in cols.items():
+            send = v[idx]                          # (|slots|, quota, ...)
+            recv = jax.lax.ppermute(send, axis, perm=perm)
+            new_cols[name] = v.at[idx].set(recv)
+        cnt_recv = jax.lax.ppermute(cnts[idx], axis, perm=perm)
+        cnts = cnts.at[idx].set(cnt_recv)
+        cols = new_cols
+
+    inv = (rank - jnp.arange(P)) % P               # out[s] = slot (rank - s)
+    return {k: v[inv] for k, v in cols.items()}, cnts[inv]
+
+
+def allgather_table(table: Table, axis, capacity: int | None = None) -> Table:
+    """AllGather a table: every worker ends with all live rows (paper Table 1)."""
+    P = axis_size(axis)
+    cap = table.capacity
+    cols = {k: jax.lax.all_gather(v, axis) for k, v in table.columns.items()}  # (P, cap, ...)
+    counts = jax.lax.all_gather(table.nvalid, axis)  # (P,)
+    keep = (jnp.arange(cap, dtype=jnp.int32)[None, :] < counts[:, None]).reshape(P * cap)
+    out = Table({k: v.reshape((P * cap,) + v.shape[2:]) for k, v in cols.items()},
+                jnp.asarray(P * cap, jnp.int32))
+    from ..dataframe import compact
+    return compact(out, keep, capacity=capacity)
+
+
+def gather_table(table: Table, axis, root: int = 0, capacity: int | None = None) -> Table:
+    """Gather to ``root``; non-root workers receive an empty table."""
+    out = allgather_table(table, axis, capacity=capacity)
+    me = axis_index(axis)
+    n = jnp.where(me == root, out.nvalid, 0)
+    return Table(out.columns, n.astype(jnp.int32))
+
+
+def broadcast_table(table: Table, axis, root: int = 0) -> Table:
+    """Broadcast root's partition to all workers (paper Table 1; used by the
+    broadcast-join pattern §5.3.7).
+
+    Implemented as masked psum (zero everywhere but root, then sum): a single
+    reduction-tree collective, which XLA lowers to an all-reduce. Costs match
+    the paper's binomial-tree broadcast asymptotics in the log-P term.
+    """
+    me = axis_index(axis)
+    sel = (me == root)
+    cols = {}
+    for k, v in table.columns.items():
+        contrib = jnp.where(sel, v.astype(jnp.float32) if v.dtype == jnp.bool_ else v, jnp.zeros_like(v))
+        out = jax.lax.psum(contrib, axis)
+        cols[k] = out.astype(v.dtype)
+    n = jax.lax.psum(jnp.where(sel, table.nvalid, 0), axis)
+    return Table(cols, n.astype(jnp.int32))
+
+
+def scatter_table(table: Table, axis, root: int = 0, quota: int | None = None) -> tuple[Table, jax.Array]:
+    """Scatter root's live rows round-robin across workers (partitioned I/O)."""
+    P = axis_size(axis)
+    quota = quota if quota is not None else -(-table.capacity // P)
+    me = axis_index(axis)
+    # Non-root contributes no rows: zero out nvalid off-root.
+    n = jnp.where(me == root, table.nvalid, 0).astype(jnp.int32)
+    t = Table(table.columns, n)
+    idx = jnp.arange(table.capacity, dtype=jnp.int32)
+    dest = jnp.where(idx < n, idx % P, P)
+    return shuffle_table(t, dest, axis, quota)

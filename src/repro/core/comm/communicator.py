@@ -1,0 +1,111 @@
+"""The pluggable Communicator (paper §3.1, Fig. 4).
+
+Cylon plugs OpenMPI / Gloo / UCX under one communicator interface. On TPU
+there is exactly one transport (XLA collectives over ICI/DCN), so the
+pluggability axis that *transfers* is the **fabric profile**: the same
+``jax.lax`` lowering annotated with per-fabric Hockney parameters
+(alpha, beta) used by the cost model for strategy selection — ICI within a
+pod, DCN across pods, HOST for the CPU-device benchmarking backend. This
+keeps the paper's architecture (user-facing table/array/scalar routines ->
+abstract collectives -> buffer primitives) while being honest that TPU
+collectives are compiler-issued, not library-issued (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..dataframe import Table
+from . import collectives, channels
+
+__all__ = ["FabricProfile", "ICI", "DCN", "HOST", "Communicator", "make_communicator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricProfile:
+    """Hockney (alpha, beta) per fabric + name, feeding the cost model."""
+
+    name: str
+    alpha_s: float          # startup latency per message [s]
+    beta_s_per_byte: float  # transfer time per byte [s/B]
+
+    def t_msg(self, nbytes: float) -> float:
+        return self.alpha_s + nbytes * self.beta_s_per_byte
+
+
+# TPU v5e figures (task spec + public multislice docs); HOST is calibrated by
+# benchmarks/bench_comm.py at runtime.
+ICI = FabricProfile("ici", alpha_s=1e-6, beta_s_per_byte=1.0 / 50e9)
+DCN = FabricProfile("dcn", alpha_s=10e-6, beta_s_per_byte=1.0 / 25e9)
+HOST = FabricProfile("host", alpha_s=5e-6, beta_s_per_byte=1.0 / 10e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    """Bundles the mesh axes carrying row partitions with a fabric profile.
+
+    Methods mirror paper Table 1 (operations x {table, array, scalar}).
+    All methods must be called inside a ``shard_map`` over ``axis``.
+    """
+
+    axis: object  # axis name or tuple of names (e.g. ("pod", "data"))
+    fabric: FabricProfile = ICI
+
+    # -- metadata
+    @property
+    def nworkers_static(self) -> int | None:
+        return None  # only known inside shard_map
+
+    def size(self) -> int:
+        return collectives.axis_size(self.axis)
+
+    def rank(self) -> jax.Array:
+        return collectives.axis_index(self.axis)
+
+    # -- table routines (paper Table 1 "Common" column)
+    def shuffle(self, table: Table, dest, quota: int, capacity: int | None = None,
+                algorithm: str = "native"):
+        return collectives.shuffle_table(table, dest, self.axis, quota, capacity,
+                                         algorithm=algorithm)
+
+    def allgather(self, table: Table, capacity: int | None = None) -> Table:
+        return collectives.allgather_table(table, self.axis, capacity)
+
+    def gather(self, table: Table, root: int = 0, capacity: int | None = None) -> Table:
+        return collectives.gather_table(table, self.axis, root, capacity)
+
+    def broadcast(self, table: Table, root: int = 0) -> Table:
+        return collectives.broadcast_table(table, self.axis, root)
+
+    def scatter(self, table: Table, root: int = 0, quota: int | None = None):
+        return collectives.scatter_table(table, self.axis, root, quota)
+
+    # -- array / scalar routines
+    def allreduce(self, x, op: str = "sum"):
+        return collectives.allreduce_array(x, self.axis, op)
+
+    def reduce_scatter(self, x):
+        return collectives.reduce_scatter_array(x, self.axis)
+
+    def allgather_array(self, x, tiled: bool = False):
+        return collectives.allgather_array(x, self.axis, tiled)
+
+    # -- channels (p2p)
+    def shift(self, x, offset: int = 1):
+        return channels.shift(x, self.axis, offset)
+
+    def halo_exchange(self, tail, head):
+        return channels.halo_exchange(tail, head, self.axis)
+
+    def barrier(self):
+        collectives.barrier(self.axis)
+
+
+def make_communicator(axis, fabric: str | FabricProfile = "ici") -> Communicator:
+    if isinstance(fabric, str):
+        fabric = {"ici": ICI, "dcn": DCN, "host": HOST}[fabric]
+    return Communicator(axis=axis, fabric=fabric)

@@ -1,0 +1,250 @@
+"""Cost model for distributed dataframe operator patterns (paper §5).
+
+T_total = T_core + T_aux + T_comm, with the Hockney model T = alpha + n*beta
+per message. We reproduce paper Table 3 (collective algorithms), Table 4
+(core local operator complexities), and the §5.3 per-pattern totals, then
+re-parameterize for the TPU fabrics (ICI/DCN) so the planner can select
+pattern variants at plan time (paper §5.4).
+
+Units: seconds, bytes, rows. ``n`` follows the paper's bold-n convention:
+work per process in *bytes* for communication terms and in *rows* for local
+terms (row width ``row_bytes`` converts between them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+from .comm.communicator import DCN, HOST, ICI, FabricProfile
+
+__all__ = [
+    "CostParams",
+    "t_shuffle",
+    "t_allgather",
+    "t_broadcast",
+    "t_reduce",
+    "t_allreduce",
+    "LOCAL_COSTS",
+    "t_local",
+    "pattern_cost",
+    "choose_join_strategy",
+    "choose_groupby_strategy",
+    "choose_shuffle_algorithm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Hockney (alpha, beta) + local-compute calibration.
+
+    gamma_s_per_row: per-row local processing constant (calibrated by
+    benchmarks/bench_local_ops.py; default from CPU microbenchmarks).
+    """
+
+    fabric: FabricProfile = ICI
+    gamma_s_per_row: float = 2e-9
+
+    @property
+    def alpha(self) -> float:
+        return self.fabric.alpha_s
+
+    @property
+    def beta(self) -> float:
+        return self.fabric.beta_s_per_byte
+
+
+# -- Table 3: collective communication costs ------------------------------------
+# Each returns (T_startup, T_transfer, T_reduce) in seconds for per-worker
+# payload of n bytes across P workers.
+
+def t_shuffle(P: int, n_bytes: float, p: CostParams, algorithm: str = "isend-irecv"):
+    a, b = p.alpha, p.beta
+    if algorithm == "isend-irecv":
+        return ((P - 1) * a, (P - 1) / P * n_bytes * b, 0.0)
+    if algorithm == "ring":
+        return (P * a, P * n_bytes * b, 0.0)
+    if algorithm == "pairwise":
+        return (P * a, n_bytes * b, 0.0)
+    if algorithm == "bruck":
+        lg = math.log2(max(P, 2))
+        return (lg * a, lg * n_bytes / 2 * b, 0.0)
+    raise ValueError(algorithm)
+
+
+def t_allgather(P: int, n_bytes: float, p: CostParams, algorithm: str = "ring"):
+    a, b = p.alpha, p.beta
+    total = P * n_bytes  # paper's N: allgather moves the whole table
+    if algorithm == "ring":
+        return (P * a, (P - 1) / P * total * b, 0.0)
+    if algorithm in ("recursive-doubling", "bruck"):
+        return (math.log2(max(P, 2)) * a, (P - 1) / P * total * b, 0.0)
+    raise ValueError(algorithm)
+
+
+def t_broadcast(P: int, n_bytes: float, p: CostParams, algorithm: str = "binomial"):
+    a, b = p.alpha, p.beta
+    lg = math.log2(max(P, 2))
+    if algorithm == "binomial":
+        return (lg * a, lg * n_bytes * b, 0.0)
+    if algorithm == "scatter-allgather":
+        return ((lg + P) * a, (P - 1) / P * n_bytes * b, 0.0)
+    raise ValueError(algorithm)
+
+
+def t_reduce(P: int, n_bytes: float, p: CostParams, algorithm: str = "binomial"):
+    a, b = p.alpha, p.beta
+    lg = math.log2(max(P, 2))
+    if algorithm == "binomial":
+        return (lg * a, lg * n_bytes * b, lg * n_bytes * b)
+    if algorithm == "reduce-scatter-gather":
+        return (lg * a, (P - 1) / P * n_bytes * b, (P - 1) / P * n_bytes * b)
+    raise ValueError(algorithm)
+
+
+def t_allreduce(P: int, n_bytes: float, p: CostParams, algorithm: str = "reduce-scatter-allgather"):
+    a, b = p.alpha, p.beta
+    lg = math.log2(max(P, 2))
+    if algorithm == "binomial":
+        return (lg * a, lg * n_bytes * b, lg * n_bytes * b)
+    if algorithm == "recursive-doubling":
+        return (lg * a, lg * n_bytes * b, lg * n_bytes * b)
+    if algorithm == "reduce-scatter-allgather":
+        return (lg * a, 2 * (P - 1) / P * n_bytes * b, (P - 1) / P * n_bytes * b)
+    raise ValueError(algorithm)
+
+
+def _sum3(t):
+    return t[0] + t[1] + t[2]
+
+
+# -- Table 4: core local operator costs ------------------------------------------
+# cost(n_rows, cardinality C) -> seconds, using the calibrated gamma.
+
+LOCAL_COSTS: dict[str, Callable[[float, float, CostParams], float]] = {
+    "selection": lambda n, C, p: p.gamma_s_per_row * n,
+    "map": lambda n, C, p: p.gamma_s_per_row * n,
+    "row_aggregation": lambda n, C, p: p.gamma_s_per_row * n,
+    "projection": lambda n, C, p: p.gamma_s_per_row * 1.0,  # O(c)
+    "union": lambda n, C, p: p.gamma_s_per_row * n,
+    "set_difference": lambda n, C, p: p.gamma_s_per_row * n,
+    # paper Table 4: Hash-Join O(n) + O(n/C); Sort-Join O(n log n) + O(n/C)
+    "hash_join": lambda n, C, p: p.gamma_s_per_row * (n + n / max(C, 1e-9)),
+    "sort_join": lambda n, C, p: p.gamma_s_per_row * (n * math.log2(max(n, 2)) + n / max(C, 1e-9)),
+    "transpose": lambda n, C, p: p.gamma_s_per_row * n,
+    "unique": lambda n, C, p: p.gamma_s_per_row * n,
+    "groupby": lambda n, C, p: p.gamma_s_per_row * n,
+    "column_aggregation": lambda n, C, p: p.gamma_s_per_row * n,
+    "sort": lambda n, C, p: p.gamma_s_per_row * n * math.log2(max(n, 2)),
+}
+
+
+def t_local(op: str, n_rows: float, cardinality: float = 1.0, p: CostParams = CostParams()) -> float:
+    return LOCAL_COSTS[op](n_rows, cardinality, p)
+
+
+# -- §5.3 per-pattern totals -------------------------------------------------------
+
+def pattern_cost(
+    pattern: str,
+    *,
+    P: int,
+    n_rows: float,
+    row_bytes: float,
+    cardinality: float = 1.0,
+    core_op: str = "map",
+    params: CostParams = CostParams(),
+    shuffle_algorithm: str = "isend-irecv",
+) -> dict[str, float]:
+    """Estimated wall time breakdown {core, aux, comm, total} per worker."""
+    p = params
+    n_bytes = n_rows * row_bytes
+    C = cardinality
+    if pattern == "embarrassingly_parallel":
+        core = t_local(core_op, n_rows, C, p)
+        return _pack(core, 0.0, 0.0)
+    if pattern == "shuffle_compute":
+        aux = t_local("map", n_rows, C, p)  # hash partition is a map
+        comm = _sum3(t_shuffle(P, n_bytes, p, shuffle_algorithm))
+        core = t_local(core_op, n_rows, C, p)
+        return _pack(core, aux, comm)
+    if pattern == "sample_shuffle_compute":
+        aux = t_local("sort", n_rows, C, p) + t_local("map", n_rows, C, p)
+        comm = _sum3(t_allreduce(P, 8.0 * P, p)) + _sum3(t_shuffle(P, n_bytes, p, shuffle_algorithm))
+        core = t_local("sort", n_rows, C, p)  # local merge
+        return _pack(core, aux, comm)
+    if pattern == "combine_shuffle_reduce":
+        core1 = t_local(core_op, n_rows, C, p)
+        aux = t_local("map", n_rows * C, C, p)
+        comm = _sum3(t_shuffle(P, n_bytes * C, p, shuffle_algorithm))
+        core2 = t_local(core_op, n_rows * C, C, p)
+        return _pack(core1 + core2, aux, comm)
+    if pattern == "broadcast_compute":
+        # broadcast the small relation (n here = small side), join locally
+        comm = _sum3(t_allgather(P, n_bytes, p))
+        core = t_local(core_op, n_rows, C, p)
+        return _pack(core, 0.0, comm)
+    if pattern == "globally_reduce":
+        core = t_local("column_aggregation", n_rows, C, p)
+        comm = _sum3(t_allreduce(P, row_bytes, p))
+        return _pack(core, 0.0, comm)
+    if pattern == "halo_exchange":
+        core = t_local("map", n_rows, C, p)
+        comm = p.alpha + row_bytes * p.beta  # one neighbor message
+        return _pack(core, 0.0, comm)
+    if pattern == "partitioned_io":
+        core = t_local("map", n_rows, C, p)
+        comm = _sum3(t_shuffle(P, n_bytes, p, shuffle_algorithm))
+        return _pack(core, 0.0, comm)
+    raise ValueError(pattern)
+
+
+def _pack(core, aux, comm):
+    return {"core": core, "aux": aux, "comm": comm, "total": core + aux + comm}
+
+
+# -- §5.4 runtime strategy selection ----------------------------------------------
+
+def choose_join_strategy(
+    n_left_rows: float,
+    n_right_rows: float,
+    P: int,
+    row_bytes: float,
+    params: CostParams = CostParams(),
+    broadcast_budget_bytes: float = 256e6,
+) -> str:
+    """Broadcast-join beats shuffle-join when one relation is small enough
+    that replicating it costs less than shuffling both (paper §5.3.7/§5.4.2).
+
+    A memory guard rejects broadcast when the replicated relation exceeds
+    ``broadcast_budget_bytes`` per worker — the paper's observation that
+    Modin's broadcast-only joins OOM on same-order relations is a memory
+    failure, not just a bandwidth one."""
+    small = min(n_left_rows, n_right_rows)
+    if small * row_bytes > broadcast_budget_bytes:
+        return "shuffle"
+    shuffle_cost = (
+        _sum3(t_shuffle(P, n_left_rows / P * row_bytes, params))
+        + _sum3(t_shuffle(P, n_right_rows / P * row_bytes, params))
+    )
+    bcast_cost = _sum3(t_allgather(P, small / P * row_bytes, params))
+    return "broadcast" if bcast_cost < shuffle_cost else "shuffle"
+
+
+def choose_groupby_strategy(cardinality: float, threshold: float = 0.5) -> bool:
+    """pre_combine? Combine-Shuffle-Reduce wins at low cardinality; at C->1 it
+    degrades below plain Shuffle-Compute because the core op runs twice
+    (paper §5.4.1). Returns True for pre-combine."""
+    return cardinality < threshold
+
+
+def choose_shuffle_algorithm(P: int, n_bytes: float, params: CostParams = CostParams()) -> str:
+    """Latency-bound (small n, large P) -> Bruck; else pairwise/isend
+    (paper §6.1.1 recommendation)."""
+    best, best_t = None, float("inf")
+    for alg in ("isend-irecv", "ring", "pairwise", "bruck"):
+        t = _sum3(t_shuffle(P, n_bytes, params, alg))
+        if t < best_t:
+            best, best_t = alg, t
+    return best

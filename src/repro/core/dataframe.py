@@ -1,0 +1,187 @@
+"""Distributed-memory dataframe partition: fixed-capacity columnar table.
+
+The paper (Cylon) represents a dataframe partition in Apache Arrow columnar
+format: per column a (validity bitmap, offsets, data) buffer tuple. Under XLA
+all shapes must be static, so the TPU-native adaptation (DESIGN.md §2) is a
+struct-of-arrays ``Table`` whose columns share a fixed *capacity*; rows
+``[0, nvalid)`` are live and the tail is padding. Every operator is
+capacity-bounded and carries validity through ``nvalid`` (and, transiently,
+boolean masks). This replaces Arrow's offset buffers while preserving the
+paper's row-partitioned distributed dataframe definition (paper §2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Table",
+    "from_arrays",
+    "empty",
+    "concat",
+    "compact",
+    "head",
+    "valid_mask",
+    "to_numpy",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    """One row-partition of a distributed dataframe.
+
+    columns: name -> array of shape (capacity, ...) — all share capacity.
+    nvalid:  scalar int32 — rows [0, nvalid) are live, the rest padding.
+    """
+
+    columns: dict[str, jax.Array]
+    nvalid: jax.Array
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.nvalid,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        *cols, nvalid = children
+        return cls(dict(zip(names, cols)), nvalid)
+
+    # -- metadata -----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    @property
+    def num_columns(self) -> int:
+        return len(self.columns)
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def replace(self, **updates) -> "Table":
+        cols = dict(self.columns)
+        nvalid = self.nvalid
+        for k, v in updates.items():
+            if k == "nvalid":
+                nvalid = v
+            else:
+                cols[k] = v
+        return Table(cols, nvalid)
+
+    def select_columns(self, names: Sequence[str]) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.nvalid)
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(c.shape)) * c.dtype.itemsize for c in self.columns.values())
+
+
+# -- constructors -----------------------------------------------------------
+
+def from_arrays(columns: Mapping[str, jax.Array], nvalid=None) -> Table:
+    cols = {k: jnp.asarray(v) for k, v in columns.items()}
+    caps = {v.shape[0] for v in cols.values()}
+    if len(caps) != 1:
+        raise ValueError(f"columns disagree on capacity: {caps}")
+    cap = caps.pop()
+    if nvalid is None:
+        nvalid = cap
+    return Table(cols, jnp.asarray(nvalid, jnp.int32))
+
+
+def empty(schema: Mapping[str, jnp.dtype], capacity: int) -> Table:
+    cols = {k: jnp.zeros((capacity,), dtype=d) for k, d in schema.items()}
+    return Table(cols, jnp.asarray(0, jnp.int32))
+
+
+# -- core row-level helpers ---------------------------------------------------
+
+def valid_mask(table: Table) -> jax.Array:
+    """(capacity,) bool — True for live rows."""
+    return jnp.arange(table.capacity, dtype=jnp.int32) < table.nvalid
+
+
+def compact(table: Table, keep: jax.Array, capacity: int | None = None) -> Table:
+    """Stable-move rows with ``keep & valid`` to the front; new nvalid = count.
+
+    This is the paper's compaction auxiliary operator; under static shapes it
+    is an argsort-gather (stable, so row order among kept rows is preserved).
+    """
+    keep = keep & valid_mask(table)
+    cap_out = table.capacity if capacity is None else capacity
+    # stable argsort of (not keep): kept rows (False) sort to the front.
+    order = jnp.argsort(~keep, stable=True)
+    if cap_out <= table.capacity:
+        order = order[:cap_out]
+        cols = {k: v[order] for k, v in table.columns.items()}
+    else:
+        pad = cap_out - table.capacity
+        cols = {
+            k: jnp.concatenate([v[order], jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+            for k, v in table.columns.items()
+        }
+    n = jnp.minimum(jnp.sum(keep, dtype=jnp.int32), cap_out)
+    return Table(cols, n)
+
+
+def head(table: Table, n: int) -> Table:
+    cols = {k: v[:n] for k, v in table.columns.items()}
+    return Table(cols, jnp.minimum(table.nvalid, n))
+
+
+def concat(a: Table, b: Table, capacity: int | None = None) -> Table:
+    """Concatenate live rows of two partitions (same schema). Output capacity
+    defaults to cap_a + cap_b; result is compacted (live rows first)."""
+    if set(a.columns) != set(b.columns):
+        raise ValueError("schema mismatch in concat")
+    cap_out = (a.capacity + b.capacity) if capacity is None else capacity
+    cols = {k: jnp.concatenate([a.columns[k], b.columns[k]]) for k in a.columns}
+    keep = jnp.concatenate([valid_mask(a), valid_mask(b)])
+    t = Table(cols, jnp.asarray(a.capacity + b.capacity, jnp.int32))
+    # keep already encodes validity of both sides
+    order = jnp.argsort(~keep, stable=True)[:cap_out]
+    cols = {k: v[order] for k, v in t.columns.items()}
+    n = jnp.minimum(jnp.sum(keep, dtype=jnp.int32), cap_out)
+    return Table(cols, n)
+
+
+def gather_rows(table: Table, idx: jax.Array, nvalid) -> Table:
+    cols = {k: v[idx] for k, v in table.columns.items()}
+    return Table(cols, jnp.asarray(nvalid, jnp.int32))
+
+
+def map_rows(table: Table, fn: Callable[[dict[str, jax.Array]], dict[str, jax.Array]]) -> Table:
+    """Embarrassingly-parallel map over columns (paper §5.3.1)."""
+    out = fn(table.columns)
+    return Table(dict(out), table.nvalid)
+
+
+# -- host-side helpers (tests / examples) -------------------------------------
+
+def to_numpy(table: Table) -> dict[str, np.ndarray]:
+    """Live rows only, as numpy (host). For tests and examples."""
+    n = int(table.nvalid)
+    return {k: np.asarray(v)[:n] for k, v in table.columns.items()}
+
+
+def from_numpy(data: Mapping[str, np.ndarray], capacity: int | None = None) -> Table:
+    n = len(next(iter(data.values())))
+    cap = n if capacity is None else capacity
+    cols = {}
+    for k, v in data.items():
+        v = np.asarray(v)
+        buf = np.zeros((cap,) + v.shape[1:], v.dtype)
+        buf[:n] = v[:cap]
+        cols[k] = jnp.asarray(buf)
+    return Table(cols, jnp.asarray(min(n, cap), jnp.int32))

@@ -1,0 +1,341 @@
+"""Core local operators (paper §4.1, Table 4) under static shapes.
+
+Single-partition implementations of the primitive operators that the
+distributed patterns promote: sort, hash-join (sort-based under XLA),
+groupby segment-reduction, unique, set membership. Every output is
+capacity-bounded with an explicit ``nvalid`` and, where the true output size
+can exceed capacity, an ``overflow`` counter.
+
+Design notes (DESIGN.md §7.1):
+- Join expansion uses ``jnp.repeat(..., total_repeat_length)`` — the
+  static-shape equivalent of Arrow's variable-length take.
+- Rows are matched on a 32-bit key hash and *verified on emission* against the
+  actual key columns, so hash collisions cost capacity, never correctness.
+- Multi-column keys sort lexicographically (hash, col1, col2, ...), which
+  makes equal keys adjacent for dedup/groupby adjacency logic.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dataframe import Table, compact, valid_mask
+from .partition import hash_columns
+
+__all__ = [
+    "local_sort",
+    "local_join",
+    "local_groupby",
+    "local_unique",
+    "local_anti_join",
+    "select",
+    "project",
+    "row_aggregate",
+    "column_aggregate_local",
+]
+
+_AGG_OPS = ("sum", "count", "min", "max", "mean")
+
+
+def _max_sentinel(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+def _min_sentinel(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+
+
+# -- embarrassingly-parallel primitives (paper §5.3.1) -------------------------
+
+def select(table: Table, pred) -> Table:
+    """Filter rows by a predicate over the column dict. O(n)."""
+    return compact(table, pred(table.columns))
+
+
+def project(table: Table, names: Sequence[str]) -> Table:
+    return table.select_columns(names)
+
+
+def row_aggregate(table: Table, names: Sequence[str], out: str, op: str = "sum") -> Table:
+    cols = [table.columns[n] for n in names]
+    stack = jnp.stack(cols, axis=0)
+    if op == "sum":
+        v = jnp.sum(stack, axis=0)
+    elif op == "min":
+        v = jnp.min(stack, axis=0)
+    elif op == "max":
+        v = jnp.max(stack, axis=0)
+    elif op == "mean":
+        v = jnp.mean(stack.astype(jnp.float32), axis=0)
+    else:
+        raise ValueError(op)
+    return table.replace(**{out: v})
+
+
+def column_aggregate_local(table: Table, name: str, op: str):
+    """Local leg of the Globally-Reduce pattern (paper §5.3.5)."""
+    v = table.columns[name]
+    m = valid_mask(table)
+    if op in ("sum", "mean"):
+        s = jnp.sum(jnp.where(m, v, jnp.zeros_like(v)).astype(jnp.float64 if v.dtype == jnp.float64 else jnp.float32))
+        cnt = jnp.sum(m, dtype=jnp.int32)
+        return s, cnt
+    if op == "min":
+        return jnp.min(jnp.where(m, v, _max_sentinel(v.dtype))), jnp.sum(m, dtype=jnp.int32)
+    if op == "max":
+        return jnp.max(jnp.where(m, v, _min_sentinel(v.dtype))), jnp.sum(m, dtype=jnp.int32)
+    if op == "count":
+        return jnp.sum(m, dtype=jnp.int32), jnp.sum(m, dtype=jnp.int32)
+    raise ValueError(op)
+
+
+# -- sorting -------------------------------------------------------------------
+
+def local_sort(table: Table, key_columns: Sequence[str], descending: bool = False) -> Table:
+    """O(n log n) local sort; invalid rows stay at the tail (stable)."""
+    inv = ~valid_mask(table)
+    keys = []
+    for name in reversed(key_columns):
+        k = table.columns[name]
+        if descending:
+            # order-reversing map: -x for floats, ~x for ints (exact, no
+            # INT_MIN overflow).
+            k = -k if jnp.issubdtype(k.dtype, jnp.floating) else jnp.bitwise_not(k)
+        keys.append(k)
+    keys.append(inv)  # primary: invalid rows last
+    order = jnp.lexsort(tuple(keys))
+    cols = {k: v[order] for k, v in table.columns.items()}
+    return Table(cols, table.nvalid)
+
+
+def _sorted_by_key_hash(table: Table, key_columns: Sequence[str]):
+    """Sort rows by (valid desc, key hash, key columns...). Returns
+    (sorted_table, sorted_hash, order). Invalid rows at tail with hash=MAX."""
+    h = hash_columns(table, key_columns)
+    m = valid_mask(table)
+    h = jnp.where(m, h, jnp.uint32(0xFFFFFFFF))
+    keys = [table.columns[n] for n in reversed(key_columns)] + [h, ~m]
+    order = jnp.lexsort(tuple(keys))
+    cols = {k: v[order] for k, v in table.columns.items()}
+    return Table(cols, table.nvalid), h[order], order
+
+
+def _adjacent_new_group(sorted_table: Table, key_columns: Sequence[str]) -> jax.Array:
+    """is_new[i]: row i starts a new key group (rows sorted by key)."""
+    cap = sorted_table.capacity
+    is_new = jnp.zeros((cap,), bool).at[0].set(True)
+    for name in key_columns:
+        v = sorted_table.columns[name]
+        neq = v[1:] != v[:-1]
+        is_new = is_new.at[1:].max(neq)
+    return is_new
+
+
+# -- unique (hash dedup, paper Table 4: O(n), output O(nC)) --------------------
+
+def local_unique(table: Table, key_columns: Sequence[str], capacity: int | None = None) -> Table:
+    st, _, _ = _sorted_by_key_hash(table, key_columns)
+    keep = _adjacent_new_group(st, key_columns) & valid_mask(st)
+    return compact(st, keep, capacity=capacity)
+
+
+# -- groupby (combine / reduce legs, paper §5.3.4) ------------------------------
+
+def agg_schema(aggs: Mapping[str, Sequence[str]]) -> list[tuple[str, str, str]]:
+    """[(value_col, op, out_col)] with mean decomposed into sum+count."""
+    out = []
+    for col, ops in aggs.items():
+        for op in ops:
+            if op not in _AGG_OPS:
+                raise ValueError(f"unsupported agg {op}")
+            out.append((col, op, f"{col}_{op}"))
+    return out
+
+
+def local_groupby(
+    table: Table,
+    key_columns: Sequence[str],
+    aggs: Mapping[str, Sequence[str]],
+    capacity: int | None = None,
+    merge: bool = False,
+) -> Table:
+    """Hash-groupby via sort + segment reduction. O(n log n) under XLA (the
+    paper's O(n) hash table does not map to static shapes; the extra log n is
+    a documented hardware-adaptation cost, DESIGN.md §2).
+
+    merge=False: input is raw rows; emits key cols + <col>_<op> partials
+    (mean contributes <col>_sum & <col>_count; finalization happens in the
+    distributed wrapper).
+    merge=True: input columns are partials named <col>_<op>; re-reduces with
+    the merge semantics (sum of sums, min of mins, ...).
+    """
+    cap = table.capacity
+    cap_out = cap if capacity is None else capacity
+    st, _, _ = _sorted_by_key_hash(table, key_columns)
+    m = valid_mask(st)
+    is_new = _adjacent_new_group(st, key_columns) & m
+    gid = jnp.cumsum(is_new.astype(jnp.int32)) - 1  # valid rows: [0, ngroups)
+    seg = jnp.where(m, gid, cap)  # invalid -> overflow bucket
+    nseg = cap + 1
+
+    spec = agg_schema(aggs)
+    out_cols: dict[str, jax.Array] = {}
+    # group representative row (first row of each group) for key columns
+    first_idx = jax.ops.segment_min(jnp.arange(cap, dtype=jnp.int32), seg, num_segments=nseg)[:cap]
+    first_idx = jnp.minimum(first_idx, cap - 1)
+    for name in key_columns:
+        out_cols[name] = st.columns[name][first_idx]
+
+    def seg_reduce(vals, op):
+        if op == "sum":
+            return jax.ops.segment_sum(vals, seg, num_segments=nseg)[:cap]
+        if op == "min":
+            vals = jnp.where(m, vals, _max_sentinel(vals.dtype))
+            return jax.ops.segment_min(vals, seg, num_segments=nseg)[:cap]
+        if op == "max":
+            vals = jnp.where(m, vals, _min_sentinel(vals.dtype))
+            return jax.ops.segment_max(vals, seg, num_segments=nseg)[:cap]
+        raise ValueError(op)
+
+    needed: dict[str, tuple[str, str]] = {}  # out partial name -> (src col partial, merge op)
+    for col, op, out_name in spec:
+        if op == "mean":
+            needed[f"{col}_sum"] = (f"{col}_sum" if merge else col, "sum")
+            needed[f"{col}_count"] = (f"{col}_count" if merge else col, "count")
+        elif op == "count":
+            needed[f"{col}_count"] = (f"{col}_count" if merge else col, "count")
+        else:
+            needed[out_name] = (out_name if merge else col, op)
+
+    ones = m.astype(jnp.int32)
+    for out_name, (src, op) in needed.items():
+        if op == "count":
+            if merge:
+                vals = st.columns[src]
+                out_cols[out_name] = seg_reduce(vals, "sum")
+            else:
+                out_cols[out_name] = jax.ops.segment_sum(ones, seg, num_segments=nseg)[:cap]
+        else:
+            base = st.columns[src]
+            if op == "sum" and not jnp.issubdtype(base.dtype, jnp.floating):
+                base = base  # keep integer sums exact
+            vals = jnp.where(m, base, jnp.zeros_like(base)) if op == "sum" else base
+            out_cols[out_name] = seg_reduce(vals, op)
+
+    ngroups = jnp.sum(is_new, dtype=jnp.int32)
+    out = Table(out_cols, jnp.asarray(cap, jnp.int32))
+    keep = jnp.arange(cap, dtype=jnp.int32) < ngroups
+    return compact(out, keep, capacity=cap_out)
+
+
+def finalize_groupby(table: Table, aggs: Mapping[str, Sequence[str]]) -> Table:
+    """Compute mean = sum/count and drop helper partials not requested."""
+    spec = agg_schema(aggs)
+    cols = dict(table.columns)
+    requested = set()
+    for col, op, out_name in spec:
+        if op == "mean":
+            s = cols[f"{col}_sum"]
+            c = jnp.maximum(cols[f"{col}_count"], 1)
+            cols[out_name] = s.astype(jnp.float32) / c.astype(jnp.float32)
+        requested.add(out_name)
+    # keep key columns + requested outputs
+    keys = [n for n in table.columns if not any(n == f"{c}_{o}" for c, ops in aggs.items() for o in _AGG_OPS)]
+    keep_names = set(keys) | requested
+    cols = {k: v for k, v in cols.items() if k in keep_names}
+    return Table(cols, table.nvalid)
+
+
+# -- join (sort-based hash join, paper Table 4 Sort-Join) ----------------------
+
+def local_join(
+    left: Table,
+    right: Table,
+    key_columns: Sequence[str],
+    capacity: int,
+    suffix: str = "_r",
+) -> tuple[Table, jax.Array]:
+    """Inner equi-join. Returns (result, overflow = pairs beyond capacity).
+
+    Left is sorted by key hash; each right row binary-searches its hash run;
+    pair expansion via total_repeat_length; emitted pairs verified against the
+    real key columns (collision-exact).
+    """
+    ls, lh, lorder = _sorted_by_key_hash(left, key_columns)
+    rm = valid_mask(right)
+    rh = hash_columns(right, key_columns)
+    rh = jnp.where(rm, rh, jnp.uint32(0xFFFFFFFE))  # differs from left's pad
+    lo = jnp.searchsorted(lh, rh, side="left")
+    hi = jnp.searchsorted(lh, rh, side="right")
+    counts = (hi - lo).astype(jnp.int32)
+    offs = jnp.cumsum(counts) - counts  # exclusive prefix
+    total = offs[-1] + counts[-1]
+
+    cap_r = right.capacity
+    out_pos = jnp.arange(capacity, dtype=jnp.int32)
+    out_r = jnp.repeat(jnp.arange(cap_r, dtype=jnp.int32), counts, total_repeat_length=capacity)
+    within = out_pos - offs[out_r]
+    out_l = jnp.clip(lo[out_r].astype(jnp.int32) + within, 0, left.capacity - 1)
+
+    emit = out_pos < total
+    # verify true key equality (hash-collision guard) + validity
+    lvalid = jnp.arange(left.capacity, dtype=jnp.int32) < ls.nvalid
+    for name in key_columns:
+        emit = emit & (ls.columns[name][out_l] == right.columns[name][out_r])
+    emit = emit & lvalid[out_l] & rm[out_r]
+
+    cols: dict[str, jax.Array] = {}
+    for name in key_columns:
+        cols[name] = ls.columns[name][out_l]
+    for name, v in ls.columns.items():
+        if name not in key_columns:
+            cols[name] = v[out_l]
+    for name, v in right.columns.items():
+        if name not in key_columns:
+            out_name = name if name not in cols else f"{name}{suffix}"
+            cols[out_name] = v[out_r]
+
+    res = Table(cols, jnp.asarray(capacity, jnp.int32))
+    res = compact(res, emit, capacity=capacity)
+    overflow = jnp.maximum(total - capacity, 0)
+    return res, overflow
+
+
+def local_anti_join(
+    left: Table,
+    right: Table,
+    key_columns: Sequence[str],
+    capacity: int | None = None,
+    dedup_left: bool = True,
+) -> Table:
+    """Rows of left whose key does not appear in right (set difference leg).
+
+    Exact under hash collisions: membership is established by joining the
+    deduplicated keys and scattering hit marks back to left rows.
+    """
+    lu = local_unique(left, key_columns) if dedup_left else left
+    ru = local_unique(right, key_columns)
+    ls, _, _ = _sorted_by_key_hash(lu, key_columns)
+    # Join the deduplicated keys (collision-exact thanks to emit-verify in
+    # local_join) and scatter hit marks back onto left rows by row index.
+    # Both sides are deduplicated, so the pair count is bounded by
+    # ls.capacity — no overflow possible.
+    member = jnp.zeros((ls.capacity,), bool)
+    pairs, _ = local_join(
+        Table({n: ls.columns[n] for n in key_columns} | {"__lidx": jnp.arange(ls.capacity, dtype=jnp.int32)}, ls.nvalid),
+        Table({n: ru.columns[n] for n in key_columns}, ru.nvalid),
+        key_columns,
+        capacity=ls.capacity,
+    )
+    hit_idx = pairs.columns["__lidx"]
+    hit_valid = jnp.arange(pairs.capacity, dtype=jnp.int32) < pairs.nvalid
+    member = member.at[jnp.where(hit_valid, hit_idx, ls.capacity)].set(True, mode="drop")
+    keep = valid_mask(ls) & ~member
+    return compact(ls, keep, capacity=capacity)

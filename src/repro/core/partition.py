@@ -1,0 +1,141 @@
+"""Auxiliary partition operators (paper §4.2).
+
+Hash partition, range partition, and the static-shape shuffle-buffer builder.
+These are the paper's "auxiliary local sub-operators": they decide, per live
+row, a destination partition, and lay rows out into fixed per-destination
+quota buffers so that ``jax.lax.all_to_all`` (the TPU shuffle) can move them.
+
+Dynamic Arrow buffers -> static quota buffers is the key hardware adaptation
+(DESIGN.md §2): per-destination message sizes become a fixed ``quota`` with
+explicit overflow accounting, and the quota is chosen from sampled histograms
+per the paper's runtime-data-distribution discussion (§5.4.2).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dataframe import Table, valid_mask
+
+__all__ = [
+    "hash32",
+    "hash_columns",
+    "hash_partition_ids",
+    "range_partition_ids",
+    "build_shuffle_buffers",
+    "ShuffleBuffers",
+]
+
+_M1 = jnp.uint32(0x7FEB352D)
+_M2 = jnp.uint32(0x846CA68B)
+
+
+def hash32(x: jax.Array) -> jax.Array:
+    """lowbias32 integer hash (Prospecting-for-hash-functions constants).
+
+    Works on any integer dtype; 64-bit inputs are folded hi^lo first so the
+    engine is independent of ``jax_enable_x64``.
+    """
+    if x.dtype in (jnp.int64, jnp.uint64):
+        u = x.astype(jnp.uint64)
+        x = (u ^ (u >> jnp.uint64(32))).astype(jnp.uint32)
+    elif x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint32)
+    elif jnp.issubdtype(x.dtype, jnp.floating):
+        # bitcast: equal floats hash equal; fine for hashing purposes.
+        x = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    else:
+        x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_columns(table: Table, key_columns: Sequence[str]) -> jax.Array:
+    """(capacity,) uint32 combined hash over the key columns."""
+    h = jnp.zeros((table.capacity,), jnp.uint32)
+    for name in key_columns:
+        hk = hash32(table.columns[name])
+        # boost-style hash_combine
+        h = h ^ (hk + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2))
+    return h
+
+
+def hash_partition_ids(table: Table, key_columns: Sequence[str], num_partitions: int) -> jax.Array:
+    """Destination partition per row; invalid rows get ``num_partitions``
+    (a drop bucket)."""
+    h = hash_columns(table, key_columns)
+    dest = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+    return jnp.where(valid_mask(table), dest, num_partitions)
+
+
+def range_partition_ids(
+    table: Table, key_column: str, pivots: jax.Array, num_partitions: int, descending: bool = False
+) -> jax.Array:
+    """Ordered partition ids from (P-1) pivots (sample-sort, paper §5.3.3)."""
+    keys = table.columns[key_column]
+    if descending:
+        dest = jnp.searchsorted(-pivots, -keys, side="left").astype(jnp.int32)
+    else:
+        dest = jnp.searchsorted(pivots, keys, side="right").astype(jnp.int32)
+    dest = jnp.clip(dest, 0, num_partitions - 1)
+    return jnp.where(valid_mask(table), dest, num_partitions)
+
+
+class ShuffleBuffers(dict):
+    """columns: name -> (P, quota, ...) buffers; counts: (P,) rows per dest;
+    overflow: scalar int32 rows dropped because a destination exceeded quota."""
+
+    def __init__(self, columns, counts, overflow):
+        super().__init__(columns)
+        self.columns = columns
+        self.counts = counts
+        self.overflow = overflow
+
+
+def build_shuffle_buffers(table: Table, dest: jax.Array, num_partitions: int, quota: int) -> ShuffleBuffers:
+    """Lay live rows into fixed (P, quota) per-destination buffers.
+
+    Stable within destination (preserves row order). Rows whose destination
+    bucket is full are counted in ``overflow`` and dropped — callers size
+    ``quota`` from sampled histograms (see ``repro.core.patterns``) so that
+    overflow is zero in practice, and can assert on it.
+    """
+    P, cap = num_partitions, table.capacity
+    order = jnp.argsort(dest, stable=True)  # groups rows by destination
+    sdest = dest[order]
+    # rank of each row within its destination group
+    group_start = jnp.searchsorted(sdest, sdest, side="left")
+    rank = jnp.arange(cap, dtype=jnp.int32) - group_start.astype(jnp.int32)
+    is_row = sdest < P  # drop-bucket (==P) excluded
+    keep = is_row & (rank < quota)
+    # raw per-destination counts (including overflowing rows)
+    raw = jnp.bincount(jnp.where(is_row, sdest, P), length=P + 1)[:P]
+    counts = jnp.minimum(raw, quota).astype(jnp.int32)
+    overflow = jnp.sum(raw - counts, dtype=jnp.int32)
+
+    scatter_d = jnp.where(keep, sdest, P)  # out-of-bounds rows -> dropped
+    scatter_r = jnp.where(keep, rank, quota)
+    cols = {}
+    for name, col in table.columns.items():
+        buf = jnp.zeros((P, quota) + col.shape[1:], col.dtype)
+        cols[name] = buf.at[scatter_d, scatter_r].set(col[order], mode="drop")
+    return ShuffleBuffers(cols, counts, overflow)
+
+
+def default_quota(capacity: int, num_partitions: int, safety: float = 2.0) -> int:
+    """Quota heuristic for uniformly distributed keys: E[rows/dest] x safety.
+
+    The paper's uniform-data experiments give n/P rows per destination; the
+    safety factor absorbs hash variance. Skewed data should use
+    ``patterns.sampled_quota`` instead (sample -> histogram -> quota).
+    """
+    base = -(-capacity // num_partitions)  # ceil
+    q = int(base * safety) + 8
+    return min(q, capacity)

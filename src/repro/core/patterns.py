@@ -1,0 +1,110 @@
+"""Pattern registry + host-side planner (paper §4.3, §5.4).
+
+The planner is the cost-model-driven strategy selector: given table sizes /
+sampled cardinality (host-known, outside jit), it picks the pattern variant
+the operator should execute — exactly how the paper argues runtimes should
+choose between hash-shuffle vs broadcast joins and combine-shuffle-reduce vs
+shuffle-compute groupbys. Execution stays single-path inside jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from . import cost_model
+
+__all__ = ["PATTERNS", "Plan", "plan_join", "plan_groupby", "sampled_quota", "sampled_cardinality"]
+
+# Pattern -> (operators, result semantic, communication ops) — paper Table 2.
+PATTERNS: dict[str, dict] = {
+    "embarrassingly_parallel": dict(
+        operators=("select", "project", "map", "row_aggregation"),
+        result="partitioned", comm=()),
+    "shuffle_compute": dict(
+        operators=("union", "difference", "join", "transpose"),
+        result="partitioned", comm=("shuffle",)),
+    "combine_shuffle_reduce": dict(
+        operators=("unique", "groupby"),
+        result="partitioned", comm=("shuffle",)),
+    "broadcast_compute": dict(
+        operators=("broadcast_join",),
+        result="partitioned", comm=("bcast",)),
+    "globally_reduce": dict(
+        operators=("column_aggregation", "length", "equality"),
+        result="replicated", comm=("allreduce",)),
+    "sample_shuffle_compute": dict(
+        operators=("sort",),
+        result="partitioned", comm=("gather", "bcast", "shuffle", "allreduce")),
+    "halo_exchange": dict(
+        operators=("window",),
+        result="partitioned", comm=("send_recv",)),
+    "partitioned_io": dict(
+        operators=("read", "write", "rebalance"),
+        result="partitioned", comm=("send_recv", "scatter", "gather")),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    strategy: str
+    quota: int
+    capacity: int
+    details: dict
+
+
+def sampled_quota(
+    dest_sample: np.ndarray,
+    capacity: int,
+    num_partitions: int,
+    sample_fraction: float,
+    safety: float = 1.5,
+) -> int:
+    """Quota from a sampled destination histogram (paper §5.4.2: data
+    distribution drives partitioing decisions). dest_sample: sampled
+    destination ids for a fraction of local rows."""
+    if dest_sample.size == 0:
+        from .partition import default_quota
+        return default_quota(capacity, num_partitions)
+    hist = np.bincount(dest_sample, minlength=num_partitions)
+    est_max = hist.max() / max(sample_fraction, 1e-9)
+    return int(min(capacity, max(est_max * safety, 16)))
+
+
+def sampled_cardinality(key_sample: np.ndarray) -> float:
+    """C-hat = unique/total from a host-side sample (paper §5.4.1)."""
+    if key_sample.size == 0:
+        return 1.0
+    return float(len(np.unique(key_sample))) / float(key_sample.size)
+
+
+def plan_join(
+    n_left: int,
+    n_right: int,
+    P: int,
+    capacity: int,
+    row_bytes: float = 16.0,
+    params: cost_model.CostParams = cost_model.CostParams(),
+    cardinality: float = 1.0,
+) -> Plan:
+    strategy = cost_model.choose_join_strategy(n_left, n_right, P, row_bytes, params)
+    from .partition import default_quota
+    quota = default_quota(capacity, P)
+    # expected output rows/partition ~ matches; bound by n/(P*C)
+    exp_out = (max(n_left, n_right) / max(P, 1)) / max(cardinality, 1e-9)
+    cap_out = int(min(max(2 * exp_out, capacity), 4 * capacity))
+    return Plan(strategy, quota, cap_out, dict(n_left=n_left, n_right=n_right))
+
+
+def plan_groupby(
+    cardinality: float,
+    P: int,
+    capacity: int,
+) -> Plan:
+    pre_combine = cost_model.choose_groupby_strategy(cardinality)
+    from .partition import default_quota
+    quota = default_quota(capacity, P)
+    return Plan("combine_shuffle_reduce" if pre_combine else "shuffle_compute",
+                quota, capacity, dict(cardinality=cardinality))

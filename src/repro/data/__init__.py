@@ -1,0 +1,3 @@
+from .synthetic import uniform_table, zipf_table, synthetic_token_corpus  # noqa: F401
+from .pipeline import TokenPipeline  # noqa: F401
+from .io import read_csv_dist, write_csv_dist  # noqa: F401

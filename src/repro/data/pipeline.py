@@ -1,0 +1,74 @@
+"""LM data pipeline built on the DDF engine — the paper's technique as the
+trainer's first-class data path (DESIGN.md §3).
+
+Stages (each one of the paper's patterns):
+  1. partitioned input  — synthetic corpus metadata split across workers
+  2. dedup              — Combine-Shuffle-Reduce ``unique`` on content hash
+  3. quality filter     — Embarrassingly-Parallel ``select``
+  4. length bucketing   — Sample-Shuffle-Compute ``sort_values`` by length
+  5. rebalance          — Partitioned-I/O repartition (straggler guard)
+  6. stats              — Globally-Reduce aggregations (token budget)
+
+The pipeline yields fixed-shape token batches; document token content is
+generated deterministically from (doc_id, position) so the corpus never
+needs to exist on disk — honest for a synthetic benchmark while keeping the
+DDF stages real.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import DDF, DDFContext
+from .synthetic import synthetic_token_corpus
+
+__all__ = ["TokenPipeline"]
+
+
+class TokenPipeline:
+    def __init__(self, ctx: DDFContext, n_docs: int, vocab: int, seq_len: int,
+                 batch: int, seed: int = 0, quality_threshold: float = 0.05):
+        self.ctx = ctx
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = batch
+        self.seed = seed
+
+        corpus = synthetic_token_corpus(n_docs, vocab, seed=seed)
+        ddf = DDF.from_numpy(corpus, ctx, capacity=2 * (n_docs // ctx.nworkers + 1))
+
+        # 2. dedup on content hash (combine-shuffle-reduce)
+        ddf, self.dedup_info = ddf.unique(("content_hash",))
+        # 3. quality filter (embarrassingly parallel)
+        ddf = ddf.select(lambda c: c["quality"] > quality_threshold, name="quality")
+        # 4. length bucketing (sample-shuffle-compute)
+        ddf, self.sort_info = ddf.sort_values("length")
+        # 5. rebalance (partitioned I/O)
+        ddf, self.rebalance_info = ddf.rebalance()
+        self.docs = ddf
+        # 6. global stats (globally reduce)
+        self.total_tokens = int(ddf.agg("length", "sum"))
+        self.n_docs = ddf.length()
+
+        host = ddf.to_numpy()
+        self._doc_ids = host["doc_id"]
+        self._lengths = host["length"]
+        self._rng = np.random.default_rng(seed + 1)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict[str, np.ndarray]:
+        """Pack documents into a (batch, seq_len) token block. Tokens are a
+        deterministic hash of (doc_id, pos) — reproducible across restarts."""
+        B, S = self.batch, self.seq_len
+        idx = self._rng.integers(0, len(self._doc_ids), size=B)
+        doc = self._doc_ids[idx][:, None].astype(np.uint32)
+        pos = np.arange(S, dtype=np.uint32)[None, :]
+        h = (doc * np.uint32(2654435761) + pos * np.uint32(40503)) & np.uint32(0xFFFFFFFF)
+        h ^= h >> np.uint32(16)
+        tokens = (h % np.uint32(self.vocab)).astype(np.int32)
+        length = np.minimum(self._lengths[idx], S)[:, None]
+        mask = (np.arange(S)[None, :] < length).astype(np.float32)
+        labels = np.roll(tokens, -1, axis=1)
+        return {"tokens": tokens, "labels": labels, "loss_mask": mask}

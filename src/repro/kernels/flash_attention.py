@@ -1,0 +1,131 @@
+"""Flash attention (causal GQA, sliding window, logit softcap) as a Pallas
+TPU kernel.
+
+TPU-native design (DESIGN.md §2): grid = (B*H, n_q_blocks, n_kv_blocks) with
+the kv dimension iterated sequentially (minor-most), so the online-softmax
+accumulators (m, l, acc) live in VMEM scratch across kv steps. Q/K/V blocks
+are MXU-shaped (q_block x head_dim and kv_block x head_dim, multiples of
+128); GQA is expressed through the K/V index_map (query-head -> kv-head
+division) so grouped heads never materialize broadcast K/V in HBM.
+
+Causal + sliding-window blocks outside the window are skipped with pl.when
+(compute-free on real TPU; the XLA fallback path masks instead).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, q_block, kv_block, n_kv, seq_len):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+    # block-level skip: causal (kv entirely after q) / window (entirely before)
+    live = jnp.asarray(True)
+    if causal:
+        live = live & (k_start <= q_start + q_block - 1)
+    if window is not None:
+        live = live & (k_start + kv_block - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (q_block, hd)
+        k = k_ref[0].astype(jnp.float32)            # (kv_block, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # (B, S, H, hd)
+    k: jax.Array,            # (B, S, KV, hd)
+    v: jax.Array,            # (B, S, KV, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, S, H, hd). S must divide the block sizes."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    n_q = -(-S // q_block)
+    n_kv = -(-S // kv_block)
+    assert S % q_block == 0 and S % kv_block == 0, (S, q_block, kv_block)
+
+    # flatten heads into the grid's major dim: (B*H, S, hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        q_block=q_block, kv_block=kv_block, n_kv=n_kv, seq_len=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            # GQA: query head bh -> kv head bh//G, no HBM broadcast
+            pl.BlockSpec((1, kv_block, hd), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,79 @@
+"""Hash-partition kernel: the paper's hot auxiliary operator (§4.2).
+
+Computes, per row block: the lowbias32 key hash, the destination partition
+id (hash % P), and a per-block destination histogram. The histogram is the
+quota-planning input (paper §5.4.2 — sampled data distribution drives the
+shuffle quota) and the scatter offsets come from its exclusive scan.
+
+TPU-native shape: rows are processed in (block x 1) lanes; the histogram
+uses a one-hot (block x P) matmul against ones — an MXU-friendly reduction
+instead of the GPU-style atomic-increment histogram (which has no TPU
+analogue; DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hash_partition"]
+
+_M1 = 0x7FEB352D
+_M2 = 0x846CA68B
+_GOLDEN = 0x9E3779B9
+
+
+def _kernel(keys_ref, dest_ref, hist_ref, *, num_partitions, block, n_cols):
+    keys = keys_ref[...]                      # (block, n_cols) uint32
+    h = jnp.zeros((block,), jnp.uint32)
+    for c in range(n_cols):
+        x = keys[:, c]
+        x = x ^ (x >> 16)
+        x = x * jnp.uint32(_M1)
+        x = x ^ (x >> 15)
+        x = x * jnp.uint32(_M2)
+        x = x ^ (x >> 16)
+        h = h ^ (x + jnp.uint32(_GOLDEN) + (h << 6) + (h >> 2))
+    dest = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+    dest_ref[...] = dest[:, None]
+    # one-hot histogram via compare + sum (VPU/MXU friendly)
+    pid = jax.lax.broadcasted_iota(jnp.int32, (block, num_partitions), 1)
+    onehot = (dest[:, None] == pid).astype(jnp.float32)
+    hist_ref[...] = jnp.sum(onehot, axis=0, keepdims=True).astype(jnp.int32)
+
+
+def hash_partition(
+    keys: jax.Array,       # (N, n_cols) any int dtype (bitcast to u32)
+    num_partitions: int,
+    *,
+    block: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (dest (N,) int32, hist (num_blocks, P) int32)."""
+    if keys.ndim == 1:
+        keys = keys[:, None]
+    N, n_cols = keys.shape
+    assert N % block == 0, (N, block)
+    nb = N // block
+    ku = keys.astype(jnp.uint32)
+
+    kernel = functools.partial(_kernel, num_partitions=num_partitions,
+                               block=block, n_cols=n_cols)
+    dest, hist = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, n_cols), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_partitions), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nb, num_partitions), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ku)
+    return dest[:, 0], hist

@@ -1,0 +1,82 @@
+"""jit'd wrappers + platform dispatch for the Pallas kernels.
+
+On TPU the Pallas path runs natively; everywhere else (this CPU container)
+``interpret=True`` executes the kernel body in Python for correctness, and
+the model layers default to their XLA implementations. ``force``
+overrides are for tests/benches.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import hash_partition as _hp
+from . import segment_reduce as _sr
+from . import ssd_scan as _ssd
+from . import ref
+
+__all__ = ["on_tpu", "flash_attention", "ssd_scan", "hash_partition",
+           "segment_reduce", "ref"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, q_block=128, kv_block=128, force: str | None = None):
+    """(B,S,H,hd) x (B,S,KV,hd)^2 -> (B,S,H,hd)."""
+    mode = force or ("pallas" if on_tpu() else "xla")
+    if mode == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   q_block=q_block, kv_block=kv_block)
+    if mode == "interpret":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   q_block=q_block, kv_block=kv_block,
+                                   interpret=True)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk=128, force: str | None = None):
+    mode = force or ("pallas" if on_tpu() else "xla")
+    if mode == "pallas":
+        return _ssd.ssd_scan(x, dt, A, B, C, D, chunk=chunk)
+    if mode == "interpret":
+        return _ssd.ssd_scan(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    return ref.ssd_scan_ref(x, dt, A, B, C, D, chunk=chunk)
+
+
+def hash_partition(keys, num_partitions, *, block=1024, force: str | None = None):
+    """Returns (dest (N,), hist (P,)) — per-block partials summed."""
+    mode = force or ("pallas" if on_tpu() else "xla")
+    if mode in ("pallas", "interpret"):
+        dest, hist = _hp.hash_partition(keys, num_partitions, block=block,
+                                        interpret=(mode == "interpret"))
+        return dest, jnp.sum(hist, axis=0)
+    return ref.hash_partition_ref(keys, num_partitions)
+
+
+def segment_reduce(values, seg_ids, num_segments, *, op="sum",
+                   max_segments=128, block=1024, force: str | None = None):
+    """Segment reduction over sorted seg_ids."""
+    mode = force or ("pallas" if on_tpu() else "xla")
+    if mode in ("pallas", "interpret"):
+        psum, pseg = _sr.segment_reduce_partials(
+            values, seg_ids, max_segments=max_segments, block=block, op=op,
+            interpret=(mode == "interpret"))
+        pseg = jnp.clip(pseg, 0, num_segments)  # ids past the end -> bucket
+        if op == "sum":
+            out = jax.ops.segment_sum(psum, pseg, num_segments=num_segments + 1)
+        elif op == "max":
+            out = jax.ops.segment_max(psum, pseg, num_segments=num_segments + 1)
+        else:
+            out = jax.ops.segment_min(psum, pseg, num_segments=num_segments + 1)
+        return out[:num_segments]
+    return ref.segment_reduce_ref(values, seg_ids, num_segments, op=op)

@@ -1,0 +1,85 @@
+"""Segment-reduce kernel: the combine leg of Combine-Shuffle-Reduce (§5.3.4).
+
+Input: values sorted by segment id (the groupby sort order) + the segment
+ids. Per row block, the kernel reduces rows into at most ``max_segments``
+block-local partials using a one-hot (block x max_segments) matmul — the
+MXU-native replacement for scatter-add (TPU has no atomics; DESIGN.md §2).
+Cross-block merging of partials (cheap: nb x max_segments rows) stays in
+jnp (ops.segment_sum), mirroring the paper's combine -> shuffle -> reduce
+split where the combine output is small (O(n*C)).
+
+Precondition: every block spans <= max_segments distinct segments (callers
+size max_segments from the sampled cardinality, paper §5.4.1; ops.py
+verifies and falls back to the jnp path otherwise).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_reduce_partials"]
+
+
+def _kernel(vals_ref, segs_ref, psum_ref, pseg_ref, *, block, width, max_segments, op):
+    vals = vals_ref[...].astype(jnp.float32)   # (block, width)
+    segs = segs_ref[...][:, 0]                 # (block,) int32, sorted
+    base = segs[0]
+    local = segs - base                        # block-local dense ids
+    local = jnp.clip(local, 0, max_segments - 1)
+    sid = jax.lax.broadcasted_iota(jnp.int32, (block, max_segments), 1)
+    onehot = (local[:, None] == sid).astype(jnp.float32)  # (block, maxseg)
+    if op == "sum":
+        out = jax.lax.dot_general(onehot, vals, (((0,), (0,)), ((), ())))
+    elif op == "max":
+        big = jnp.where(onehot[..., None] > 0, vals[:, None, :], -jnp.inf)
+        out = jnp.max(big, axis=0)
+    elif op == "min":
+        big = jnp.where(onehot[..., None] > 0, vals[:, None, :], jnp.inf)
+        out = jnp.min(big, axis=0)
+    else:
+        raise ValueError(op)
+    psum_ref[...] = out                         # (max_segments, width)
+    pseg_ref[...] = (base + jax.lax.iota(jnp.int32, max_segments))[:, None]
+
+
+def segment_reduce_partials(
+    values: jax.Array,     # (N, width) sorted by segment
+    seg_ids: jax.Array,    # (N,) int32 non-decreasing
+    *,
+    max_segments: int = 128,
+    block: int = 1024,
+    op: str = "sum",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (partials (nb*max_segments, width) f32,
+    partial_seg_ids (nb*max_segments,) int32). Partials for segment ids the
+    block does not contain are identity-valued and their ids may collide
+    with real ids only on identity values — safe for sum/max/min merging."""
+    N, width = values.shape
+    assert N % block == 0, (N, block)
+    nb = N // block
+
+    kernel = functools.partial(_kernel, block=block, width=width,
+                               max_segments=max_segments, op=op)
+    psum, pseg = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block, width), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((max_segments, width), lambda i: (i, 0)),
+            pl.BlockSpec((max_segments, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * max_segments, width), jnp.float32),
+            jax.ShapeDtypeStruct((nb * max_segments, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, seg_ids[:, None].astype(jnp.int32))
+    return psum, pseg[:, 0]

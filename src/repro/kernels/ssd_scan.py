@@ -1,0 +1,112 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+Grid = (B*H, n_chunks) with chunks iterated sequentially (minor-most), so
+the recurrent (d_state x d_head) SSM state lives in VMEM scratch across
+chunk steps — the inter-chunk recurrence happens *inside* the kernel, not
+as a host-level scan. Per chunk the intra-chunk work is three MXU matmuls
+(C@B^T masked by the decay kernel, the score@x product, and the state
+update B^T@x), exactly the SSD block decomposition (arXiv:2405.21060).
+
+This is the hardware adaptation of the paper's "local core operator +
+carry" structure: quadratic-in-chunk compute is MXU-shaped; the carried
+state is the halo (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_scr, *,
+            chunk, dh, ds):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)      # (chunk, dh)
+    dt = dt_ref[0].astype(jnp.float32)    # (chunk, 1)
+    A = a_ref[0, 0]                       # scalar (negative decay rate)
+    Bp = b_ref[0].astype(jnp.float32)     # (chunk, ds)
+    Cp = c_ref[0].astype(jnp.float32)     # (chunk, ds)
+    D = d_ref[0, 0]
+
+    a = A * dt[:, 0]                      # (chunk,) log-decay per step
+    acum = jnp.cumsum(a)                  # inclusive
+    # decay kernel L[i,j] = exp(acum[i] - acum[j] + a[j])? — careful:
+    # L[i,j] = exp(sum_{j<k<=i} a[k]) = exp(acum[i] - acum[j]) for j <= i
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(acum[:, None] - acum[None, :]), 0.0)
+
+    xb = x * dt                           # discretized input (chunk, dh)
+    scores = jax.lax.dot_general(Cp, Bp, (((1,), (1,)), ((), ()))) * L
+    y = jax.lax.dot(scores, xb)           # intra-chunk (chunk, dh)
+
+    # inter-chunk: contribution of the incoming state
+    state = state_scr[...]                # (ds, dh)
+    y += jax.lax.dot(Cp * jnp.exp(acum)[:, None], state)
+
+    # state update: state' = exp(sum a) * state + B^T diag(exp(acum[-1]-acum)) xb
+    decay_tail = jnp.exp(acum[chunk - 1] - acum)          # (chunk,)
+    state_scr[...] = (jnp.exp(acum[chunk - 1]) * state
+                      + jax.lax.dot_general(Bp * decay_tail[:, None], xb,
+                                            (((0,), (0,)), ((), ()))))
+    y_ref[0] = (y + D * x).astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,    # (B, L, H, dh)
+    dt: jax.Array,   # (B, L, H) positive
+    A: jax.Array,    # (H,) negative
+    B: jax.Array,    # (B, L, G, ds); G must divide H
+    C: jax.Array,    # (B, L, G, ds)
+    D: jax.Array,    # (H,)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (B, L, H, dh) = SSD(x) + D*x, state carried inside kernel."""
+    b, L, H, dh = x.shape
+    G, ds = B.shape[2], B.shape[3]
+    rep = H // G
+    nc = L // chunk
+    assert L % chunk == 0, (L, chunk)
+
+    xf = x.transpose(0, 2, 1, 3).reshape(b * H, L, dh)
+    dtf = dt.transpose(0, 2, 1).reshape(b * H, L, 1)
+    af = jnp.tile(A, b).reshape(b * H, 1)
+    df = jnp.tile(D, b).reshape(b * H, 1)
+    # B/C indexed per (batch, group): bh -> (bh//H)*G + (bh%H)//rep
+    Bf = B.transpose(0, 2, 1, 3).reshape(b * G, L, ds)
+    Cf = C.transpose(0, 2, 1, 3).reshape(b * G, L, ds)
+
+    def bc_map(bh, ci, H=H, G=G, rep=rep):
+        return ((bh // H) * G + (bh % H) // rep, ci, 0)
+
+    kernel = functools.partial(_kernel, chunk=chunk, dh=dh, ds=ds)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, chunk, ds), bc_map),
+            pl.BlockSpec((1, chunk, ds), bc_map),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * H, L, dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ds, dh), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, Bf, Cf, df)
+    return out.reshape(b, H, L, dh).transpose(0, 2, 1, 3)

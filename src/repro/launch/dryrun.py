@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (task spec deliverable (e)).
+
+For every (architecture x input shape x mesh) cell:
+  jax.jit(step, in_shardings=..., out_shardings=...)
+      .lower(**input_specs).compile()
+and record memory_analysis() + cost_analysis() + the collective-byte
+census parsed from the compiled HLO (feeding EXPERIMENTS.md §Dry-run and
+§Roofline). Params/caches enter as ShapeDtypeStructs — nothing is allocated.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  (writes JSON per cell under experiments/dryrun/)
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, canonical
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_applicable, input_specs
+from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms
+from repro.launch import hlo_cost
+from repro.models.model_zoo import build_model
+from repro import sharding as shard_mod
+from repro.train.optimizer import adamw_init
+from repro.train.train_step import TrainHParams, make_train_step
+from repro.serve.serve_step import make_serve_step, make_prefill
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+CACHE_PAD = 512  # decode cache length padding (divisibility over seq shards)
+
+# Per-arch gradient-accumulation microbatches for train_4k (production
+# memory configuration: live remat carries scale with B/microbatches).
+# §Perf iteration 7: FSDP weight-gather traffic scales with microbatch
+# count (gathers per layer per pass per microbatch). These are the minimum
+# counts that keep every cell under 16GB/device (gemma2 at mb=1 hits 17.5GB).
+MICROBATCHES = {
+    "deepseek-67b": 2,
+    "gemma2-9b": 2,
+    "llava-next-mistral-7b": 1,
+    "zamba2-1.2b": 1,
+    "stablelm-3b": 1,
+    "mamba2-1.3b": 1,
+    "granite-moe-3b-a800m": 1,
+    "granite-moe-1b-a400m": 1,
+    "olmo-1b": 1,
+    "whisper-tiny": 1,
+}
+
+
+def _shape_tree(tree):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def _bf16_params(specs):
+    """Serving keeps bf16 weights (production inference memory layout)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        specs)
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool, overrides: dict | None = None):
+    """Returns (jitted_fn, abstract_args, mesh) for one dry-run cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nshards = int(np.prod(list(mesh.shape.values())))
+    plan = shard_mod.make_plan(mesh, mode="serve" if cell.kind == "decode" else "train")
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_groups=nshards)
+    if cell.kind == "decode" and cfg.family in ("dense", "moe", "vlm"):
+        # production serving default: int8 KV (2x cache memory/bandwidth);
+        # accuracy validated in tests/test_serve.py
+        cfg = dataclasses.replace(cfg, kv_quant_decode=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    batch_sh = shard_mod.batch_shardings(specs, plan)
+
+    if cell.kind == "train":
+        pspecs = model.param_specs()
+        state_specs = {"params": pspecs, "opt": jax.eval_shape(adamw_init, pspecs)}
+        state_sh = {
+            "params": shard_mod.param_shardings(pspecs, plan),
+            "opt": {"mu": shard_mod.param_shardings(state_specs["opt"]["mu"], plan),
+                    "nu": shard_mod.param_shardings(state_specs["opt"]["nu"], plan),
+                    "step": plan.ns()},
+        }
+        hp = TrainHParams(microbatches=MICROBATCHES.get(cfg.name, 1))
+        step = make_train_step(model, hp, plan=plan)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+        args = (state_specs, specs)
+    elif cell.kind == "prefill":
+        pspecs = _bf16_params(model.param_specs())
+        psh = shard_mod.param_shardings(pspecs, plan)
+        prefill = make_prefill(model, plan=plan)
+        # prefill consumes tokens + builds a fresh state of cell length
+        st_specs = model.decode_state_specs(cell.global_batch, cell.seq_len + CACHE_PAD)
+        st_sh = shard_mod.decode_state_shardings(st_specs, plan, long_context=False)
+        fn = jax.jit(prefill, in_shardings=(psh, st_sh, batch_sh),
+                     out_shardings=None, donate_argnums=(1,))
+        args = (pspecs, st_specs, specs)
+    else:  # decode
+        pspecs = _bf16_params(model.param_specs())
+        psh = shard_mod.param_shardings(pspecs, plan)
+        long_ctx = cell.global_batch == 1
+        st_specs = model.decode_state_specs(cell.global_batch, cell.seq_len + CACHE_PAD)
+        st_sh = shard_mod.decode_state_shardings(st_specs, plan, long_context=long_ctx)
+        step = make_serve_step(model, plan=plan)
+        fn = jax.jit(step, in_shardings=(psh, st_sh, batch_sh),
+                     out_shardings=(None, st_sh), donate_argnums=(1,))
+        args = (pspecs, st_specs, specs)
+
+    return fn, args, mesh, cfg
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
+             verbose: bool = True, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    cfg0 = get_config(arch)
+    ok, reason = cell_applicable(cfg0, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": cfg0.name, "shape": shape, "mesh": mesh_name, "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: SKIP ({reason})")
+        if save:
+            _save(rec)
+        return rec
+
+    t0 = time.time()
+    try:
+        fn, args, mesh, cfg = build_cell(arch, shape, multi_pod, overrides)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)  # loop-unscaled (reference)
+            walked = hlo_cost.analyze(hlo)         # trip-count-scaled
+
+        nchips = int(np.prod(list(mesh.shape.values())))
+        mem_dict = {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+                                + getattr(mem, "argument_size_in_bytes", 0)
+                                + getattr(mem, "output_size_in_bytes", 0)
+                                - getattr(mem, "alias_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+        xla_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+        flops = walked.flops
+        bytes_accessed = walked.bytes
+        coll_scaled = {"per_op": walked.collective_counts,
+                       "total_bytes": walked.collective_bytes_tpu,
+                       "total_bytes_raw_cpu": walked.collective_bytes,
+                       "total_count": sum(v["count"] for v in walked.collective_counts.values())}
+        roof = roofline_terms(cfg, SHAPES[shape], flops=flops,
+                              bytes_accessed=bytes_accessed,
+                              collective=coll_scaled, n_chips=nchips)
+        rec.update(
+            status="ok",
+            n_devices=nchips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem_dict,
+            flops=flops,
+            xla_cost_analysis_flops=xla_flops,
+            bytes_accessed=bytes_accessed,
+            collectives=coll_scaled,
+            collectives_unscaled=coll,
+            roofline=roof,
+        )
+        if verbose:
+            hbm = mem_dict["bytes_per_device"] / 1e9
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK  "
+                  f"mem/dev={hbm:.2f}GB  flops={flops:.3e}  "
+                  f"coll={coll['total_bytes']:.3e}B  "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+    except Exception as e:  # noqa: BLE001 — report per-cell failures
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: FAIL {type(e).__name__}: {e}")
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    name = f"{canonical(rec['arch'])}__{rec['shape']}__{rec['mesh'].replace('x','_')}{tag}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        fails = 0
+        for arch in ARCHS:
+            for shape in SHAPES:
+                meshes = [False, True]
+                if args.single_pod_only:
+                    meshes = [False]
+                if args.multi_pod_only:
+                    meshes = [True]
+                for mp in meshes:
+                    rec = run_cell(arch, shape, mp)
+                    fails += rec["status"] == "error"
+        sys.exit(1 if fails else 0)
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    sys.exit(1 if rec["status"] == "error" else 0)
+
+
+if __name__ == "__main__":
+    main()

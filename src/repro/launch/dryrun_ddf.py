@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Dry-run of the paper's flagship workload: distributed hash-shuffle JOIN
+of two uniformly-random two-int32-column tables (paper §6: 90% cardinality,
+25M rows/worker weak-scaling point) on the production mesh, all mesh axes
+carrying row partitions (P=256 single-pod / P=512 two-pod).
+
+Records the same roofline terms as the LM cells PLUS the Hockney cost-model
+prediction for the shuffle stage — the at-scale validation of the paper's
+§5 model against the compiled collective bytes.
+
+Usage: python -m repro.launch.dryrun_ddf [--rows-per-worker 25000000] [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm.communicator import make_communicator
+from repro.core.cost_model import CostParams, t_shuffle
+from repro.core.dataframe import Table
+from repro.core.operators import dist_join_shuffle
+from repro.core.partition import default_quota
+from repro.launch import hlo_cost
+from repro.launch.dryrun import OUT_DIR, _save
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HW
+
+
+def build_join(rows_per_worker: int, multi_pod: bool, quota: int | None = None,
+               capacity_factor: float = 2.0):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh.axis_names                     # every axis carries partitions
+    P = int(np.prod([mesh.shape[a] for a in axes]))
+    cap = int(rows_per_worker * capacity_factor)
+    quota = quota or default_quota(cap, P)
+    cap_out = 2 * cap
+    spec = jax.sharding.PartitionSpec(axes)
+    comm = make_communicator(axes if len(axes) > 1 else axes[0])
+
+    def join_step(lk, lv, rk, rv, ln, rn):
+        left = Table({"k": lk, "v": lv}, ln.reshape(()))
+        right = Table({"k": rk, "w": rv}, rn.reshape(()))
+        out, info = dist_join_shuffle(comm, left, right, ("k",), quota, cap_out)
+        # summary outputs keep the lowering honest but small
+        return out.nvalid.reshape(1), jax.tree.map(lambda x: jnp.asarray(x).reshape(1), info)
+
+    sm = jax.shard_map(join_step, mesh=mesh,
+                       in_specs=(spec,) * 6, out_specs=spec, check_vma=False)
+    col = jax.ShapeDtypeStruct((P * cap,), jnp.int32)
+    cnt = jax.ShapeDtypeStruct((P,), jnp.int32)
+    args = (col, col, col, col, cnt, cnt)
+    return jax.jit(sm), args, mesh, P, cap, quota
+
+
+def run(rows_per_worker: int, multi_pod: bool, tag: str = "", quota: int | None = None,
+        capacity_factor: float = 2.0, save: bool = True, verbose: bool = True) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": "cylon-join", "shape": f"weak_{rows_per_worker // 1_000_000}M",
+           "mesh": mesh_name, "tag": tag}
+    t0 = time.time()
+    fn, args, mesh, P, cap, quota = build_join(rows_per_worker, multi_pod, quota, capacity_factor)
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        walked = hlo_cost.analyze(compiled.as_text())
+    bytes_dev = (getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0)
+                 - getattr(mem, "alias_size_in_bytes", 0))
+
+    # Hockney prediction for the two shuffles (bytes per worker):
+    n_bytes = rows_per_worker * 8.0  # 2 x int32 per row
+    params = CostParams()
+    pred = 2 * sum(t_shuffle(P, n_bytes, params))
+    t_coll = walked.collective_bytes_tpu / HW["ici_bw"]
+    rec.update(
+        status="ok", n_devices=P, quota=quota,
+        rows_per_worker=rows_per_worker,
+        memory={"bytes_per_device": bytes_dev,
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0)},
+        flops=walked.flops,
+        bytes_accessed=walked.bytes,
+        collectives={"per_op": walked.collective_counts,
+                     "total_bytes": walked.collective_bytes_tpu,
+                     "total_bytes_raw_cpu": walked.collective_bytes},
+        roofline={
+            "t_compute_s": walked.flops / HW["peak_flops"],
+            "t_memory_s": walked.bytes / HW["hbm_bw"],
+            "t_collective_s": t_coll,
+            "dominant": "collective" if t_coll > walked.bytes / HW["hbm_bw"] else "memory",
+            "hockney_predicted_shuffle_s": pred,
+            "model_flops_total": 0.0,
+            "model_flops_per_chip": 0.0,
+            "useful_flops_ratio": 0.0,
+            "roofline_fraction": min(pred / t_coll, t_coll / pred) if t_coll > 0 else 0.0,
+        },
+        compile_s=round(time.time() - t0, 1),
+    )
+    if verbose:
+        print(f"[dryrun-ddf] join x {mesh_name} P={P}: mem/dev={bytes_dev / 1e9:.2f}GB "
+              f"coll={walked.collective_bytes:.3e}B t_coll={t_coll * 1e3:.1f}ms "
+              f"hockney_shuffle={pred * 1e3:.1f}ms")
+    if save:
+        _save(rec)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows-per-worker", type=int, default=25_000_000)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quota", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=2.0)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    run(args.rows_per_worker, args.multi_pod, quota=args.quota,
+        capacity_factor=args.capacity_factor, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

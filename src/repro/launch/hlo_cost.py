@@ -1,0 +1,337 @@
+"""HLO cost analyzer with while-loop trip-count scaling.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-over-layers / microbatch-accumulation module under-reports FLOPs,
+bytes, and collective traffic by the trip count (16-95x here). This walks
+the optimized HLO text instead:
+
+- per computation: dot/convolution FLOPs from operand/result shapes,
+  elementwise-ish byte traffic from instruction results, collective bytes
+  from result shapes of all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute;
+- ``while`` ops multiply their body+condition cost by the parsed trip count
+  (jax scans lower to `compare(counter, constant N, LT)` conditions);
+- ``fusion``/``call``/``conditional`` recurse into called computations
+  (fusion counts one result write + operand reads, matching the
+  roofline convention that fused elementwise traffic is one pass).
+
+Validated against analytic 6ND model FLOPs in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+__all__ = ["analyze", "Cost"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0            # raw, as compiled (CPU backend)
+    collective_bytes_tpu: float = 0.0        # dtype-projected (see analyze())
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        self.collective_bytes_tpu += o.collective_bytes_tpu
+        for k, v in o.collective_counts.items():
+            d = self.collective_counts.setdefault(k, {"count": 0, "bytes": 0.0, "bytes_tpu": 0.0})
+            d["count"] += v["count"]
+            d["bytes"] += v["bytes"]
+            d["bytes_tpu"] += v.get("bytes_tpu", v["bytes"])
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.collective_bytes * f,
+                    self.collective_bytes_tpu * f,
+                    {k: {"count": v["count"] * f, "bytes": v["bytes"] * f,
+                         "bytes_tpu": v.get("bytes_tpu", v["bytes"]) * f}
+                     for k, v in self.collective_counts.items()})
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list
+    line: str
+
+
+_SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_dims(shape: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_TOK.findall(shape):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape: str) -> float:
+    total = 0
+    for dt, dims in _shape_dims(shape):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return float(total)
+
+
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\((?:[^()]|\([^()]*\))*\)|[\w.\-]+\[[\d,]*\](?:\{[\d,]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+
+def parse_module(hlo: str) -> tuple[dict[str, list[Instr]], str]:
+    comps: dict[str, list[Instr]] = {}
+    cur = None
+    entry = None
+    for line in hlo.splitlines():
+        # computation header: column-0 line "name (params) -> ret {"
+        # (params may contain nested tuple parens, so match loosely)
+        if line and not line[0].isspace() and line.rstrip().endswith("{") and " -> " in line:
+            head = line.lstrip()
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].lstrip()
+            name = head.split()[0].lstrip("%")
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, shape, op, rest = mi.groups()
+            operands = re.findall(r"%([\w.\-]+)", rest.split(" calls=")[0].split("condition=")[0])
+            comps[cur].append(Instr(name, shape, op, operands, line))
+    if entry is None:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _called(line: str, key: str) -> str | None:
+    m = re.search(rf"{key}=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _called_list(line: str, key: str) -> list[str]:
+    m = re.search(rf"{key}=\{{([^}}]*)\}}", line)
+    if not m:
+        return []
+    return [x.strip().lstrip("%") for x in m.group(1).split(",") if x.strip()]
+
+
+def _int_const(line: str) -> int | None:
+    m = re.search(r"constant\((\d+)\)", line)
+    return int(m.group(1)) if m else None
+
+
+def _resolve_compare(ins: Instr, local_consts: dict, arg_consts: dict) -> float | None:
+    m = re.search(r"direction=(\w+)", ins.line)
+    d = m.group(1) if m else "LT"
+    for opnd in ins.operands:
+        n = local_consts.get(opnd)
+        if n is None and opnd in arg_consts:
+            n = arg_consts[opnd]
+        if n is not None:
+            if d in ("LE", "GE"):
+                return float(max(n + 1, 1))
+            return float(max(n, 1))
+    return None
+
+
+def _trip_count(comps: dict, cond_name: str) -> float:
+    """jax scan conditions: compare(counter, constant(N), LT) -> N trips.
+    The compare may be fused; follow one level of fusion with positional
+    parameter -> caller-operand constant mapping."""
+    instrs = comps.get(cond_name, [])
+    consts = {i.name: _int_const(i.line) for i in instrs if _int_const(i.line) is not None}
+    for ins in instrs:
+        if ins.op == "compare":
+            v = _resolve_compare(ins, consts, {})
+            if v is not None:
+                return v
+    for ins in instrs:
+        if ins.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if not m:
+                continue
+            cinstrs = comps.get(m.group(1), [])
+            # map called params -> caller operand constants
+            param_names = {}
+            for ci in cinstrs:
+                pm = re.search(r"parameter\((\d+)\)", ci.line)
+                if pm:
+                    idx = int(pm.group(1))
+                    if idx < len(ins.operands) and ins.operands[idx] in consts:
+                        param_names[ci.name] = consts[ins.operands[idx]]
+            clocal = {ci.name: _int_const(ci.line) for ci in cinstrs
+                      if _int_const(ci.line) is not None}
+            for ci in cinstrs:
+                if ci.op == "compare":
+                    v = _resolve_compare(ci, clocal, param_names)
+                    if v is not None:
+                        return v
+    return 1.0
+
+
+def _dot_flops(ins: Instr, symtab: dict[str, str]) -> float:
+    out_elems = 1
+    dims_list = _shape_dims(ins.shape)
+    if dims_list:
+        for d in dims_list[0][1]:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contract = 1
+    if m and ins.operands:
+        lhs_shape = symtab.get(ins.operands[0])
+        if lhs_shape:
+            ldims = _shape_dims(lhs_shape)
+            if ldims:
+                dims = ldims[0][1]
+                for i in [int(x) for x in m.group(1).split(",") if x]:
+                    if i < len(dims):
+                        contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _is_widened_bf16(ins: Instr, instr_map: dict, comps: dict, hops: int = 4) -> bool:
+    """True if this (f32) value is transitively a convert/fusion of a bf16
+    value — the XLA-CPU float-normalization artifact. TPU keeps these ops in
+    bf16, so collectives over such values are projected at half width
+    (EXPERIMENTS.md §Dry-run notes)."""
+    if "f32" not in ins.shape:
+        return False
+    cur = ins
+    for _ in range(hops):
+        if not cur.operands:
+            return False
+        src = instr_map.get(cur.operands[0])
+        if src is None:
+            return False
+        if "bf16" in src.shape:
+            return True
+        if src.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", src.line)
+            if m and m.group(1) in comps:
+                # any bf16 parameter feeding the fusion?
+                if any("bf16" in i.shape for i in comps[m.group(1)] if i.op == "parameter"):
+                    return True
+        if src.op not in ("convert", "copy", "bitcast", "get-tuple-element",
+                          "fusion", "transpose", "reshape"):
+            return False
+        cur = src
+    return False
+
+
+def analyze(hlo: str) -> Cost:
+    comps, entry = parse_module(hlo)
+
+    symtabs: dict[str, dict[str, str]] = {
+        cname: {i.name: i.shape for i in instrs} for cname, instrs in comps.items()
+    }
+    instr_maps: dict[str, dict[str, Instr]] = {
+        cname: {i.name: i for i in instrs} for cname, instrs in comps.items()
+    }
+
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(cname: str, depth: int = 0) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        if depth > 64 or cname not in comps:
+            return Cost()
+        total = Cost()
+        symtab = symtabs[cname]
+        for ins in comps[cname]:
+            op = ins.op
+            if op == "while":
+                body = _called(ins.line, "body")
+                cond = _called(ins.line, "condition")
+                trips = _trip_count(comps, cond)
+                inner = Cost()
+                if body:
+                    inner += comp_cost(body, depth + 1)
+                if cond:
+                    inner += comp_cost(cond, depth + 1)
+                total += inner.scaled(trips)
+            elif op == "fusion":
+                called = _called(ins.line, "calls")
+                if called:
+                    inner = comp_cost(called, depth + 1)
+                    # fused elementwise internals don't touch HBM: keep inner
+                    # flops/collectives, replace traffic with the fusion's
+                    # boundary (result write + operand reads)
+                    reads = sum(_shape_bytes(symtab.get(o, "")) for o in ins.operands)
+                    total += Cost(flops=inner.flops,
+                                  bytes=_shape_bytes(ins.shape) + reads,
+                                  collective_bytes=inner.collective_bytes,
+                                  collective_counts=inner.collective_counts)
+                else:
+                    total += Cost(bytes=_shape_bytes(ins.shape))
+            elif op in ("call", "custom-call", "async-start"):
+                called = _called(ins.line, "calls") or _called(ins.line, "to_apply")
+                if called:
+                    total += comp_cost(called, depth + 1)
+            elif op == "conditional":
+                branches = _called_list(ins.line, "branch_computations")
+                if not branches:
+                    tb = _called(ins.line, "true_computation")
+                    fb = _called(ins.line, "false_computation")
+                    branches = [b for b in (tb, fb) if b]
+                if branches:
+                    costs = [comp_cost(b, depth + 1) for b in branches]
+                    total += max(costs, key=lambda c: c.flops + c.bytes)
+            elif op in ("dot", "dot-general"):
+                f = _dot_flops(ins, symtab)
+                total += Cost(flops=f, bytes=_shape_bytes(ins.shape))
+            elif op == "convolution":
+                # approximate: 2 * out_elems * kernel_elems
+                out_b = _shape_bytes(ins.shape)
+                kshape = symtab.get(ins.operands[1]) if len(ins.operands) > 1 else None
+                kelems = 1
+                if kshape:
+                    for dt, dims in _shape_dims(kshape):
+                        for d in dims:
+                            kelems *= d
+                dims_list = _shape_dims(ins.shape)
+                out_elems = 1
+                if dims_list:
+                    for d in dims_list[0][1]:
+                        out_elems *= d
+                total += Cost(flops=2.0 * out_elems * kelems, bytes=out_b)
+            else:
+                base = op.replace("-start", "")
+                if base in _COLLECTIVES and not op.endswith("-done"):
+                    b = _shape_bytes(ins.shape)
+                    bt = b / 2 if _is_widened_bf16(ins, instr_maps[cname], comps) else b
+                    total += Cost(collective_bytes=b, collective_bytes_tpu=bt,
+                                  collective_counts={base: {"count": 1, "bytes": b,
+                                                            "bytes_tpu": bt}})
+                elif op not in ("parameter", "constant", "get-tuple-element",
+                                "tuple", "bitcast", "copy-start", "copy-done"):
+                    # elementwise / reduce / dus etc: count result write
+                    total += Cost(bytes=_shape_bytes(ins.shape))
+        memo[cname] = total
+        return total
+
+    return comp_cost(entry)

@@ -1,0 +1,31 @@
+"""Production mesh construction (task spec: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (TPU v5e pod); 2x16x16 = 512 across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(axes: tuple[str, ...] = ("data",)):
+    """All locally visible devices on the given axes (CPU tests/benches)."""
+    n = len(jax.devices())
+    if len(axes) == 1:
+        return jax.make_mesh((n,), axes)
+    assert len(axes) == 2
+    import math
+    a = int(math.sqrt(n))
+    while n % a:
+        a -= 1
+    return jax.make_mesh((a, n // a), axes)

@@ -1,0 +1,119 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable (g)).
+
+Three terms per (arch x shape x mesh), TPU v5e constants from the task spec:
+
+  compute    = HLO_FLOPs        / (chips x 197e12 FLOP/s)
+  memory     = HLO_bytes        / (chips x 819e9  B/s)
+  collective = collective_bytes / (chips x 50e9   B/s per ICI link)
+
+cost_analysis() reports per-device FLOPs/bytes for the SPMD module, so the
+per-chip time is flops / peak directly; we normalize both conventions by
+recording chips alongside. collective_bytes is parsed from the compiled HLO:
+the sum of operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (task spec formula).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Mapping
+
+import numpy as np
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "HW"]
+
+HW = {
+    "peak_flops": 197e12,     # bf16 / chip
+    "hbm_bw": 819e9,          # B/s / chip
+    "ici_bw": 50e9,           # B/s / link
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"((?:\([^)]*\)|[\w\[\],{}\s/]+?))\s*"           # result shape(s)
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+                "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Census of collective ops: per-kind {count, bytes} + total.
+
+    Uses the *result* shapes on the op line (for these collectives result
+    bytes ~ operand bytes moved per device; -start/-done pairs counted once
+    via -start and bare forms counted directly)."""
+    per: dict[str, dict] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo):
+        shapes, kind = m.group(1), m.group(2)
+        line = hlo[m.start(): hlo.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            continue  # counted at -start
+        b = _shape_bytes(shapes)
+        d = per.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    total = sum(d["bytes"] for d in per.values())
+    return {"per_op": per, "total_bytes": float(total),
+            "total_count": sum(d["count"] for d in per.values())}
+
+
+def model_flops(cfg, cell) -> float:
+    """6*N*D with N = active params (excluding embeddings' lookup side) and
+    D = trained tokens. For decode cells D = global_batch (one token each)."""
+    n_active = cfg.num_active_params()
+    if cell.kind == "train":
+        d_tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * d_tokens
+    if cell.kind == "prefill":
+        d_tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * d_tokens  # forward only
+    return 2.0 * n_active * cell.global_batch  # decode: fwd, 1 token/seq
+
+
+def roofline_terms(cfg, cell, *, flops: float, bytes_accessed: float,
+                   collective: Mapping, n_chips: int) -> dict:
+    """cost_analysis is per-device for SPMD modules; collective bytes parsed
+    from HLO are also per-device."""
+    t_compute = flops / HW["peak_flops"]
+    t_memory = bytes_accessed / HW["hbm_bw"]
+    t_coll = float(collective["total_bytes"]) / HW["ici_bw"]
+    mf = model_flops(cfg, cell)
+    mf_per_chip = mf / n_chips
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1])[0]
+    useful_ratio = mf_per_chip / flops if flops else 0.0
+    # roofline fraction: useful-model-compute time over the dominating term
+    t_dom = max(t_compute, t_memory, t_coll)
+    t_model = mf_per_chip / HW["peak_flops"]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": (t_model / t_dom) if t_dom > 0 else 0.0,
+    }

@@ -1,0 +1,70 @@
+"""Assigned input-shape sets and ShapeDtypeStruct input specs (dry-run step 2).
+
+LM transformer shapes (task spec):
+  train_4k     seq 4096,    global_batch 256   -> train_step
+  prefill_32k  seq 32768,   global_batch 32    -> prefill forward
+  decode_32k   seq 32768,   global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288,  global_batch 1     -> serve_step; sub-quadratic
+                                                  archs only (DESIGN.md §5)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCell", "input_specs", "cell_applicable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (skip documented in DESIGN.md §5)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+    shardable, no device allocation."""
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if cell.kind in ("train", "prefill"):
+        S_text = S
+        specs: dict = {}
+        if cfg.family == "vlm" and cfg.n_patches:
+            S_text = S - cfg.n_patches
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            specs["enc_frames"] = jax.ShapeDtypeStruct((B, cfg.enc_positions, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S_text), i32)
+        if cell.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), f32)
+        return specs
+
+    # decode: one new token against a cache of length S
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}

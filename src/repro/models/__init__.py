@@ -1,0 +1,2 @@
+from .config import ModelConfig  # noqa: F401
+from .model_zoo import build_model  # noqa: F401

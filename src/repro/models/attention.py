@@ -1,0 +1,274 @@
+"""GQA attention: training (full-sequence causal / bidirectional / sliding
+window / logit-softcap) and single-token cached decode.
+
+The XLA einsum path is the default (and the one the multi-pod dry-run
+lowers); ``repro.kernels.ops.flash_attention`` is the TPU Pallas fast path,
+selected via ``use_kernel`` when running on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, rope, softcap
+from .config import ModelConfig
+
+__all__ = ["attn_init", "attention", "attention_decode", "init_kv_cache"]
+
+
+def attn_init(rng, cfg: ModelConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd)),
+        "wk": dense_init(ks[1], (d, KV, hd)),
+        "wv": dense_init(ks[2], (d, KV, hd)),
+        "wo": dense_init(ks[3], (H, hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KV, hd), jnp.float32)
+    return p
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _scale(cfg: ModelConfig) -> float:
+    if cfg.query_scale is not None:
+        return cfg.query_scale ** -0.5
+    return cfg.head_dim ** -0.5
+
+
+def attention(
+    p: dict,
+    x: jax.Array,              # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int | None = None,  # sliding window override (None = cfg/full)
+    positions: jax.Array | None = None,
+    kv_x: jax.Array | None = None,  # cross-attention source (B, S_kv, d)
+) -> jax.Array:
+    """Full-sequence attention. GQA via head-group einsum; O(S^2) masked."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    dt = x.dtype
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+
+    if kv_x is None and cfg.head_dim and positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if kv_x is None:  # rope only for self-attention
+        cos, sin = rope(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    Sk = k.shape[1]
+    q = q.reshape(B, S, KV, G, hd)
+
+    if kv_x is None and S * Sk > _CHUNK_THRESHOLD:
+        out = _chunked_attention(q, k, v, cfg, causal=causal, window=window)
+    else:
+        scores = jnp.einsum("bqhgc,bthc->bhgqt", q, k)
+        scores = scores.astype(jnp.float32) * _scale(cfg)
+        scores = softcap(scores, cfg.attn_logit_softcap)
+        if kv_x is None:
+            qi = jnp.arange(S)[:, None]
+            ki = jnp.arange(Sk)[None, :]
+            mask = jnp.ones((S, Sk), bool)
+            if causal:
+                mask &= ki <= qi
+            if window is not None:
+                mask &= ki > qi - window
+            scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bhgqt,bthc->bqhgc", probs, v)
+    out = out.reshape(B, S, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+# above this many score elements per (b,h) pair, switch to the
+# flash-style chunked path (never materialize S x S scores)
+_CHUNK_THRESHOLD = 2048 * 2048
+_Q_BLOCK = 512
+_KV_BLOCK = 1024
+
+
+def _chunked_attention(q, k, v, cfg: ModelConfig, *, causal: bool, window):
+    """Flash-style online-softmax attention in XLA ops (the dry-run path;
+    the Pallas kernel in repro.kernels.flash_attention is the TPU fast path).
+
+    q: (B, S, KV, G, hd); k/v: (B, S, KV, hd). Scans query blocks; for a
+    *static* sliding window only the kv blocks inside the window are read
+    (real FLOP savings for mistral/llava prefill). Causal-only models mask
+    (upper-triangle compute is spent — recorded as roofline waste, addressed
+    by the Pallas kernel / §Perf).
+    """
+    B, S, KV, G, hd = q.shape
+    dt = q.dtype
+    qb, kvb = _Q_BLOCK, _KV_BLOCK
+    n_q = -(-S // qb)
+    assert S % qb == 0, f"S={S} must divide q block {qb}"
+    static_window = window if isinstance(window, int) else None
+
+    if static_window is not None and causal:
+        # kv span needed per q block: window + current block
+        n_kv = min(-(-(static_window + qb) // kvb) + 1, -(-S // kvb))
+        sliding = True
+    else:
+        n_kv = -(-S // kvb)
+        sliding = False
+    kv_span = n_kv * kvb
+
+    scale = _scale(cfg)
+
+    def q_block_body(_, qi):
+        # qi: scalar block index
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * qb, qb, axis=1)
+        q_pos = qi * qb + jnp.arange(qb)
+        if sliding:
+            start = jnp.clip((qi + 1) * qb - kv_span, 0, S - kv_span)
+        else:
+            start = 0
+        k_blk = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+        k_pos = start + jnp.arange(kv_span)
+
+        s = jnp.einsum("bqhgc,bthc->bhgqt", q_blk, k_blk).astype(jnp.float32) * scale
+        s = softcap(s, cfg.attn_logit_softcap)
+        mask = jnp.ones((qb, kv_span), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, -1e30)
+        # block-local softmax is exact: every key this block attends to is
+        # inside [start, start+kv_span)
+        p_ = jax.nn.softmax(s, axis=-1).astype(dt)
+        o = jnp.einsum("bhgqt,bthc->bqhgc", p_, v_blk)
+        return None, o
+
+    # remat the per-q-block compute: backward recomputes scores/probs
+    # (flash-attention-style) instead of saving an (n_q, B, H, qb, kv) stack
+    _, outs = jax.lax.scan(
+        jax.checkpoint(q_block_body, policy=jax.checkpoint_policies.nothing_saveable),
+        None, jnp.arange(n_q))
+    # outs: (n_q, B, qb, KV, G, hd) -> (B, S, KV, G, hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, G, hd)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, T, KV, hd) — bf16, or int8 when quantized
+    v: jax.Array
+    # per-token-per-head dequant scales; () placeholders when not quantized
+    k_scale: jax.Array = jnp.zeros(())  # (B, T, KV, 1) f32
+    v_scale: jax.Array = jnp.zeros(())
+    # Cache is pre-filled to `length`; decode writes at `length` (same for
+    # all batch rows — continuous batching handled at the engine layer).
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16, quantized: bool = False):
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if quantized:
+        # KIVI-style per-token symmetric int8 (beyond-paper serving feature:
+        # 2x cache memory + bandwidth vs bf16)
+        sshape = (n_layers, batch, max_len, cfg.n_kv_heads, 1)
+        return KVCache(jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                       jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, 1, KV, hd) -> (int8 values, (B,1,KV,1) f32 scale). Symmetric
+    per-(token, head)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,               # (B, 1, d) new-token hidden
+    cache_k: jax.Array,         # (B, T, KV, hd) — this layer's cache
+    cache_v: jax.Array,
+    length: jax.Array,          # scalar int32: #valid cache entries
+    cfg: ModelConfig,
+    *,
+    window: int | None = None,
+    k_scale: jax.Array | None = None,   # (B, T, KV, 1) when int8 cache
+    v_scale: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array | None, jax.Array | None]:
+    """One decode step: append new KV at `length`, attend over [0, length].
+
+    Supports bf16 or int8 (KIVI-style per-token-scale) caches. Returns
+    (out (B,1,d), new_k, new_v, new_k_scale, new_v_scale).
+    """
+    B, _, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    T = cache_k.shape[1]
+    dt = x.dtype
+    quantized = cache_k.dtype == jnp.int8
+
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.full((B, 1), length, dtype=jnp.int32)
+    cos, sin = rope(pos, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if quantized:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, length, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, length, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(k_scale, ks, (0, length, 0, 0))
+        v_scale = jax.lax.dynamic_update_slice(v_scale, vs, (0, length, 0, 0))
+        keys = cache_k.astype(dt) * k_scale.astype(dt)
+        vals = cache_v.astype(dt) * v_scale.astype(dt)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, length, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, length, 0, 0))
+        keys = cache_k.astype(dt)
+        vals = cache_v.astype(dt)
+
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bqhgc,bthc->bhgqt", qg, keys)
+    scores = scores.astype(jnp.float32) * _scale(cfg)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    ti = jnp.arange(T)[None, None, None, None, :]
+    mask = ti <= length
+    if window is not None:
+        mask &= ti > length - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bhgqt,bthc->bqhgc", probs, vals).reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, cache_k, cache_v, k_scale, v_scale

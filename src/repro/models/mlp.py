@@ -1,0 +1,36 @@
+"""Dense MLP variants (SwiGLU / GeGLU / GELU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .config import ModelConfig
+
+__all__ = ["mlp_init", "mlp_forward"]
+
+
+def mlp_init(rng, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d, ff)),
+            "w_up": dense_init(ks[1], (d, ff)),
+            "w_down": dense_init(ks[2], (ff, d)),
+        }
+    return {"w_up": dense_init(ks[0], (d, ff)), "w_down": dense_init(ks[1], (ff, d))}
+
+
+def mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        act = jax.nn.silu(g) if cfg.mlp == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = act * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.gelu(u, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))

@@ -1,0 +1,36 @@
+"""Model registry: config -> callable bundle."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import transformer
+from .config import ModelConfig
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    param_specs: Callable
+    forward: Callable          # (params, batch) -> (hidden, aux)
+    unembed: Callable          # (params, hidden) -> logits
+    decode_step: Callable      # (params, state, batch) -> (logits, state)
+    init_decode_state: Callable
+    decode_state_specs: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: transformer.init_params(rng, cfg),
+        param_specs=lambda: transformer.param_specs(cfg),
+        forward=lambda params, batch, plan=None: transformer.forward(params, batch, cfg, plan=plan),
+        unembed=lambda params, h: transformer.unembed(params, h, cfg),
+        decode_step=lambda params, state, batch, plan=None: transformer.decode_step(params, state, batch, cfg, plan=plan),
+        init_decode_state=lambda batch, max_len, **kw: transformer.init_decode_state(cfg, batch, max_len, **kw),
+        decode_state_specs=lambda batch, max_len, **kw: transformer.decode_state_specs(cfg, batch, max_len, **kw),
+    )

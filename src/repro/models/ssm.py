@@ -1,0 +1,248 @@
+"""Mamba2 (state-space duality, arXiv:2405.21060) in chunked-scan form.
+
+Training path is the SSD block-decomposition: quadratic attention-like
+compute inside chunks of length Q, linear recurrence across chunks
+(jax.lax.scan). This is the TPU-native adaptation — the chunk matmuls are
+MXU-shaped (Q x Q and Q x d_state), while the cross-chunk recurrence is a
+tiny scan — mirroring how the paper's patterns map local compute + a thin
+communication/carry structure.
+
+Decode path is the classic selective-SSM recurrence on a (B, H, dh, ds)
+state — O(1) per token, no KV cache (why mamba2/zamba2 run the long_500k
+shape).
+
+``repro.kernels.ssd_scan`` provides the Pallas kernel for the intra-chunk
+part; this module is the XLA reference path used by the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, norm_apply
+from .config import ModelConfig
+
+__all__ = ["ssm_init", "ssd_forward", "ssd_decode_step", "init_ssm_state"]
+
+
+def ssm_init(rng, cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, s, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv_width
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_x": dense_init(ks[0], (d, di)),
+        "w_z": dense_init(ks[1], (d, di)),
+        "w_b": dense_init(ks[2], (d, g * s)),
+        "w_c": dense_init(ks[3], (d, g * s)),
+        "w_dt": dense_init(ks[4], (d, h)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_x": dense_init(ks[5], (cw, di)),
+        "conv_b": dense_init(ks[6], (cw, g * s)),
+        "conv_c": dense_init(ks[7], (cw, g * s)),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "w_out": dense_init(jax.random.fold_in(rng, 99), (di, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is 4 — unrolled taps beat conv_general for tiny K
+        out = out + pad[:, i: i + x.shape[1], :] * w[i]
+    return out
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<k<=i} a[..., k].
+
+    Standard SSD helper; -inf above the diagonal.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD chunked algorithm (Mamba2 paper listing 1, jnp).
+
+    x:  (b, l, h, dh)   inputs (already conv'd/activated)
+    dt: (b, l, h)       positive step sizes
+    A:  (h,)            negative decay rates
+    B:  (b, l, g, ds)   input projections (g groups broadcast over h)
+    C:  (b, l, g, ds)   output projections
+    Returns (y (b,l,h,dh), final_state (b,h,dh,ds)).
+    """
+    b, l, h, dh = x.shape
+    g, ds = B.shape[2], B.shape[3]
+    nc = l // chunk
+    rep = h // g
+
+    xb = x * dt[..., None]                       # discretized input
+    a = A[None, None, :] * dt                    # (b,l,h) log-decay per step
+    # chunked views
+    xc = xb.reshape(b, nc, chunk, h, dh)
+    ac = a.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, ds), rep, axis=3)   # (b,nc,q,h,ds)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, ds), rep, axis=3)
+
+    ac_t = ac.transpose(0, 1, 3, 2)              # (b,nc,h,q)
+    L = jnp.exp(_segsum(ac_t))                   # (b,nc,h,q,q)
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bnqhs,bnths->bnhqt", Cc, Bc)
+    y_diag = jnp.einsum("bnhqt,bnhqt,bnthp->bnqhp", scores, L, xc)
+
+    # per-chunk final-state contribution
+    acum = jnp.cumsum(ac_t, axis=-1)             # (b,nc,h,q)
+    decay_states = jnp.exp(acum[..., -1:] - acum)  # (b,nc,h,q)
+    states = jnp.einsum("bnqhs,bnhq,bnqhp->bnhps", Bc, decay_states, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(acum[..., -1])         # (b,nc,h)
+    s0 = jnp.zeros((b, h, dh, ds), x.dtype) if init_state is None else init_state
+
+    def step(carry, inp):
+        st_in = carry
+        dec, s_new = inp
+        st_out = st_in * dec[:, :, None, None] + s_new
+        return st_out, st_in  # emit state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,dh,ds)
+
+    # inter-chunk output (low-rank off-diagonal blocks)
+    state_decay = jnp.exp(acum)                   # (b,nc,h,q)
+    y_off = jnp.einsum("bnqhs,bnhps,bnhq->bnqhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, dh)
+    return y, final
+
+
+def ssd_forward(p: dict, x: jax.Array, cfg: ModelConfig, init_state=None, plan=None):
+    """Full Mamba2 mixer block: proj -> conv -> SSD -> gated norm -> out.
+
+    x: (B,S,d) -> (B,S,d); also returns the final SSM state.
+
+    §Perf iteration 2 (head-parallel SSD): the chunked scan iterates the
+    chunk axis, so that axis must NOT be sharded (a sharded scan axis makes
+    GSPMD all-gather every per-chunk tensor: 3 x 17GB per layer for
+    mamba2-1.3b prefill_32k). Instead the SSM *heads* shard over TP — every
+    SSD einsum is per-head independent — and the only cross-shard movement
+    is one seq->head reshard (all-to-all) per layer."""
+    B_, S, d = x.shape
+    h, dh, g, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    dt_ = x.dtype
+
+    def _head_sharded(t, *, head_axis):
+        if plan is None or h % plan.axis_size(plan.tp) or B_ % max(plan.axis_size(plan.dp), 1):
+            return t
+        import jax as _jax
+        spec = [None] * t.ndim
+        spec[0] = plan.dp
+        spec[head_axis] = plan.tp
+        return _jax.lax.with_sharding_constraint(t, plan.ns(*spec))
+
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_))
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_))
+    Bp = jnp.einsum("bsd,de->bse", x, p["w_b"].astype(dt_))
+    Cp = jnp.einsum("bsd,de->bse", x, p["w_c"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    # d_inner = h*dh: head-shard before the conv/scan region
+    xs = _head_sharded(xs.reshape(B_, S, h, dh), head_axis=2).reshape(B_, S, cfg.d_inner)
+    dt = _head_sharded(dt, head_axis=2)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"].astype(dt_)))
+    Bp = jax.nn.silu(_causal_conv(Bp, p["conv_b"].astype(dt_)))
+    Cp = jax.nn.silu(_causal_conv(Cp, p["conv_c"].astype(dt_)))
+
+    A = -jnp.exp(p["A_log"])  # (h,) negative
+    # pad sequence to a chunk multiple; padded steps have dt=0 (decay=1,
+    # zero input) so they are identity on the carried state
+    Sp = -(-S // cfg.ssm_chunk) * cfg.ssm_chunk
+    pad = Sp - S
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xs_p, dt_p, B_p, C_p = (zpad(xs), zpad(dt), zpad(Bp), zpad(Cp))
+    else:
+        xs_p, dt_p, B_p, C_p = xs, dt, Bp, Cp
+    y, state = ssd_scan_ref(
+        xs_p.reshape(B_, Sp, h, dh).astype(jnp.float32),
+        dt_p,
+        A,
+        B_p.reshape(B_, Sp, g, ds).astype(jnp.float32),
+        C_p.reshape(B_, Sp, g, ds).astype(jnp.float32),
+        cfg.ssm_chunk,
+        init_state,
+    )
+    y = y[:, :S]
+    y = y + xs.reshape(B_, S, h, dh).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = _head_sharded(y, head_axis=2)
+    y = y.reshape(B_, S, cfg.d_inner).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["norm"], y, "rmsnorm")
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_)), state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int, dtype=jnp.float32):
+    return {
+        "state": jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        "conv_x": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+        "conv_c": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+    }
+
+
+def ssd_decode_step(p: dict, x: jax.Array, layer_state: dict, cfg: ModelConfig):
+    """One-token recurrent step. x: (B,1,d). layer_state: {state (B,h,dh,ds),
+    conv_x/b/c rolling buffers (B, K-1, C)}. Returns (out (B,1,d), new state)."""
+    B_, _, d = x.shape
+    h, dh, g, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    dt_ = x.dtype
+    xt = x[:, 0]
+
+    xs = xt @ p["w_x"].astype(dt_)
+    z = xt @ p["w_z"].astype(dt_)
+    Bp = xt @ p["w_b"].astype(dt_)
+    Cp = xt @ p["w_c"].astype(dt_)
+    dt = jax.nn.softplus((xt @ p["w_dt"].astype(dt_)).astype(jnp.float32) + p["dt_bias"])  # (B,h)
+
+    def conv_step(buf, new, w):
+        # buf: (B, K-1, C), new: (B, C), w: (K, C)
+        seq = jnp.concatenate([buf, new[:, None, :]], axis=1)  # (B,K,C)
+        out = jnp.einsum("bkc,kc->bc", seq.astype(jnp.float32), w.astype(jnp.float32))
+        return jax.nn.silu(out).astype(dt_), seq[:, 1:]
+
+    xs, new_cx = conv_step(layer_state["conv_x"], xs, p["conv_x"])
+    Bp, new_cb = conv_step(layer_state["conv_b"], Bp, p["conv_b"])
+    Cp, new_cc = conv_step(layer_state["conv_c"], Cp, p["conv_c"])
+
+    A = -jnp.exp(p["A_log"])                       # (h,)
+    xh = xs.reshape(B_, h, dh).astype(jnp.float32)
+    Bh = jnp.repeat(Bp.reshape(B_, g, ds), h // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cp.reshape(B_, g, ds), h // g, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])               # (B,h)
+    st = layer_state["state"].astype(jnp.float32)
+    st = st * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhs,bhp->bhps", dt, Bh, xh)
+    y = jnp.einsum("bhs,bhps->bhp", Ch, st)        # (B,h,dh)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, cfg.d_inner).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["norm"], y, "rmsnorm")
+    out = (y @ p["w_out"].astype(dt_))[:, None, :]
+    new_state = {"state": st.astype(layer_state["state"].dtype),
+                 "conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc}
+    return out, new_state

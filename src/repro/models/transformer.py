@@ -1,0 +1,465 @@
+"""Model assembly: init / train-forward / cached decode for every family.
+
+Families (DESIGN.md §5):
+- dense / moe / vlm: uniform decoder stack, scanned over layers
+  (gemma2's local/global alternation rides through the scan as a per-layer
+  window scalar; llava consumes a precomputed patch-embedding prefix).
+- ssm: pure Mamba2 stack (scanned).
+- hybrid (zamba2): Mamba2 backbone with ONE shared attention block invoked
+  every k layers (weight reuse across invocations — the Zamba trick).
+- encdec (whisper): bidirectional encoder over precomputed frames (conv
+  frontend stubbed per the assignment), causal decoder with cross-attention.
+
+All stacks use lax.scan over stacked layer params + jax.checkpoint (remat)
+so the HLO stays compact for 95-layer configs and activation memory stays
+O(sqrt-ish) for the dry-run memory analysis.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import dense_init, norm_apply, norm_init, softcap
+from .. import sharding as shard_mod
+from .config import ModelConfig
+
+__all__ = [
+    "init_params", "param_specs", "forward", "decode_step",
+    "init_decode_state", "decode_state_specs",
+]
+
+_BIG_WINDOW = jnp.iinfo(jnp.int32).max // 2
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(rng, 4)
+    p: dict[str, Any] = {}
+    if kind == "mamba":
+        p["ln1"] = norm_init(cfg.norm, cfg.d_model)
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg)
+        return p
+    p["ln1"] = norm_init(cfg.norm, cfg.d_model)
+    p["attn"] = attn_mod.attn_init(ks[0], cfg)
+    p["ln2"] = norm_init(cfg.norm, cfg.d_model)
+    if kind == "attn_moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_mod.mlp_init(ks[1], cfg)
+    if cfg.use_post_norm:
+        p["ln1_post"] = norm_init(cfg.norm, cfg.d_model)
+        p["ln2_post"] = norm_init(cfg.norm, cfg.d_model)
+    if kind == "cross":  # whisper decoder block: self + cross + mlp
+        p["lnx"] = norm_init(cfg.norm, cfg.d_model)
+        p["xattn"] = attn_mod.attn_init(ks[2], cfg)
+    return p
+
+
+def _decoder_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "moe":
+        return "attn_moe"
+    if cfg.family == "ssm":
+        return "mamba"
+    if cfg.family == "hybrid":
+        return "mamba"
+    if cfg.family == "encdec":
+        return "cross"
+    return "attn_mlp"
+
+
+def layer_windows(cfg: ModelConfig, n_layers: int) -> np.ndarray:
+    """Per-layer attention window (int32; _BIG_WINDOW = full attention)."""
+    if cfg.local_global_pattern:
+        w = [cfg.sliding_window if i % 2 == 0 else _BIG_WINDOW for i in range(n_layers)]
+    elif cfg.sliding_window is not None:
+        w = [cfg.sliding_window] * n_layers
+    else:
+        w = [_BIG_WINDOW] * n_layers
+    return np.asarray(w, np.int32)
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 8)
+    p: dict[str, Any] = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], (cfg.vocab_size, cfg.d_model))
+    if cfg.learned_positions:
+        p["pos_embed"] = dense_init(ks[2], (cfg.max_seq, cfg.d_model))
+
+    kind = _decoder_kind(cfg)
+    # stacked decoder layers
+    p["layers"] = jax.vmap(lambda k: _layer_init(k, cfg, kind))(
+        jax.random.split(ks[3], cfg.n_layers))
+
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        p["shared"] = _layer_init(ks[4], cfg, "attn_mlp")
+    if cfg.family == "encdec":
+        p["enc_layers"] = jax.vmap(lambda k: _layer_init(k, cfg, "attn_mlp"))(
+            jax.random.split(ks[5], cfg.n_enc_layers))
+        p["enc_norm"] = norm_init(cfg.norm, cfg.d_model)
+        p["enc_pos"] = dense_init(ks[6], (cfg.enc_positions, cfg.d_model))
+    if cfg.family == "vlm" and cfg.n_patches:
+        # anyres projector stub: patch embeds arrive pre-projected; a single
+        # linear adapter stands in for the 2-layer MLP projector.
+        p["vis_proj"] = dense_init(ks[7], (cfg.d_model, cfg.d_model))
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct tree — no allocation (dry-run entry point)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp: dict, h: jax.Array, cfg: ModelConfig, window, positions=None, plan=None):
+    lp = shard_mod.gather_params(lp, plan)
+    a_in = norm_apply(lp["ln1"], h, cfg.norm)
+    a = attn_mod.attention(lp["attn"], a_in, cfg, causal=True, window=window,
+                           positions=positions)
+    if cfg.use_post_norm:
+        a = norm_apply(lp["ln1_post"], a, cfg.norm)
+    h = h + a
+    m_in = norm_apply(lp["ln2"], h, cfg.norm)
+    if "moe" in lp:
+        m, aux = moe_mod.moe_forward(lp["moe"], m_in, cfg, plan=plan)
+    else:
+        m, aux = mlp_mod.mlp_forward(lp["mlp"], m_in, cfg), 0.0
+    if cfg.use_post_norm:
+        m = norm_apply(lp["ln2_post"], m, cfg.norm)
+    return h + m, aux
+
+
+def _mamba_block(lp: dict, h: jax.Array, cfg: ModelConfig, plan=None) -> jax.Array:
+    lp = shard_mod.gather_params(lp, plan)
+    a_in = norm_apply(lp["ln1"], h, cfg.norm)
+    out, _ = ssm_mod.ssd_forward(lp["ssm"], a_in, cfg, plan=plan)
+    return h + out
+
+
+def _scan_layers(layers: dict, h: jax.Array, body: Callable, n: int, extra_xs=None,
+                 remat: bool = True):
+    """scan h through stacked layer params (+ optional per-layer scalars)."""
+    def f(carry, xs):
+        # barrier: keeps XLA from hoisting per-iteration converts of the
+        # saved carry stack out of the loop (materializes the whole stack in
+        # f32 otherwise — +12.7GB/device on deepseek-67b)
+        carry = jax.lax.optimization_barrier(carry)
+        if extra_xs is None:
+            lp, = (xs,)
+            out = body(carry, lp, None)
+        else:
+            lp, ex = xs
+            out = body(carry, lp, ex)
+        return out, None
+
+    if remat:
+        f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = layers if extra_xs is None else (layers, extra_xs)
+    h, _ = jax.lax.scan(f, h, xs, length=n)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig, dtype, plan=None) -> jax.Array:
+    emb = shard_mod.use_param(params["embed"], plan, "embed")
+    h = emb.astype(dtype)[tokens]
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return h
+
+
+def _encoder_forward(params: dict, frames: jax.Array, cfg: ModelConfig, plan=None) -> jax.Array:
+    """whisper encoder over precomputed conv-frontend frames (B, T, d)."""
+    dt = frames.dtype
+    T = frames.shape[1]
+    h = frames + params["enc_pos"][:T].astype(dt)[None]
+
+    def body(h, lp, _):
+        lp = shard_mod.gather_params(lp, plan)
+        a_in = norm_apply(lp["ln1"], h, cfg.norm)
+        a = attn_mod.attention(lp["attn"], a_in, cfg, causal=False, window=None)
+        h = h + a
+        m_in = norm_apply(lp["ln2"], h, cfg.norm)
+        return h + mlp_mod.mlp_forward(lp["mlp"], m_in, cfg)
+
+    h = _scan_layers(params["enc_layers"], h, body, cfg.n_enc_layers)
+    return norm_apply(params["enc_norm"], h, cfg.norm)
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, plan=None) -> tuple[jax.Array, jax.Array]:
+    """Training forward -> (hidden (B,S,d), moe_aux_loss). Loss (chunked
+    xent against the embedding) lives in repro.train.loss."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    h = embed_tokens(params, tokens, cfg, dtype, plan=plan)
+    if plan is not None:
+        h = jax.lax.with_sharding_constraint(h, plan.ns(plan.dp, None, None))
+
+    if cfg.family == "vlm" and cfg.n_patches:
+        vp = shard_mod.use_param(params["vis_proj"], plan, "vis_proj")
+        pe = batch["patch_embeds"].astype(dtype) @ vp.astype(dtype)
+        h = jnp.concatenate([pe, h], axis=1)  # image prefix
+    if cfg.learned_positions:
+        S = h.shape[1]
+        h = h + params["pos_embed"][:S].astype(dtype)[None]
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        windows = jnp.asarray(layer_windows(cfg, cfg.n_layers))
+
+        def body(carry, lp, win):
+            h, aux = carry
+            h, a = _attn_block(lp, h, cfg, window=win, plan=plan)
+            return (shard_mod.act_seq(h, plan), aux + a)
+
+        (h, aux_total) = _scan_layers(params["layers"], (h, aux_total), body,
+                                      cfg.n_layers, extra_xs=windows)
+    elif cfg.family == "ssm":
+        def body(h, lp, _):
+            return shard_mod.act_seq(_mamba_block(lp, h, cfg, plan=plan), plan)
+        h = _scan_layers(params["layers"], h, body, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        h = _hybrid_forward(params, h, cfg, plan=plan)
+    elif cfg.family == "encdec":
+        enc = _encoder_forward(params, batch["enc_frames"].astype(dtype), cfg, plan=plan)
+
+        def body(h, lp, _):
+            lp = shard_mod.gather_params(lp, plan)
+            a_in = norm_apply(lp["ln1"], h, cfg.norm)
+            h = h + attn_mod.attention(lp["attn"], a_in, cfg, causal=True)
+            x_in = norm_apply(lp["lnx"], h, cfg.norm)
+            h = h + attn_mod.attention(lp["xattn"], x_in, cfg, kv_x=enc)
+            m_in = norm_apply(lp["ln2"], h, cfg.norm)
+            return shard_mod.act_seq(h + mlp_mod.mlp_forward(lp["mlp"], m_in, cfg), plan)
+
+        h = _scan_layers(params["layers"], h, body, cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    return h, aux_total
+
+
+def _hybrid_forward(params: dict, h: jax.Array, cfg: ModelConfig, plan=None) -> jax.Array:
+    """zamba2: mamba backbone, ONE shared attn block every k layers.
+
+    Structured as scan-of-scan: the outer scan iterates segments, each inner
+    scan runs k mamba layers, then the shared block applies with the SAME
+    closed-over weights (the Zamba weight-reuse trick — its gradient
+    accumulates across outer iterations naturally). Avoids python-loop
+    slicing of stacked params, whose transpose scatters into full-size zero
+    stacks per segment (45GB/device before this restructure).
+    """
+    k = cfg.shared_attn_every
+    L = cfg.n_layers
+    n_seg, rem = divmod(L, k)
+
+    def inner_body(h, lp, _):
+        return shard_mod.act_seq(_mamba_block(lp, h, cfg, plan=plan), plan)
+
+    seg_params = jax.tree.map(lambda x: x[: n_seg * k].reshape((n_seg, k) + x.shape[1:]),
+                              params["layers"])
+
+    def outer_body(h, seg_lp):
+        h = _scan_layers(seg_lp, h, inner_body, k)
+        h, _ = _attn_block(params["shared"], h, cfg, window=_BIG_WINDOW, plan=plan)
+        return shard_mod.act_seq(h, plan), None
+
+    h, _ = jax.lax.scan(outer_body, h, seg_params, length=n_seg)
+    if rem:
+        tail = jax.tree.map(lambda x: x[n_seg * k:], params["layers"])
+        h = _scan_layers(tail, h, inner_body, rem)
+    return h
+
+
+def unembed(params: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    emb = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", h, emb.astype(h.dtype))
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                      enc_frames: jax.Array | None = None, params: dict | None = None):
+    """Mutable-through-functional-update decode state (KV caches / SSM states).
+
+    ``length`` counts the valid prefix. For encdec, the encoder output is
+    computed once at prefill and carried in the state.
+    """
+    st: dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        st["kv"] = attn_mod.init_kv_cache(cfg, batch, max_len, L, dtype,
+                                          quantized=cfg.kv_quant_decode)
+    elif cfg.family == "ssm":
+        st["ssm"] = ssm_mod.init_ssm_state(cfg, batch, L)
+    elif cfg.family == "hybrid":
+        st["ssm"] = ssm_mod.init_ssm_state(cfg, batch, L)
+        n_shared = L // cfg.shared_attn_every
+        st["kv"] = attn_mod.init_kv_cache(cfg, batch, max_len, n_shared, dtype)
+    elif cfg.family == "encdec":
+        st["kv"] = attn_mod.init_kv_cache(cfg, batch, max_len, L, dtype)
+        st["enc_out"] = jnp.zeros((batch, cfg.enc_positions, cfg.d_model), dtype)
+    return st
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(partial(init_decode_state, cfg, batch, max_len, dtype))
+
+
+def decode_step(params: dict, state: dict, batch: dict, cfg: ModelConfig, plan=None):
+    """One token for the whole batch: (logits (B,V), new_state)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tok = batch["token"]  # (B, 1)
+    length = state["length"]
+    h = embed_tokens(params, tok, cfg, dtype, plan=plan)
+    if cfg.learned_positions:
+        pos = jax.lax.dynamic_slice_in_dim(params["pos_embed"], length, 1, 0)  # (1, d)
+        h = h + pos.astype(dtype)[None]
+
+    new_state = dict(state)
+    if cfg.family in ("dense", "moe", "vlm"):
+        windows = jnp.asarray(layer_windows(cfg, cfg.n_layers))
+
+        kv = state["kv"]
+        quantized = kv.quantized
+
+        # cache rides the CARRY (updated in place per layer) so XLA aliases
+        # the donated buffers through the loop — the xs/ys form copies the
+        # whole stacked cache instead (+10GB/device for deepseek decode_32k).
+        def body(carry, xs):
+            h, ck_all, cv_all, ks_all, vs_all = carry
+            lp, win, i = xs
+            lp = shard_mod.gather_params(lp, plan)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            ks = vs = None
+            if quantized:
+                ks = jax.lax.dynamic_index_in_dim(ks_all, i, 0, keepdims=False)
+                vs = jax.lax.dynamic_index_in_dim(vs_all, i, 0, keepdims=False)
+            a_in = norm_apply(lp["ln1"], h, cfg.norm)
+            a, nk, nv, nks, nvs = attn_mod.attention_decode(
+                lp["attn"], a_in, ck, cv, length, cfg, window=win,
+                k_scale=ks, v_scale=vs)
+            if cfg.use_post_norm:
+                a = norm_apply(lp["ln1_post"], a, cfg.norm)
+            h = h + a
+            m_in = norm_apply(lp["ln2"], h, cfg.norm)
+            if "moe" in lp:
+                m, _ = moe_mod.moe_forward(lp["moe"], m_in, cfg, plan=plan)
+            else:
+                m = mlp_mod.mlp_forward(lp["mlp"], m_in, cfg)
+            if cfg.use_post_norm:
+                m = norm_apply(lp["ln2_post"], m, cfg.norm)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, nk, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, nv, i, 0)
+            if quantized:
+                ks_all = jax.lax.dynamic_update_index_in_dim(ks_all, nks, i, 0)
+                vs_all = jax.lax.dynamic_update_index_in_dim(vs_all, nvs, i, 0)
+            return (h + m, ck_all, cv_all, ks_all, vs_all), None
+
+        (h, nk, nv, nks, nvs), _ = jax.lax.scan(
+            body, (h, kv.k, kv.v, kv.k_scale, kv.v_scale),
+            (params["layers"], windows, jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        new_state["kv"] = attn_mod.KVCache(nk, nv, nks, nvs)
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, ls = xs
+            lp = shard_mod.gather_params(lp, plan)
+            a_in = norm_apply(lp["ln1"], h, cfg.norm)
+            out, ns = ssm_mod.ssd_decode_step(lp["ssm"], a_in, ls, cfg)
+            return h + out, ns
+
+        h, ns = jax.lax.scan(body, h, (params["layers"], state["ssm"]))
+        new_state["ssm"] = ns
+
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        L = cfg.n_layers
+        ssm_states = state["ssm"]
+        new_ssm = jax.tree.map(jnp.zeros_like, ssm_states)
+        ck, cv = state["kv"].k, state["kv"].v
+        nk, nv = [], []
+        shared_i = 0
+        done = 0
+        while done < L:
+            seg = min(k, L - done)
+            for i in range(done, done + seg):
+                lp = jax.tree.map(lambda x: x[i], params["layers"])
+                ls = jax.tree.map(lambda x: x[i], ssm_states)
+                a_in = norm_apply(lp["ln1"], h, cfg.norm)
+                out, ns = ssm_mod.ssd_decode_step(lp["ssm"], a_in, ls, cfg)
+                h = h + out
+                new_ssm = jax.tree.map(lambda acc, v, i=i: acc.at[i].set(v), new_ssm, ns)
+            done += seg
+            if done < L or seg == k:
+                lp = params["shared"]
+                a_in = norm_apply(lp["ln1"], h, cfg.norm)
+                a, k_new, v_new, _, _ = attn_mod.attention_decode(
+                    lp["attn"], a_in, ck[shared_i], cv[shared_i], length, cfg, window=None)
+                h = h + a
+                m_in = norm_apply(lp["ln2"], h, cfg.norm)
+                h = h + mlp_mod.mlp_forward(lp["mlp"], m_in, cfg)
+                nk.append(k_new)
+                nv.append(v_new)
+                shared_i += 1
+        new_state["ssm"] = new_ssm
+        new_state["kv"] = attn_mod.KVCache(jnp.stack(nk), jnp.stack(nv))
+
+    elif cfg.family == "encdec":
+        enc = state["enc_out"].astype(dtype)
+
+        def body(carry, xs):
+            h, ck_all, cv_all = carry
+            lp, i = xs
+            lp = shard_mod.gather_params(lp, plan)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            a_in = norm_apply(lp["ln1"], h, cfg.norm)
+            a, nk, nv, _, _ = attn_mod.attention_decode(lp["attn"], a_in, ck, cv, length, cfg)
+            h = h + a
+            x_in = norm_apply(lp["lnx"], h, cfg.norm)
+            h = h + attn_mod.attention(lp["xattn"], x_in, cfg, kv_x=enc)
+            m_in = norm_apply(lp["ln2"], h, cfg.norm)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, nk, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, nv, i, 0)
+            return (h + mlp_mod.mlp_forward(lp["mlp"], m_in, cfg), ck_all, cv_all), None
+
+        (h, nk, nv), _ = jax.lax.scan(
+            body, (h, state["kv"].k, state["kv"].v),
+            (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        new_state["kv"] = attn_mod.KVCache(nk, nv)
+    else:
+        raise ValueError(cfg.family)
+
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = unembed(params, h, cfg)[:, 0]
+    new_state["length"] = length + 1
+    return logits, new_state

@@ -1,0 +1,2 @@
+from .serve_step import make_serve_step, make_prefill  # noqa: F401
+from .engine import ServeEngine  # noqa: F401

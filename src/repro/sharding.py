@@ -1,0 +1,273 @@
+"""Sharding plans: map model/optimizer state onto the production mesh.
+
+Train: 2-D sharding — FSDP over the data axes (+pod), TP over "model" —
+MaxText-style. Serve: TP-only params (each DP serving replica holds a full
+TP-sharded copy), batch over data axes, KV-cache *sequence* dimension over
+"model" (flash-decoding-style split-K), or over (data+model) for the
+batch=1 long-context shape.
+
+Rules are divisibility-aware: each param kind carries an ordered candidate
+list of PartitionSpecs and the first one whose sharded dims divide evenly
+wins (e.g. granite's 24 heads don't divide a 16-way model axis, so attention
+falls back to head_dim sharding). This is what makes one plan serve all 10
+assigned architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPlan", "make_plan", "param_shardings", "batch_shardings",
+           "decode_state_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    dp: tuple[str, ...]          # batch axes (e.g. ("pod","data"))
+    tp: str = "model"
+    mode: str = "train"          # train | serve | serve_long
+
+    @property
+    def fsdp(self) -> tuple[str, ...]:
+        return self.dp if self.mode == "train" else ()
+
+    def ns(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return self.mesh.shape[axes]
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+
+def make_plan(mesh: Mesh, mode: str = "train") -> ShardingPlan:
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a != "model")
+    return ShardingPlan(mesh=mesh, dp=dp, tp="model", mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _candidates(name: str, plan: ShardingPlan) -> list[tuple]:
+    """Ordered PartitionSpec candidates per (trailing-dims) param kind."""
+    F: tuple | None = plan.fsdp or None
+    T = plan.tp
+    rules: dict[str, list[tuple]] = {
+        # embeddings (V, d): vocab over TP, d over FSDP
+        "embed": [(T, F), (T, None), (None, F), (None, None)],
+        "unembed": [(T, F), (T, None), (None, F), (None, None)],
+        "pos_embed": [(None, F), (None, None)],
+        "enc_pos": [(None, F), (None, None)],
+        "vis_proj": [(F, T), (None, None)],
+        # attention
+        "wq": [(F, T, None), (F, None, T), (F, None, None)],
+        "wk": [(F, T, None), (F, None, T), (F, None, None)],
+        "wv": [(F, T, None), (F, None, T), (F, None, None)],
+        "wo": [(T, None, F), (None, T, F), (None, None, F)],
+        "bq": [(T, None), (None, T), (None, None)],
+        "bk": [(T, None), (None, T), (None, None)],
+        "bv": [(T, None), (None, T), (None, None)],
+        # dense mlp
+        "w_gate": [(F, T)],
+        "w_up": [(F, T)],
+        "w_down": [(T, F)],
+        # moe (E, d, ff) / (E, ff, d) — expert dim unsharded (40/32 don't
+        # divide 16); TP inside each expert
+        "router": [(F, None), (None, None)],
+        "moe/w_gate": [(None, F, T)],
+        "moe/w_up": [(None, F, T)],
+        "moe/w_down": [(None, T, F)],
+        # mamba2
+        "w_x": [(F, T)],
+        "w_z": [(F, T)],
+        "w_b": [(F, None)],
+        "w_c": [(F, None)],
+        "w_dt": [(F, T), (F, None)],
+        "w_out": [(T, F)],
+        "conv_x": [(None, T), (None, None)],
+        "conv_b": [(None, None)],
+        "conv_c": [(None, None)],
+        "A_log": [(T,), (None,)],
+        "D": [(T,), (None,)],
+        "dt_bias": [(T,), (None,)],
+    }
+    return rules.get(name, [(None,)])
+
+
+def _fits(spec: tuple, shape: tuple[int, ...], plan: ShardingPlan) -> bool:
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            continue
+        if dim % plan.axis_size(axes) != 0:
+            return False
+    return True
+
+
+def _spec_for(path: tuple, shape: tuple[int, ...], plan: ShardingPlan) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    if "moe" in keys and name in ("w_gate", "w_up", "w_down"):
+        name = f"moe/{name}"
+    cands = _candidates(name, plan)
+    # stacked layer dims: rules describe trailing dims; pad leading Nones
+    for cand in cands:
+        lead = len(shape) - len(cand)
+        if lead < 0:
+            continue
+        full = (None,) * lead + cand
+        if _fits(full, shape, plan):
+            return P(*full)
+    return P()  # replicate
+
+
+def param_shardings(specs, plan: ShardingPlan):
+    """pytree of ShapeDtypeStruct -> pytree of NamedSharding."""
+    def f(path, leaf):
+        return plan.ns(*_spec_for(path, leaf.shape, plan))
+    return jax.tree_util.tree_map_with_path(f, specs)
+
+
+def _gather_spec(path: tuple, shape: tuple[int, ...], plan: ShardingPlan) -> P:
+    """Storage spec minus the FSDP axes: the ZeRO-3 'gathered at use' form."""
+    spec = _spec_for(path, shape, plan)
+    fs = set(plan.fsdp)
+    out = []
+    for axes in tuple(spec):
+        if axes is None:
+            out.append(None)
+        elif isinstance(axes, str):
+            out.append(None if axes in fs else axes)
+        else:
+            kept = tuple(a for a in axes if a not in fs)
+            out.append(kept if kept else None)
+    return P(*out)
+
+
+def act_seq(h, plan: ShardingPlan | None):
+    """Sequence-parallel residual stream: (B, S, d) constrained to
+    P(dp, tp, None) between blocks, so remat-saved layer inputs shard over
+    the FULL mesh (Megatron-SP; the difference between 102GB and 6GB of
+    carries for deepseek-67b train)."""
+    if plan is None:
+        return h
+    if h.shape[1] % plan.axis_size(plan.tp) or h.shape[0] % plan.axis_size(plan.dp):
+        return h
+    return jax.lax.with_sharding_constraint(h, plan.ns(plan.dp, plan.tp, None))
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _resharded(w, use_sh, grad_sh):
+    return jax.lax.with_sharding_constraint(w, use_sh)
+
+
+def _resharded_fwd(w, use_sh, grad_sh):
+    return jax.lax.with_sharding_constraint(w, use_sh), None
+
+
+def _resharded_bwd(use_sh, grad_sh, _res, g):
+    # Cotangent immediately reduce-scattered back to the storage layout.
+    # Without this, with_sharding_constraint's transpose keeps layer grads in
+    # the *gathered* (dp-replicated) layout and the stacked grad accumulator
+    # of scan-over-layers balloons (40GB/device for deepseek-67b).
+    return (jax.lax.with_sharding_constraint(g, grad_sh),)
+
+
+_resharded.defvjp(_resharded_fwd, _resharded_bwd)
+
+
+def gather_params(tree, plan: ShardingPlan | None, cast_dtype="bfloat16"):
+    """Constrain a param subtree to its FSDP-gathered layout (weights
+    replicated over dp, still TP-sharded). Applied inside each layer body so
+    XLA all-gathers weights per layer (streaming FSDP) instead of psumming
+    activation-sized partials — the standard ZeRO-3 lowering. Gradients
+    re-shard to the storage layout per layer (ZeRO reduce-scatter).
+
+    §Perf iteration 1a: weights are cast to the compute dtype BEFORE the
+    gather (fp32 master stays sharded), halving FSDP gather traffic; the
+    cast's transpose keeps the fp32 reduce-scatter on the grad side."""
+    if plan is None or not plan.fsdp:
+        return tree
+    import jax.numpy as jnp
+    cast = jnp.dtype(cast_dtype) if cast_dtype else None
+    def f(path, leaf):
+        use = plan.ns(*_gather_spec(path, leaf.shape, plan))
+        store = plan.ns(*_spec_for(path, leaf.shape, plan))
+        if cast is not None and leaf.dtype == jnp.float32 and leaf.ndim >= 2:
+            # pin the bf16 copy in the SHARDED layout (constraint + barrier)
+            # so the partitioner cannot reorder to gather-f32-then-convert
+            leaf = jax.lax.with_sharding_constraint(leaf.astype(cast), store)
+            leaf = jax.lax.optimization_barrier(leaf)
+        return _resharded(leaf, use, store)
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def use_param(leaf, plan: ShardingPlan | None, name: str):
+    """gather_params for a single named parameter (embed / unembed / ...)."""
+    if plan is None or not plan.fsdp:
+        return leaf
+    key = (jax.tree_util.DictKey(name),)
+    use = plan.ns(*_gather_spec(key, leaf.shape, plan))
+    store = plan.ns(*_spec_for(key, leaf.shape, plan))
+    return _resharded(leaf, use, store)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / decode-state rules
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_specs, plan: ShardingPlan):
+    """tokens/labels/loss_mask (B, S): batch over dp; frame/patch embeds
+    (B, T, d): batch over dp."""
+    def f(path, leaf):
+        spec = [plan.dp] + [None] * (len(leaf.shape) - 1)
+        if leaf.shape[0] % plan.axis_size(plan.dp) != 0:
+            spec[0] = None
+        return plan.ns(*spec)
+    return jax.tree_util.tree_map_with_path(f, batch_specs)
+
+
+def decode_state_shardings(state_specs, plan: ShardingPlan, long_context: bool = False):
+    """KV caches (L, B, T, KV, hd): batch over dp, cache seq over TP
+    (split-K decode). long_context (B=1): seq over (dp+tp).
+    SSM states (L, B, h, dh, ds): batch over dp, heads over TP."""
+    seq_axes = (plan.dp + (plan.tp,)) if long_context else plan.tp
+    batch_axes = None if long_context else plan.dp
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        shape = leaf.shape
+        if "kv" in keys and len(shape) == 5:  # (L,B,T,KV,hd) or scale (L,B,T,KV,1)
+            spec = [None, batch_axes, seq_axes, None, None]
+        elif "ssm" in keys and "state" in keys and len(shape) == 5:
+            spec = [None, batch_axes, plan.tp, None, None]
+            if shape[2] % plan.axis_size(plan.tp) != 0:
+                spec[2] = None
+        elif "enc_out" in keys:
+            spec = [batch_axes, None, None]
+        elif len(shape) >= 2 and "conv" in "".join(keys):
+            spec = [None, batch_axes] + [None] * (len(shape) - 2)
+        elif len(shape) == 0:
+            spec = []
+        else:
+            spec = [None, batch_axes] + [None] * (len(shape) - 2)
+        # divisibility guards
+        for i, axes in enumerate(spec):
+            if axes is not None and shape[i] % plan.axis_size(axes) != 0:
+                spec[i] = None
+        return plan.ns(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, state_specs)

@@ -1,0 +1,3 @@
+from .loss import chunked_cross_entropy  # noqa: F401
+from .optimizer import adamw_init, adamw_update  # noqa: F401
+from .train_step import TrainState, make_train_step  # noqa: F401

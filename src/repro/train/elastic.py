@@ -1,0 +1,68 @@
+"""Elastic scaling + failure handling (fault tolerance, DESIGN.md §2).
+
+TPU/BSP reality: a failed chip kills the SPMD program — recovery is
+restore-and-resume, not in-flight patching (the paper makes the same point
+about MPI, §8). What we provide:
+
+1. ``rescale_state``: restore a checkpoint onto a *different* mesh — params
+   and optimizer state re-device_put with the new plan's shardings, the DDF
+   data pipeline re-partitioned with ``core.operators.rebalance`` (the
+   paper's sample-based repartitioning).
+2. ``StepGuard``: per-step watchdog that triggers an emergency checkpoint if
+   a step exceeds a straggler threshold (host-side; on real pods this hooks
+   the multislice heartbeat).
+3. Straggler mitigation inside a step is structural: BSP supersteps make a
+   straggler == load imbalance, and the pipeline's rebalance bounds
+   partition skew to <=1 row (see operators.rebalance).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from .. import sharding as shard_mod
+from . import checkpoint
+
+__all__ = ["rescale_state", "StepGuard"]
+
+
+def rescale_state(ckpt_dir: str, step: int, state_specs, new_mesh, mode: str = "train"):
+    """Restore a checkpoint onto ``new_mesh`` (different worker count OK)."""
+    plan = shard_mod.make_plan(new_mesh, mode=mode)
+    shardings = {
+        "params": shard_mod.param_shardings(state_specs["params"], plan),
+        "opt": {
+            "mu": shard_mod.param_shardings(state_specs["opt"]["mu"], plan),
+            "nu": shard_mod.param_shardings(state_specs["opt"]["nu"], plan),
+            "step": plan.ns(),
+        },
+    }
+    return checkpoint.restore(ckpt_dir, step, state_specs, shardings)
+
+
+class StepGuard:
+    """Watchdog: emergency-checkpoint when a step exceeds the straggler
+    threshold (factor x trailing-mean step time)."""
+
+    def __init__(self, ckpt_dir: str, threshold_factor: float = 3.0, min_history: int = 5):
+        self.ckpt_dir = ckpt_dir
+        self.factor = threshold_factor
+        self.min_history = min_history
+        self.history: list[float] = []
+        self.emergency_saves = 0
+
+    def step(self, step_idx: int, fn: Callable, state, *args):
+        t0 = time.monotonic()
+        out = fn(state, *args)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        dt = time.monotonic() - t0
+        if len(self.history) >= self.min_history:
+            mean = sum(self.history[-20:]) / len(self.history[-20:])
+            if dt > self.factor * mean:
+                checkpoint.save(self.ckpt_dir, step_idx, out[0] if isinstance(out, tuple) else out)
+                self.emergency_saves += 1
+        self.history.append(dt)
+        return out

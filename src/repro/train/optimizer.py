@@ -1,0 +1,75 @@
+"""AdamW, hand-rolled: optimizer states inherit the parameter shardings
+(tree-structure-preserving), global-norm gradient clipping, decoupled weight
+decay, fp32 master moments over bf16-computed grads."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params), "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/scalars
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,125 @@
+"""Train step factory: loss -> grad -> AdamW, with optional microbatch
+gradient accumulation (scan) and the sharding plan applied to params,
+optimizer state and batch.
+
+Fault-tolerance notes (DESIGN.md §2): the step is a pure function of
+(state, batch); combined with the sharded checkpointer (checkpoint.py) and
+the elastic re-partitioner (elastic.py + core.operators.rebalance), a node
+failure is handled by restore -> re-mesh -> resume. Straggler mitigation in
+the BSP setting is per-step: the data pipeline rebalances partitions
+(paper §8) so no worker carries outsized local work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model_zoo import Model
+from .loss import chunked_cross_entropy
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_step", "make_loss_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    opt: AdamWConfig = AdamWConfig()
+    loss_chunk: int = 512
+    moe_aux_weight: float = 0.01
+    microbatches: int = 1          # gradient accumulation steps
+
+
+class TrainState(dict):
+    """{params, opt, step}: plain dict so pytree/sharding handling is trivial."""
+
+
+def init_train_state(model: Model, rng) -> dict:
+    params = model.init_params(rng)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def train_state_specs(model: Model) -> dict:
+    specs = model.param_specs()
+    return {"params": specs, "opt": jax.eval_shape(adamw_init, specs)}
+
+
+def make_loss_fn(model: Model, hp: TrainHParams, plan=None) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        hidden, moe_aux = model.forward(params, batch, plan=plan)
+        # gathered-over-fsdp, still vocab(TP)-sharded for the chunked loss;
+        # custom-vjp reshard keeps the embedding grad in storage layout
+        from .. import sharding as shard_mod
+        if "unembed" in params:
+            emb = shard_mod.use_param(params["unembed"], plan, "unembed")
+        else:
+            emb = shard_mod.use_param(params["embed"], plan, "embed")
+        labels = batch["labels"]
+        mask = batch["loss_mask"].astype(jnp.float32)
+        # vlm: hidden includes the image prefix; score text positions only
+        if hidden.shape[1] != labels.shape[1]:
+            hidden = hidden[:, hidden.shape[1] - labels.shape[1]:]
+        nll, ntok = chunked_cross_entropy(
+            hidden, emb, labels, mask, chunk=min(hp.loss_chunk, labels.shape[1]),
+            final_softcap=cfg.final_logit_softcap, plan=plan)
+        loss = nll + hp.moe_aux_weight * moe_aux
+        return loss, {"nll": nll, "ntok": ntok, "moe_aux": moe_aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, hp: TrainHParams = TrainHParams(), plan=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With hp.microbatches > 1, the leading batch dim is split and gradients
+    accumulate in fp32 through a scan — the standard compute/memory trade
+    (and the hook where DP all-reduce naturally overlaps the next
+    microbatch's backward under XLA's latency-hiding scheduler).
+    """
+    loss_fn = make_loss_fn(model, hp, plan=plan)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        return loss, aux, grads
+
+    def accumulated(params, batch):
+        mb = hp.microbatches
+        split = jax.tree.map(lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+        def body(carry, mbatch):
+            gsum, lsum = carry
+            if plan is not None:
+                mbatch = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, plan.ns(*([plan.dp] + [None] * (x.ndim - 1))))
+                    if x.shape[0] % plan.axis_size(plan.dp) == 0 else x,
+                    mbatch)
+            (loss, aux), grads = grad_fn(params, mbatch)
+            gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, lsum + loss), aux
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), auxs = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), split)
+        grads = jax.tree.map(lambda g: g / mb, gsum)
+        aux = jax.tree.map(lambda x: x[-1], auxs)
+        return lsum / mb, aux, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if hp.microbatches > 1:
+            loss, aux, grads = accumulated(params, batch)
+        else:
+            loss, aux, grads = single(params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(hp.opt, params, grads, state["opt"])
+        metrics = {"loss": loss, **aux, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE (task spec): no XLA_FLAGS here — tests must see the real single CPU
+# device. Multi-device DDF semantics are tested via subprocess re-exec in
+# test_ddf_multidevice.py.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,20 @@
+"""Re-runs the full DDF smoke suite on 8 host devices (real collectives) in
+a subprocess, keeping this pytest process at 1 device (task spec)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_ddf_smoke_on_8_devices():
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts", "smoke_ddf.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, script, "--devices", "8"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]
+    assert "ALL DDF SMOKE TESTS PASSED" in res.stdout

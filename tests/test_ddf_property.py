@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) for DDF invariants."""
+
+import collections
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DDF, DDFContext
+from repro.core.cost_model import (
+    CostParams, choose_groupby_strategy, choose_join_strategy,
+    choose_shuffle_algorithm, pattern_cost, t_allreduce, t_shuffle,
+)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    return DDFContext(mesh=mesh, axes=("data",))
+
+
+_small_tables = st.integers(2, 120).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(0, 30), min_size=n, max_size=n),
+        st.lists(st.integers(-1000, 1000), min_size=n, max_size=n),
+    ))
+
+
+@settings(max_examples=12, deadline=None)
+@given(_small_tables)
+def test_groupby_sum_matches_oracle(ctx, data):
+    keys, vals = data
+    L = {"k": np.asarray(keys, np.int32), "v": np.asarray(vals, np.int32)}
+    d = DDF.from_numpy(L, ctx, capacity=2 * len(keys))
+    G, _ = d.groupby(("k",), {"v": ("sum",)}, pre_combine=True)
+    gg = G.to_numpy()
+    exp = collections.Counter()
+    for k, v in zip(keys, vals):
+        exp[k] += v
+    got = dict(zip(gg["k"].tolist(), gg["v_sum"].tolist()))
+    assert got == dict(exp)
+
+
+@settings(max_examples=12, deadline=None)
+@given(_small_tables)
+def test_sort_is_permutation_and_ordered(ctx, data):
+    keys, vals = data
+    L = {"k": np.asarray(keys, np.int32), "v": np.asarray(vals, np.int32)}
+    d = DDF.from_numpy(L, ctx, capacity=2 * len(keys))
+    S, _ = d.sort_values("v")
+    out = S.to_numpy()["v"]
+    assert np.array_equal(out, np.sort(L["v"]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(_small_tables)
+def test_unique_is_set(ctx, data):
+    keys, _ = data
+    L = {"k": np.asarray(keys, np.int32)}
+    d = DDF.from_numpy(L, ctx, capacity=2 * len(keys))
+    U, _ = d.unique(("k",))
+    assert sorted(U.to_numpy()["k"].tolist()) == sorted(set(keys))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 4096), st.floats(1.0, 1e9), st.floats(1e-9, 1e-3))
+def test_shuffle_cost_monotone_in_bytes(P, n_bytes, beta):
+    p = CostParams()
+    t1 = sum(t_shuffle(P, n_bytes, p))
+    t2 = sum(t_shuffle(P, 2 * n_bytes, p))
+    assert t2 >= t1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.0, 1.0))
+def test_groupby_strategy_crossover(C):
+    """Low cardinality -> combine-shuffle-reduce; high -> plain shuffle
+    (paper §5.4.1)."""
+    pre = choose_groupby_strategy(C)
+    assert pre == (C < 0.5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 1024), st.integers(100_000, 10_000_000))
+def test_join_strategy_small_side_broadcast(P, n_big):
+    """A tiny relation must broadcast; relations too large to replicate must
+    shuffle regardless of comm cost (paper §5.3.7: Modin's broadcast-only
+    joins OOM on same-order relations — a memory failure)."""
+    s_small = choose_join_strategy(n_big, max(n_big // 10000, 1), P, 16.0)
+    assert s_small == "broadcast"
+    # memory guard: replicating >256MB/worker is rejected outright
+    s_huge = choose_join_strategy(1e9, 1e9, P, 16.0)
+    assert s_huge == "shuffle"
+    # and transfer-dominated equal-size relations shuffle on cost too
+    s_equal = choose_join_strategy(n_big, n_big, 8, 16.0)
+    if n_big / 8 * 16.0 > 1e6:
+        assert s_equal == "shuffle"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8192))
+def test_bruck_wins_at_latency_bound(P):
+    """Tiny messages, many workers -> Bruck (log P startup); paper §6.1.1."""
+    alg = choose_shuffle_algorithm(P, n_bytes=64.0)
+    if P >= 64:
+        assert alg == "bruck"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 512), st.floats(0.001, 1.0))
+def test_combine_shuffle_reduce_beats_shuffle_at_low_C(P, C):
+    lo = pattern_cost("combine_shuffle_reduce", P=P, n_rows=1e6, row_bytes=16,
+                      cardinality=C, core_op="groupby")
+    hi = pattern_cost("shuffle_compute", P=P, n_rows=1e6, row_bytes=16,
+                      cardinality=C, core_op="groupby")
+    if C < 0.05:
+        assert lo["comm"] < hi["comm"]  # combine shrinks the shuffle payload
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 512), st.floats(0.05, 1.0))
+def test_sampled_quota_covers_skew(P, frac):
+    """Quota planned from a sampled destination histogram must cover the
+    true per-destination maximum for the sampled distribution (paper §5.4.2)."""
+    import numpy as np
+    from repro.core.patterns import sampled_quota
+    rng = np.random.default_rng(P)
+    n = 4000
+    dest = rng.zipf(1.4, size=n).astype(np.int64) % P  # skewed destinations
+    k = max(int(n * frac), 1)
+    sample = dest[rng.choice(n, size=k, replace=False)]
+    q = sampled_quota(sample.astype(np.int32), capacity=n, num_partitions=P,
+                      sample_fraction=frac, safety=2.0)
+    true_max = np.bincount(dest, minlength=P).max()
+    # full-sample plans always cover; sub-samples cover within safety slack
+    if frac >= 0.99:
+        assert q >= true_max
+    assert q <= n

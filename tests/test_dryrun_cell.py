@@ -1,0 +1,38 @@
+"""Dry-run path smoke: one real (arch x shape x mesh) cell lowered+compiled
+in a subprocess with 256 fake devices — CI coverage for mesh.py, shapes.py,
+sharding.py, dryrun.py and the HLO cost walker working together."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_olmo_train_cell_compiles_and_rooflines():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["DRYRUN_XLA_FLAGS"] = ("--xla_force_host_platform_device_count=256 "
+                               "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = (
+        "import os\n"
+        "from repro.launch.dryrun import run_cell\n"
+        "rec = run_cell('olmo-1b', 'train_4k', multi_pod=False, save=False)\n"
+        "import json; print('REC=' + json.dumps({k: rec[k] for k in ('status','n_devices','flops')}))\n"
+        "assert rec['status'] == 'ok', rec\n"
+        "assert rec['memory']['bytes_per_device'] < 16e9\n"
+        "ro = rec['roofline']\n"
+        "assert ro['model_flops_per_chip'] > 0 and rec['flops'] > 0\n"
+        "assert 0.2 < ro['useful_flops_ratio'] <= 1.5\n"
+    )
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1200, env=env, cwd=ROOT)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("REC=")][0]
+    rec = json.loads(line[4:])
+    assert rec["status"] == "ok" and rec["n_devices"] == 256

@@ -1,0 +1,121 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.launch.shapes import SHAPES, cell_applicable, input_specs
+from repro.models import build_model
+
+
+def _batch_for(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    total = S
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
+        total += cfg.n_patches
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_positions, cfg.d_model)), jnp.float32)
+    return batch, total
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 2, 16
+    batch, total = _batch_for(cfg, B, S)
+    h, aux = jax.jit(model.forward)(params, batch)
+    assert h.shape == (B, total, cfg.d_model)
+    logits = model.unembed(params, h)
+    assert logits.shape == (B, total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    state = model.init_decode_state(B, 32)
+    if cfg.family == "encdec":
+        state["enc_out"] = batch["enc_frames"].astype(jnp.bfloat16)
+    dl, state2 = jax.jit(model.decode_step)(params, state, {"token": batch["tokens"][:, :1]})
+    assert dl.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(dl.astype(jnp.float32)).all())
+    assert int(state2["length"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma2-9b", "mamba2-1.3b",
+                                  "granite-moe-1b-a400m", "llava-next-mistral-7b"])
+def test_prefill_decode_consistency(arch):
+    """Token-by-token decode must reproduce the training-forward logits
+    (same positions, same caches) — catches cache/rope/mask bugs."""
+    cfg = get_smoke_config(arch)
+    # fp32 for a tight comparison
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(1))
+    B, S = 2, 12
+    batch, total = _batch_for(cfg, B, S, seed=3)
+    h, _ = model.forward(params, batch)
+    full_logits = model.unembed(params, h)  # (B, total, V)
+
+    state = model.init_decode_state(B, 32, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        state["enc_out"] = batch["enc_frames"].astype(jnp.float32)
+    step = jax.jit(model.decode_step)
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode starts after image prefix; covered by smoke")
+    outs = []
+    for t in range(S):
+        logits, state = step(params, state, {"token": batch["tokens"][:, t: t + 1]})
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)  # (B, S, V)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    }[cfg.name]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == spec
+    if "moe" in cfg.name:
+        assert (cfg.n_experts, cfg.top_k) == ((40, 8) if "3b" in cfg.name else (32, 8))
+    if cfg.name == "mamba2-1.3b":
+        assert cfg.ssm_state == 128
+    if cfg.name == "zamba2-1.2b":
+        assert cfg.ssm_state == 64
+
+
+def test_long500k_applicability_matches_design():
+    runs = {a for a in ARCHS if cell_applicable(get_config(a), "long_500k")[0]}
+    assert runs == {"llava_next_mistral_7b", "zamba2_1p2b", "mamba2_1p3b", "gemma2_9b"} \
+        or runs == {"llava-next-mistral-7b", "zamba2-1.2b", "mamba2-1.3b", "gemma2-9b"}
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = cell_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs or "token" in specs
+            for v in jax.tree.leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)

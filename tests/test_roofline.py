@@ -1,0 +1,66 @@
+"""HLO cost analyzer: trip-count scaling + collective census correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms, model_flops
+from repro.launch.shapes import SHAPES
+
+
+def test_scan_trip_count_scaling():
+    def step(c, w):
+        return jnp.tanh(c @ w), None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(step, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    comp = jax.jit(f).lower(x, ws).compile()
+    c = hlo_cost.analyze(comp.as_text())
+    assert c.flops == 2 * 64 * 64 * 64 * 5  # 5 trips, not 1
+
+
+def test_nested_scan_scaling():
+    def inner(c, w):
+        return c @ w, None
+
+    def outer(c, ws):
+        c, _ = jax.lax.scan(inner, c, ws)
+        return c, None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 4, 32, 32), jnp.float32)
+    comp = jax.jit(f).lower(x, ws).compile()
+    c = hlo_cost.analyze(comp.as_text())
+    assert c.flops == 2 * 32 * 32 * 32 * 3 * 4
+
+
+def test_model_flops_formula():
+    from repro.configs import get_config
+    cfg = get_config("olmo-1b")
+    cell = SHAPES["train_4k"]
+    mf = model_flops(cfg, cell)
+    # 6 * N * D with D = 256*4096 tokens
+    assert mf == pytest.approx(6 * cfg.num_params() * 256 * 4096)
+    moe = get_config("granite-moe-3b-a800m")
+    assert moe.num_active_params() < moe.num_params()
+
+
+def test_roofline_dominant_term():
+    from repro.configs import get_config
+    cfg = get_config("olmo-1b")
+    r = roofline_terms(cfg, SHAPES["train_4k"], flops=1e12, bytes_accessed=1e9,
+                       collective={"total_bytes": 1e13}, n_chips=256)
+    assert r["dominant"] == "collective"
+    r = roofline_terms(cfg, SHAPES["train_4k"], flops=1e15, bytes_accessed=1e9,
+                       collective={"total_bytes": 1e6}, n_chips=256)
+    assert r["dominant"] == "compute"

@@ -1,0 +1,64 @@
+"""Serving: engine generation, int8 KV-cache accuracy, decode state shapes."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def test_engine_generates():
+    cfg = get_smoke_config("olmo-1b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = ServeEngine(model, params, max_len=64)
+    outs = eng.generate([[1, 2, 3], [4, 5, 6, 7]], max_new=8)
+    assert len(outs) == 2
+    assert len(outs[0]) == 3 + 8 and len(outs[1]) == 4 + 8
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+
+
+def test_engine_deterministic():
+    cfg = get_smoke_config("gemma2-9b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(1))
+    eng = ServeEngine(model, params, max_len=64)
+    a = eng.generate([[1, 2, 3]], max_new=6)
+    b = eng.generate([[1, 2, 3]], max_new=6)
+    assert a == b
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "granite-moe-1b-a400m"])
+def test_int8_kv_cache_close_to_bf16(arch):
+    """int8 KV (production decode default in the dry-run) must track the
+    fp32-cache decode logits closely."""
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    model_fp = build_model(cfg)
+    model_q = build_model(dataclasses.replace(cfg, kv_quant_decode=True))
+    params = model_fp.init_params(jax.random.key(2))
+
+    B, S = 2, 10
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+
+    st_fp = model_fp.init_decode_state(B, 32, dtype=jnp.float32)
+    st_q = model_q.init_decode_state(B, 32, dtype=jnp.float32)
+    assert st_q["kv"].k.dtype == jnp.int8
+    step_fp = jax.jit(model_fp.decode_step)
+    step_q = jax.jit(model_q.decode_step)
+    errs = []
+    for t in range(S):
+        batch = {"token": jnp.asarray(toks[:, t: t + 1])}
+        lf, st_fp = step_fp(params, st_fp, batch)
+        lq, st_q = step_q(params, st_q, batch)
+        scale = float(jnp.max(jnp.abs(lf))) + 1e-6
+        errs.append(float(jnp.max(jnp.abs(lf - lq))) / scale)
+    assert max(errs) < 0.05, errs  # <5% relative logit error
+    # and the argmax decisions should essentially agree
+    agree = float(jnp.mean((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).astype(jnp.float32)))
+    assert agree >= 0.5
