@@ -8,6 +8,7 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
   Fig 7/8  -> bench_join_breakdown (join comm/comp, strong+weak scaling)
   Fig 10/11+Table 5 -> bench_scaling (Summit-style scaling + projection)
   Fig 12   -> bench_vs_naive       (patterns vs baseline strategies)
+  ISSUE 1  -> bench_pipeline       (monolithic vs pipelined chunked shuffle)
 """
 
 import os
@@ -20,6 +21,7 @@ BENCHES = [
     "benchmarks.bench_join_breakdown",
     "benchmarks.bench_scaling",
     "benchmarks.bench_vs_naive",
+    "benchmarks.bench_pipeline",
 ]
 
 

@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import operators, patterns
+from ..compat import shard_map
 from .comm.communicator import Communicator, make_communicator
 from .dataframe import Table
 from .local_ops import select as local_select
@@ -96,8 +97,8 @@ def _build_op(ctx: DDFContext, fn: Callable, arg_schemas: tuple) -> Callable:
     # Every output leaf carries a leading per-worker axis (table columns have
     # their capacity dim; nvalid is reshaped (1,); aux leaves get [None]), so
     # a single prefix spec shards the whole output pytree.
-    sm = jax.shard_map(wrapper, mesh=ctx.mesh, in_specs=tuple(in_specs),
-                       out_specs=spec, check_vma=False)
+    sm = shard_map(wrapper, mesh=ctx.mesh, in_specs=tuple(in_specs),
+                   out_specs=spec, check_vma=False)
     return jax.jit(sm)
 
 
@@ -201,12 +202,19 @@ class DDF:
 
     # -- loosely synchronous ----------------------------------------------------
     def join(self, other: "DDF", on: Sequence[str], strategy: str = "auto",
-             quota: int | None = None, capacity: int | None = None):
+             quota: int | None = None, capacity: int | None = None,
+             num_chunks: int | None = None):
+        """Equi-join. ``strategy="auto"`` lets the planner pick hash-shuffle
+        vs broadcast AND the shuffle pipeline depth from the cost model;
+        ``num_chunks`` overrides the depth (1 = monolithic all-to-all)."""
         on = tuple(on)
         nw = self.ctx.nworkers
         if strategy == "auto":
             plan = patterns.plan_join(self.num_rows(), other.num_rows(), nw, self.capacity)
             strategy = plan.strategy
+            if num_chunks is None:
+                num_chunks = plan.num_chunks
+        num_chunks = num_chunks or 1
         quota = quota or default_quota(self.capacity, nw)
         capacity = capacity or 2 * self.capacity
         if strategy == "broadcast":
@@ -214,63 +222,88 @@ class DDF:
             return big._run(("bjoin", on, capacity),
                             lambda comm, b, s: operators.dist_join_broadcast(comm, b, s, on, capacity),
                             small)
-        return self._run(("join", on, quota, capacity),
-                         lambda comm, l, r: operators.dist_join_shuffle(comm, l, r, on, quota, capacity),
+        return self._run(("join", on, quota, capacity, num_chunks),
+                         lambda comm, l, r: operators.dist_join_shuffle(
+                             comm, l, r, on, quota, capacity, num_chunks=num_chunks),
                          other)
 
     def groupby(self, by: Sequence[str], aggs: Mapping[str, Sequence[str]],
                 pre_combine: bool | None = None, cardinality_hint: float | None = None,
-                quota: int | None = None, capacity: int | None = None):
+                quota: int | None = None, capacity: int | None = None,
+                num_chunks: int | None = None):
+        """GroupBy-aggregate. With ``pre_combine=None`` the planner picks
+        combine-shuffle-reduce vs plain shuffle (from ``cardinality_hint``)
+        and the shuffle pipeline depth from table sizes. A pinned
+        ``pre_combine`` skips planning entirely (no device->host row-count
+        sync) and defaults to the monolithic shuffle — pass ``num_chunks``
+        explicitly to pipeline on that path."""
         by = tuple(by)
         aggs = {k: tuple(v) for k, v in aggs.items()}
         nw = self.ctx.nworkers
         if pre_combine is None:
-            from .cost_model import choose_groupby_strategy
-            pre_combine = choose_groupby_strategy(
-                cardinality_hint if cardinality_hint is not None else 0.0)
+            # planning reads row counts (a blocking device->host sync), so it
+            # only runs when the caller left the strategy to the planner.
+            card = cardinality_hint if cardinality_hint is not None else 0.0
+            plan = patterns.plan_groupby(card, nw, capacity or self.capacity,
+                                         n_rows=self.num_rows())
+            pre_combine = plan.strategy == "combine_shuffle_reduce"
+            if num_chunks is None:
+                num_chunks = plan.num_chunks
+        num_chunks = num_chunks or 1
         quota = quota or default_quota(self.capacity, nw)
         capacity = capacity or self.capacity
-        key = ("groupby", by, tuple(sorted(aggs.items())), pre_combine, quota, capacity)
+        key = ("groupby", by, tuple(sorted(aggs.items())), pre_combine, quota,
+               capacity, num_chunks)
         return self._run(key, lambda comm, t: operators.dist_groupby(
-            comm, t, by, aggs, quota, capacity, pre_combine))
+            comm, t, by, aggs, quota, capacity, pre_combine, num_chunks=num_chunks))
 
-    def unique(self, subset: Sequence[str], quota: int | None = None, capacity: int | None = None):
+    def unique(self, subset: Sequence[str], quota: int | None = None, capacity: int | None = None,
+               num_chunks: int = 1):
+        """Distinct rows by ``subset`` key columns (combine-shuffle-reduce)."""
         subset = tuple(subset)
         nw = self.ctx.nworkers
         quota = quota or default_quota(self.capacity, nw)
         capacity = capacity or self.capacity
-        return self._run(("unique", subset, quota, capacity),
-                         lambda comm, t: operators.dist_unique(comm, t, subset, quota, capacity))
+        return self._run(("unique", subset, quota, capacity, num_chunks),
+                         lambda comm, t: operators.dist_unique(
+                             comm, t, subset, quota, capacity, num_chunks=num_chunks))
 
     def union(self, other: "DDF", on: Sequence[str], quota: int | None = None,
-              capacity: int | None = None):
+              capacity: int | None = None, num_chunks: int = 1):
+        """Set union by key (concat + distributed unique, paper Table 2)."""
         on = tuple(on)
         nw = self.ctx.nworkers
         cap = self.capacity + other.capacity
         quota = quota or default_quota(cap, nw)
         capacity = capacity or cap
-        return self._run(("union", on, quota, capacity),
-                         lambda comm, l, r: operators.dist_union(comm, l, r, on, quota, capacity),
+        return self._run(("union", on, quota, capacity, num_chunks),
+                         lambda comm, l, r: operators.dist_union(
+                             comm, l, r, on, quota, capacity, num_chunks=num_chunks),
                          other)
 
     def difference(self, other: "DDF", on: Sequence[str], quota: int | None = None,
-                   capacity: int | None = None):
+                   capacity: int | None = None, num_chunks: int = 1):
+        """Set difference by key (co-partition + local anti-join)."""
         on = tuple(on)
         nw = self.ctx.nworkers
         quota = quota or default_quota(self.capacity, nw)
         capacity = capacity or self.capacity
-        return self._run(("difference", on, quota, capacity),
-                         lambda comm, l, r: operators.dist_difference(comm, l, r, on, quota, capacity),
+        return self._run(("difference", on, quota, capacity, num_chunks),
+                         lambda comm, l, r: operators.dist_difference(
+                             comm, l, r, on, quota, capacity, num_chunks=num_chunks),
                          other)
 
     def sort_values(self, by: str, descending: bool = False, quota: int | None = None,
-                    capacity: int | None = None):
+                    capacity: int | None = None, num_chunks: int = 1):
+        """Global sample sort by ``by``; partition i gets the i-th key range.
+        ``num_chunks`` > 1 pipelines the range shuffle against the merge."""
         nw = self.ctx.nworkers
         quota = quota or default_quota(self.capacity, nw, safety=3.0)
         capacity = capacity or 2 * self.capacity
-        return self._run(("sort", by, descending, quota, capacity),
+        return self._run(("sort", by, descending, quota, capacity, num_chunks),
                          lambda comm, t: operators.dist_sort(
-                             comm, t, by, quota, capacity, descending=descending))
+                             comm, t, by, quota, capacity, descending=descending,
+                             num_chunks=num_chunks))
 
     def agg(self, column: str, op: str):
         out = self._run(("agg", column, op),
@@ -295,10 +328,12 @@ class DDF:
         return self._run(("transpose", self.capacity),
                          lambda comm, t: operators.dist_transpose(comm, t))
 
-    def rebalance(self, quota: int | None = None):
+    def rebalance(self, quota: int | None = None, num_chunks: int = 1):
+        """Evenly redistribute rows across workers, preserving global order."""
         quota = quota or self.capacity
-        return self._run(("rebalance", quota),
-                         lambda comm, t: operators.rebalance(comm, t, quota))
+        return self._run(("rebalance", quota, num_chunks),
+                         lambda comm, t: operators.rebalance(
+                             comm, t, quota, num_chunks=num_chunks))
 
     def head(self, k: int) -> "DDF":
         return self._run(("head", k), lambda comm, t: operators.dist_head(comm, t, k))

@@ -19,6 +19,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from ...compat import axis_size
 from ..dataframe import Table
 
 __all__ = ["shift", "send_recv", "halo_exchange"]
@@ -31,7 +32,7 @@ def _ring_perm(P: int, offset: int) -> list[tuple[int, int]]:
 def shift(x: jax.Array, axis, offset: int = 1) -> jax.Array:
     """Every worker sends ``x`` to rank+offset (mod P) and receives from
     rank-offset."""
-    P = jax.lax.axis_size(axis)
+    P = axis_size(axis)
     return jax.lax.ppermute(x, axis, perm=_ring_perm(P, offset))
 
 
@@ -49,7 +50,7 @@ def halo_exchange(tail: jax.Array, head: jax.Array, axis) -> tuple[jax.Array, ja
     and next worker's head. Edge workers receive zeros (non-wrapping windows),
     which callers mask by global position.
     """
-    P = jax.lax.axis_size(axis)
+    P = axis_size(axis)
     left = jax.lax.ppermute(tail, axis, perm=[(i, i + 1) for i in range(P - 1)])
     right = jax.lax.ppermute(head, axis, perm=[(i + 1, i) for i in range(P - 1)])
     return left, right

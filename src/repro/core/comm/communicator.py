@@ -68,9 +68,32 @@ class Communicator:
 
     # -- table routines (paper Table 1 "Common" column)
     def shuffle(self, table: Table, dest, quota: int, capacity: int | None = None,
-                algorithm: str = "native"):
+                algorithm: str = "native", num_chunks: int = 1):
+        """Shuffle live rows to ``dest`` partitions.
+
+        ``num_chunks > 1`` routes through the pipelined chunked engine
+        (bit-exact with the monolithic path; see
+        :func:`collectives.shuffle_table_pipelined`). ``algorithm`` selects
+        the monolithic all-to-all flavor and only applies at ``num_chunks=1``
+        — combining a non-native algorithm with chunking is an error rather
+        than a silent fallback.
+        """
+        if num_chunks > 1:
+            if algorithm != "native":
+                raise ValueError(
+                    f"algorithm={algorithm!r} is only available for the "
+                    "monolithic shuffle (num_chunks=1); the pipelined engine "
+                    "is native all-to-all only")
+            return collectives.shuffle_table_pipelined(
+                table, dest, self.axis, quota, num_chunks, capacity)
         return collectives.shuffle_table(table, dest, self.axis, quota, capacity,
                                          algorithm=algorithm)
+
+    def shuffle_pipelined(self, table: Table, dest, quota: int, num_chunks: int,
+                          capacity: int | None = None):
+        """Pipelined chunked shuffle (always chunked, even at K=1)."""
+        return collectives.shuffle_table_pipelined(
+            table, dest, self.axis, quota, num_chunks, capacity)
 
     def allgather(self, table: Table, capacity: int | None = None) -> Table:
         return collectives.allgather_table(table, self.axis, capacity)
@@ -106,6 +129,7 @@ class Communicator:
 
 
 def make_communicator(axis, fabric: str | FabricProfile = "ici") -> Communicator:
+    """Communicator over mesh ``axis`` with fabric "ici" | "dcn" | "host"."""
     if isinstance(fabric, str):
         fabric = {"ici": ICI, "dcn": DCN, "host": HOST}[fabric]
     return Communicator(axis=axis, fabric=fabric)

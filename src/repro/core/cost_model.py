@@ -22,6 +22,7 @@ from .comm.communicator import DCN, HOST, ICI, FabricProfile
 __all__ = [
     "CostParams",
     "t_shuffle",
+    "t_shuffle_pipelined",
     "t_allgather",
     "t_broadcast",
     "t_reduce",
@@ -32,6 +33,7 @@ __all__ = [
     "choose_join_strategy",
     "choose_groupby_strategy",
     "choose_shuffle_algorithm",
+    "choose_chunk_count",
 ]
 
 
@@ -39,8 +41,12 @@ __all__ = [
 class CostParams:
     """Hockney (alpha, beta) + local-compute calibration.
 
-    gamma_s_per_row: per-row local processing constant (calibrated by
-    benchmarks/bench_local_ops.py; default from CPU microbenchmarks).
+    Attributes:
+      fabric: the interconnect profile supplying alpha [s/message] and
+        beta [s/byte] (ICI within a pod, DCN across pods, HOST on CPU).
+      gamma_s_per_row: per-row local processing constant [s/row]
+        (calibrated by benchmarks/bench_local_ops.py; default from CPU
+        microbenchmarks).
     """
 
     fabric: FabricProfile = ICI
@@ -48,10 +54,12 @@ class CostParams:
 
     @property
     def alpha(self) -> float:
+        """Per-message startup latency in seconds (Hockney alpha)."""
         return self.fabric.alpha_s
 
     @property
     def beta(self) -> float:
+        """Per-byte transfer time in seconds/byte (Hockney beta = 1/BW)."""
         return self.fabric.beta_s_per_byte
 
 
@@ -60,6 +68,17 @@ class CostParams:
 # payload of n bytes across P workers.
 
 def t_shuffle(P: int, n_bytes: float, p: CostParams, algorithm: str = "isend-irecv"):
+    """All-to-all shuffle cost (paper Table 3).
+
+    Args:
+      P: number of workers.
+      n_bytes: per-worker payload in bytes (the paper's bold-n).
+      p: Hockney/compute calibration (alpha [s], beta [s/B]).
+      algorithm: "isend-irecv" | "ring" | "pairwise" | "bruck".
+
+    Returns:
+      (T_startup, T_transfer, T_reduce) in seconds; sum for wall time.
+    """
     a, b = p.alpha, p.beta
     if algorithm == "isend-irecv":
         return ((P - 1) * a, (P - 1) / P * n_bytes * b, 0.0)
@@ -73,7 +92,89 @@ def t_shuffle(P: int, n_bytes: float, p: CostParams, algorithm: str = "isend-ire
     raise ValueError(algorithm)
 
 
+def t_shuffle_pipelined(
+    P: int,
+    n_bytes: float,
+    num_chunks: int,
+    p: CostParams,
+    core_s: float = 0.0,
+    algorithm: str = "isend-irecv",
+) -> float:
+    """Wall time of the K-chunk pipelined shuffle (comm/compute overlap).
+
+    With the payload split into K chunks, chunk ``i+1``'s transfer overlaps
+    chunk ``i``'s local merge/compute, so the steady state runs at
+    ``max(T_comm_chunk, T_core_chunk)`` per chunk and only the pipeline
+    fill/drain is exposed:
+
+        T ≈ t_comm + t_core + (K-1) * max(t_comm, t_core)
+
+    where ``t_comm = T_startup + T_transfer/K`` (every chunk pays the full
+    per-message startup — the alpha term that bounds useful K) and
+    ``t_core = core_s / K``.
+
+    Args:
+      P: number of workers.
+      n_bytes: per-worker *total* payload in bytes.
+      num_chunks: pipeline depth K >= 1 (K=1 is the monolithic shuffle).
+      p: Hockney/compute calibration.
+      core_s: total local compute to overlap against, in seconds (e.g. the
+        merge/compact leg of the pattern using the shuffle).
+      algorithm: monolithic collective flavor used per chunk.
+
+    Returns:
+      Estimated wall seconds for the shuffle + overlapped compute.
+    """
+    K = max(int(num_chunks), 1)
+    s, x, r = t_shuffle(P, n_bytes / K, p, algorithm)
+    t_comm = s + x + r  # startup is paid per chunk: t_shuffle already has it
+    t_core = core_s / K
+    return t_comm + t_core + (K - 1) * max(t_comm, t_core)
+
+
+def choose_chunk_count(
+    P: int,
+    n_bytes: float,
+    p: CostParams = CostParams(),
+    core_s: float = 0.0,
+    max_chunks: int = 32,
+    min_chunk_bytes: float = 4096.0,
+) -> int:
+    """Pick the pipeline depth K minimizing :func:`t_shuffle_pipelined`.
+
+    Scans K over powers of two up to ``max_chunks``, rejecting chunk sizes
+    below ``min_chunk_bytes`` (tiny chunks are pure startup overhead and
+    their timing is noise-dominated). Returns K=1 (monolithic) whenever
+    pipelining does not beat the single all-to-all — the planner can treat
+    ``K > 1`` as "use the pipelined engine".
+
+    Args:
+      P: number of workers.
+      n_bytes: per-worker total shuffle payload in bytes.
+      p: Hockney/compute calibration.
+      core_s: overlappable local compute in seconds.
+      max_chunks: largest K considered.
+      min_chunk_bytes: smallest per-chunk payload worth a message.
+
+    Returns:
+      The chosen chunk count K >= 1.
+    """
+    best_k, best_t = 1, t_shuffle_pipelined(P, n_bytes, 1, p, core_s)
+    k = 2
+    while k <= max_chunks:
+        if n_bytes / k >= min_chunk_bytes:
+            t = t_shuffle_pipelined(P, n_bytes, k, p, core_s)
+            if t < best_t:
+                best_k, best_t = k, t
+        k *= 2
+    return best_k
+
+
 def t_allgather(P: int, n_bytes: float, p: CostParams, algorithm: str = "ring"):
+    """AllGather cost (paper Table 3): every worker ends with all N bytes.
+
+    Args/returns as :func:`t_shuffle`; total moved is ``P * n_bytes``.
+    """
     a, b = p.alpha, p.beta
     total = P * n_bytes  # paper's N: allgather moves the whole table
     if algorithm == "ring":
@@ -84,6 +185,10 @@ def t_allgather(P: int, n_bytes: float, p: CostParams, algorithm: str = "ring"):
 
 
 def t_broadcast(P: int, n_bytes: float, p: CostParams, algorithm: str = "binomial"):
+    """Broadcast cost (paper Table 3): root's n bytes reach all P workers.
+
+    Returns (T_startup, T_transfer, T_reduce) in seconds.
+    """
     a, b = p.alpha, p.beta
     lg = math.log2(max(P, 2))
     if algorithm == "binomial":
@@ -94,6 +199,10 @@ def t_broadcast(P: int, n_bytes: float, p: CostParams, algorithm: str = "binomia
 
 
 def t_reduce(P: int, n_bytes: float, p: CostParams, algorithm: str = "binomial"):
+    """Reduce-to-root cost (paper Table 3); third term is reduction compute.
+
+    Returns (T_startup, T_transfer, T_reduce) in seconds.
+    """
     a, b = p.alpha, p.beta
     lg = math.log2(max(P, 2))
     if algorithm == "binomial":
@@ -104,6 +213,10 @@ def t_reduce(P: int, n_bytes: float, p: CostParams, algorithm: str = "binomial")
 
 
 def t_allreduce(P: int, n_bytes: float, p: CostParams, algorithm: str = "reduce-scatter-allgather"):
+    """AllReduce cost (paper Table 3): all workers end with the reduction.
+
+    Returns (T_startup, T_transfer, T_reduce) in seconds.
+    """
     a, b = p.alpha, p.beta
     lg = math.log2(max(P, 2))
     if algorithm == "binomial":
@@ -141,6 +254,17 @@ LOCAL_COSTS: dict[str, Callable[[float, float, CostParams], float]] = {
 
 
 def t_local(op: str, n_rows: float, cardinality: float = 1.0, p: CostParams = CostParams()) -> float:
+    """Core local operator cost (paper Table 4).
+
+    Args:
+      op: a key of :data:`LOCAL_COSTS` (e.g. "hash_join", "sort", "groupby").
+      n_rows: local rows processed (the paper's bold-n, in rows).
+      cardinality: key cardinality fraction C in (0, 1].
+      p: calibration; uses ``gamma_s_per_row`` [s/row].
+
+    Returns:
+      Estimated local seconds.
+    """
     return LOCAL_COSTS[op](n_rows, cardinality, p)
 
 
@@ -156,8 +280,27 @@ def pattern_cost(
     core_op: str = "map",
     params: CostParams = CostParams(),
     shuffle_algorithm: str = "isend-irecv",
+    num_chunks: int = 1,
 ) -> dict[str, float]:
-    """Estimated wall time breakdown {core, aux, comm, total} per worker."""
+    """Estimated wall time breakdown {core, aux, comm, total} per worker.
+
+    Args:
+      pattern: a key of :data:`repro.core.patterns.PATTERNS`.
+      P: number of workers.
+      n_rows: rows per worker (bold-n in rows).
+      row_bytes: bytes per row (converts rows -> bytes for comm terms).
+      cardinality: key cardinality fraction C in (0, 1].
+      core_op: the core local operator (a :data:`LOCAL_COSTS` key).
+      params: Hockney + gamma calibration.
+      shuffle_algorithm: collective flavor for shuffle-based patterns.
+      num_chunks: pipeline depth K for shuffle-based patterns. With K > 1
+        the shuffle and the core op overlap
+        (:func:`t_shuffle_pipelined`), so ``total < core + aux + comm``;
+        the component terms still report the unoverlapped costs.
+
+    Returns:
+      {"core", "aux", "comm", "total"} in seconds.
+    """
     p = params
     n_bytes = n_rows * row_bytes
     C = cardinality
@@ -168,6 +311,10 @@ def pattern_cost(
         aux = t_local("map", n_rows, C, p)  # hash partition is a map
         comm = _sum3(t_shuffle(P, n_bytes, p, shuffle_algorithm))
         core = t_local(core_op, n_rows, C, p)
+        if num_chunks > 1:
+            piped = t_shuffle_pipelined(P, n_bytes, num_chunks, p,
+                                        core_s=core, algorithm=shuffle_algorithm)
+            return {"core": core, "aux": aux, "comm": comm, "total": aux + piped}
         return _pack(core, aux, comm)
     if pattern == "sample_shuffle_compute":
         aux = t_local("sort", n_rows, C, p) + t_local("map", n_rows, C, p)
@@ -179,6 +326,11 @@ def pattern_cost(
         aux = t_local("map", n_rows * C, C, p)
         comm = _sum3(t_shuffle(P, n_bytes * C, p, shuffle_algorithm))
         core2 = t_local(core_op, n_rows * C, C, p)
+        if num_chunks > 1:
+            piped = t_shuffle_pipelined(P, n_bytes * C, num_chunks, p,
+                                        core_s=core2, algorithm=shuffle_algorithm)
+            return {"core": core1 + core2, "aux": aux, "comm": comm,
+                    "total": core1 + aux + piped}
         return _pack(core1 + core2, aux, comm)
     if pattern == "broadcast_compute":
         # broadcast the small relation (n here = small side), join locally

@@ -90,6 +90,7 @@ class Table:
 # -- constructors -----------------------------------------------------------
 
 def from_arrays(columns: Mapping[str, jax.Array], nvalid=None) -> Table:
+    """Build a Table from same-capacity arrays; nvalid defaults to capacity."""
     cols = {k: jnp.asarray(v) for k, v in columns.items()}
     caps = {v.shape[0] for v in cols.values()}
     if len(caps) != 1:
@@ -101,6 +102,7 @@ def from_arrays(columns: Mapping[str, jax.Array], nvalid=None) -> Table:
 
 
 def empty(schema: Mapping[str, jnp.dtype], capacity: int) -> Table:
+    """All-padding Table (nvalid=0) with the given schema and capacity."""
     cols = {k: jnp.zeros((capacity,), dtype=d) for k, d in schema.items()}
     return Table(cols, jnp.asarray(0, jnp.int32))
 
@@ -136,6 +138,7 @@ def compact(table: Table, keep: jax.Array, capacity: int | None = None) -> Table
 
 
 def head(table: Table, n: int) -> Table:
+    """First n rows of the local partition (capacity shrinks to n)."""
     cols = {k: v[:n] for k, v in table.columns.items()}
     return Table(cols, jnp.minimum(table.nvalid, n))
 

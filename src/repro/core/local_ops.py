@@ -60,10 +60,12 @@ def select(table: Table, pred) -> Table:
 
 
 def project(table: Table, names: Sequence[str]) -> Table:
+    """Column projection. O(c) — zero-copy column selection."""
     return table.select_columns(names)
 
 
 def row_aggregate(table: Table, names: Sequence[str], out: str, op: str = "sum") -> Table:
+    """Per-row aggregate across columns -> new column ``out`` (paper §5.3.1)."""
     cols = [table.columns[n] for n in names]
     stack = jnp.stack(cols, axis=0)
     if op == "sum":
@@ -141,6 +143,7 @@ def _adjacent_new_group(sorted_table: Table, key_columns: Sequence[str]) -> jax.
 # -- unique (hash dedup, paper Table 4: O(n), output O(nC)) --------------------
 
 def local_unique(table: Table, key_columns: Sequence[str], capacity: int | None = None) -> Table:
+    """Deduplicate rows by key columns (first occurrence wins; hash-exact)."""
     st, _, _ = _sorted_by_key_hash(table, key_columns)
     keep = _adjacent_new_group(st, key_columns) & valid_mask(st)
     return compact(st, keep, capacity=capacity)

@@ -62,14 +62,29 @@ def dist_join_shuffle(
     key_columns: Sequence[str],
     quota: int,
     capacity: int,
+    num_chunks: int = 1,
 ) -> tuple[Table, dict]:
     """Hash-shuffle join: co-partition both relations by key hash, then join
-    locally. T = O(n) part + O(P) + O((P-1)/P * n) comm + T_core (paper §5.3.2)."""
+    locally. T = O(n) part + O(P) + O((P-1)/P * n) comm + T_core (paper §5.3.2).
+
+    Args:
+      comm: communicator bound to the row-partition axis (inside shard_map).
+      left, right: local partitions of the two relations (same key schema).
+      key_columns: equi-join key column names.
+      quota: per-destination shuffle slots (static-shape contract).
+      capacity: output table capacity (join pairs beyond it overflow).
+      num_chunks: shuffle pipeline depth K; K > 1 uses the pipelined chunked
+        engine (bit-exact, overlaps transfer with the local join leg).
+
+    Returns:
+      (joined table, {"overflow_left", "overflow_right", "overflow_join"})
+      — overflow counters are zero for well-sized quota/capacity.
+    """
     P = comm.size()
     dl = hash_partition_ids(left, key_columns, P)
     dr = hash_partition_ids(right, key_columns, P)
-    lsh, ovl = comm.shuffle(left, dl, quota)
-    rsh, ovr = comm.shuffle(right, dr, quota)
+    lsh, ovl = comm.shuffle(left, dl, quota, num_chunks=num_chunks)
+    rsh, ovr = comm.shuffle(right, dr, quota, num_chunks=num_chunks)
     out, ovj = local_join(lsh, rsh, key_columns, capacity)
     return out, {"overflow_left": ovl, "overflow_right": ovr, "overflow_join": ovj}
 
@@ -100,17 +115,32 @@ def dist_groupby(
     quota: int,
     capacity: int,
     pre_combine: bool = True,
+    num_chunks: int = 1,
 ) -> tuple[Table, dict]:
     """GroupBy-aggregate. pre_combine=True is the Combine-Shuffle-Reduce
     pattern (efficient at low cardinality C); False degenerates to plain
-    Shuffle-Compute (better when C ~ 1, paper §5.4.1)."""
+    Shuffle-Compute (better when C ~ 1, paper §5.4.1).
+
+    Args:
+      comm: communicator bound to the row-partition axis.
+      table: local partition of the grouped relation.
+      key_columns: group-key column names.
+      aggs: value column -> aggregation ops ("sum"/"count"/"min"/"max"/"mean").
+      quota: per-destination shuffle slots.
+      capacity: output capacity (>= distinct keys landing on this worker).
+      pre_combine: combine locally before the shuffle (paper §5.4.1).
+      num_chunks: shuffle pipeline depth K (K > 1 = pipelined chunked engine).
+
+    Returns:
+      (aggregated table, {"overflow_shuffle": rows dropped at the shuffle}).
+    """
     P = comm.size()
     if pre_combine:
         partial = local_groupby(table, key_columns, aggs, merge=False)
     else:
         partial = table
     dest = hash_partition_ids(partial, key_columns, P)
-    shuf, ov = comm.shuffle(partial, dest, quota)
+    shuf, ov = comm.shuffle(partial, dest, quota, num_chunks=num_chunks)
     if pre_combine:
         red = local_groupby(shuf, key_columns, aggs, capacity=capacity, merge=True)
     else:
@@ -126,11 +156,18 @@ def dist_unique(
     quota: int,
     capacity: int,
     pre_combine: bool = True,
+    num_chunks: int = 1,
 ) -> tuple[Table, dict]:
+    """Distinct rows by key (Combine-Shuffle-Reduce, paper §5.3.4): local
+    dedup (optional), hash-shuffle by key, local dedup of the merged rows.
+
+    Args mirror :func:`dist_groupby`; ``num_chunks`` > 1 pipelines the
+    shuffle. Returns (deduplicated table, {"overflow_shuffle"}).
+    """
     P = comm.size()
     t = local_unique(table, key_columns) if pre_combine else table
     dest = hash_partition_ids(t, key_columns, P)
-    shuf, ov = comm.shuffle(t, dest, quota)
+    shuf, ov = comm.shuffle(t, dest, quota, num_chunks=num_chunks)
     out = local_unique(shuf, key_columns, capacity=capacity)
     return out, {"overflow_shuffle": ov}
 
@@ -142,10 +179,12 @@ def dist_union(
     key_columns: Sequence[str],
     quota: int,
     capacity: int,
+    num_chunks: int = 1,
 ) -> tuple[Table, dict]:
     """Set union = concat + distributed unique (paper Table 2)."""
     both = concat(left, right)
-    return dist_unique(comm, both, key_columns, quota, capacity)
+    return dist_unique(comm, both, key_columns, quota, capacity,
+                       num_chunks=num_chunks)
 
 
 def dist_difference(
@@ -155,13 +194,14 @@ def dist_difference(
     key_columns: Sequence[str],
     quota: int,
     capacity: int,
+    num_chunks: int = 1,
 ) -> tuple[Table, dict]:
     """Set difference: co-partition by key hash, local anti-join."""
     P = comm.size()
     dl = hash_partition_ids(left, key_columns, P)
     dr = hash_partition_ids(right, key_columns, P)
-    lsh, ovl = comm.shuffle(left, dl, quota)
-    rsh, ovr = comm.shuffle(right, dr, quota)
+    lsh, ovl = comm.shuffle(left, dl, quota, num_chunks=num_chunks)
+    rsh, ovr = comm.shuffle(right, dr, quota, num_chunks=num_chunks)
     out = local_anti_join(lsh, rsh, key_columns, capacity=capacity)
     return out, {"overflow_left": ovl, "overflow_right": ovr}
 
@@ -176,12 +216,28 @@ def dist_sort(
     capacity: int,
     descending: bool = False,
     samples_per_worker: int | None = None,
+    num_chunks: int = 1,
 ) -> tuple[Table, dict]:
     """Sample sort with regular sampling (Li et al., paper §5.3.3).
 
     local sort -> regular sample -> allgather samples -> pivots -> range
     partition -> shuffle -> local merge(sort). Output: partition i holds the
     globally i-th key range, locally sorted.
+
+    Args:
+      comm: communicator bound to the row-partition axis.
+      table: local partition to sort.
+      key_column: sort key column name.
+      quota: per-destination shuffle slots (range partitions can skew —
+        size from sampled histograms).
+      capacity: output capacity per partition.
+      descending: sort direction.
+      samples_per_worker: regular-sampling density (default max(P, 2)).
+      num_chunks: shuffle pipeline depth K; K > 1 overlaps the range
+        shuffle against the local merge sort.
+
+    Returns:
+      (sorted table, {"overflow_shuffle", "pivots"}).
     """
     P = comm.size()
     s = samples_per_worker or max(P, 2)
@@ -206,7 +262,7 @@ def dist_sort(
     ranks = jnp.clip(ranks, 0, P * s - 1)
     pivots = all_sorted[ranks]
     dest = range_partition_ids(st, key_column, pivots, P, descending=descending)
-    shuf, ov = comm.shuffle(st, dest, quota, capacity=capacity)
+    shuf, ov = comm.shuffle(st, dest, quota, capacity=capacity, num_chunks=num_chunks)
     out = local_sort(shuf, [key_column], descending=descending)
     return out, {"overflow_shuffle": ov, "pivots": pivots}
 
@@ -287,12 +343,14 @@ def _exclusive_prefix_count(comm: Communicator, n: jax.Array) -> jax.Array:
 
 # -- Partitioned I/O / rebalance (paper §5.3.8, §8) --------------------------------
 
-def rebalance(comm: Communicator, table: Table, quota: int, capacity: int | None = None) -> tuple[Table, dict]:
+def rebalance(comm: Communicator, table: Table, quota: int, capacity: int | None = None,
+              num_chunks: int = 1) -> tuple[Table, dict]:
     """Evenly redistribute rows across workers preserving global order.
 
     This is the paper's §8 "sample-based repartitioning" answer to load
     imbalance / elastic rescale, exact rather than sampled because counts are
-    one AllGather away.
+    one AllGather away. ``num_chunks`` > 1 pipelines the redistribution
+    shuffle.
     """
     P = comm.size()
     n = table.nvalid
@@ -305,7 +363,7 @@ def rebalance(comm: Communicator, table: Table, quota: int, capacity: int | None
     gidx = my_offset + jnp.arange(table.capacity, dtype=jnp.int32)
     dest = jnp.searchsorted(cum_targets, gidx, side="right").astype(jnp.int32)
     dest = jnp.where(valid_mask(table), jnp.clip(dest, 0, P - 1), P)
-    out, ov = comm.shuffle(table, dest, quota, capacity=capacity)
+    out, ov = comm.shuffle(table, dest, quota, capacity=capacity, num_chunks=num_chunks)
     return out, {"overflow_shuffle": ov}
 
 

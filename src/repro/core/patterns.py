@@ -49,10 +49,23 @@ PATTERNS: dict[str, dict] = {
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
+    """Host-side execution plan for one distributed operator.
+
+    Attributes:
+      strategy: pattern variant to execute (e.g. "shuffle" vs "broadcast").
+      quota: per-destination shuffle slots (static-shape contract).
+      capacity: output table capacity.
+      details: free-form planning inputs for diagnostics.
+      num_chunks: pipeline depth K for the shuffle; 1 = monolithic
+        all-to-all, K > 1 = the pipelined chunked engine
+        (``collectives.shuffle_table_pipelined``).
+    """
+
     strategy: str
     quota: int
     capacity: int
     details: dict
+    num_chunks: int = 1
 
 
 def sampled_quota(
@@ -89,22 +102,62 @@ def plan_join(
     params: cost_model.CostParams = cost_model.CostParams(),
     cardinality: float = 1.0,
 ) -> Plan:
+    """Plan a join: hash-shuffle vs broadcast, plus shuffle pipeline depth.
+
+    Strategy selection follows paper §5.4.2 (broadcast wins when replicating
+    the small side beats shuffling both). For the shuffle strategy the plan
+    also carries ``num_chunks``: the cost-model-chosen pipeline depth that
+    overlaps the per-chunk all-to-all against the local hash-join leg
+    (``cost_model.choose_chunk_count``).
+    """
     strategy = cost_model.choose_join_strategy(n_left, n_right, P, row_bytes, params)
     from .partition import default_quota
     quota = default_quota(capacity, P)
     # expected output rows/partition ~ matches; bound by n/(P*C)
     exp_out = (max(n_left, n_right) / max(P, 1)) / max(cardinality, 1e-9)
     cap_out = int(min(max(2 * exp_out, capacity), 4 * capacity))
-    return Plan(strategy, quota, cap_out, dict(n_left=n_left, n_right=n_right))
+    num_chunks = 1
+    if strategy == "shuffle":
+        n_rows_w = (n_left + n_right) / max(P, 1)
+        core_s = cost_model.t_local("hash_join", n_rows_w, cardinality, params)
+        num_chunks = cost_model.choose_chunk_count(
+            P, n_rows_w * row_bytes, params, core_s=core_s)
+    return Plan(strategy, quota, cap_out, dict(n_left=n_left, n_right=n_right),
+                num_chunks=num_chunks)
 
 
 def plan_groupby(
     cardinality: float,
     P: int,
     capacity: int,
+    n_rows: int | None = None,
+    row_bytes: float = 16.0,
+    params: cost_model.CostParams = cost_model.CostParams(),
+    pre_combine: bool | None = None,
 ) -> Plan:
-    pre_combine = cost_model.choose_groupby_strategy(cardinality)
+    """Plan a groupby: combine-shuffle-reduce vs shuffle-compute (paper
+    §5.4.1) plus the shuffle pipeline depth.
+
+    ``n_rows`` (global row count) enables chunk-count selection; when omitted
+    the plan keeps the monolithic shuffle (K=1). Pre-combining shrinks the
+    shuffled payload by the cardinality fraction C before chunking; pass
+    ``pre_combine`` to pin the caller's choice so the payload estimate
+    matches what actually executes (None = derive from cardinality).
+    """
+    if pre_combine is None:
+        pre_combine = cost_model.choose_groupby_strategy(cardinality)
     from .partition import default_quota
     quota = default_quota(capacity, P)
+    num_chunks = 1
+    if n_rows is not None:
+        n_rows_w = n_rows / max(P, 1)
+        # cardinality 0.0 is the "unknown" sentinel: size the shuffle for the
+        # full payload rather than a zero-byte one.
+        card_payload = cardinality if 0.0 < cardinality <= 1.0 else 1.0
+        shuffled = n_rows_w * (card_payload if pre_combine else 1.0)
+        core_s = cost_model.t_local("groupby", n_rows_w, cardinality, params)
+        num_chunks = cost_model.choose_chunk_count(
+            P, shuffled * row_bytes, params, core_s=core_s)
     return Plan("combine_shuffle_reduce" if pre_combine else "shuffle_compute",
-                quota, capacity, dict(cardinality=cardinality))
+                quota, capacity, dict(cardinality=cardinality),
+                num_chunks=num_chunks)

@@ -156,6 +156,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+                cost = cost[0] if cost else None
             hlo = compiled.as_text()
             coll = collective_bytes_from_hlo(hlo)  # loop-unscaled (reference)
             walked = hlo_cost.analyze(hlo)         # trip-count-scaled

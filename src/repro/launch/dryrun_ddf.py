@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.core.comm.communicator import make_communicator
 from repro.core.cost_model import CostParams, t_shuffle
 from repro.core.dataframe import Table
@@ -51,8 +52,8 @@ def build_join(rows_per_worker: int, multi_pod: bool, quota: int | None = None,
         # summary outputs keep the lowering honest but small
         return out.nvalid.reshape(1), jax.tree.map(lambda x: jnp.asarray(x).reshape(1), info)
 
-    sm = jax.shard_map(join_step, mesh=mesh,
-                       in_specs=(spec,) * 6, out_specs=spec, check_vma=False)
+    sm = shard_map(join_step, mesh=mesh,
+                   in_specs=(spec,) * 6, out_specs=spec, check_vma=False)
     col = jax.ShapeDtypeStruct((P * cap,), jnp.int32)
     cnt = jax.ShapeDtypeStruct((P,), jnp.int32)
     args = (col, col, col, col, cnt, cnt)

@@ -23,6 +23,8 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import optimization_barrier
 import numpy as np
 
 from . import attention as attn_mod
@@ -162,7 +164,7 @@ def _scan_layers(layers: dict, h: jax.Array, body: Callable, n: int, extra_xs=No
         # barrier: keeps XLA from hoisting per-iteration converts of the
         # saved carry stack out of the loop (materializes the whole stack in
         # f32 otherwise — +12.7GB/device on deepseek-67b)
-        carry = jax.lax.optimization_barrier(carry)
+        carry = optimization_barrier(carry)
         if extra_xs is None:
             lp, = (xs,)
             out = body(carry, lp, None)

@@ -20,6 +20,8 @@ import re
 from typing import Sequence
 
 import jax
+
+from repro.compat import optimization_barrier
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -210,7 +212,7 @@ def gather_params(tree, plan: ShardingPlan | None, cast_dtype="bfloat16"):
             # pin the bf16 copy in the SHARDED layout (constraint + barrier)
             # so the partitioner cannot reorder to gather-f32-then-convert
             leaf = jax.lax.with_sharding_constraint(leaf.astype(cast), store)
-            leaf = jax.lax.optimization_barrier(leaf)
+            leaf = optimization_barrier(leaf)
         return _resharded(leaf, use, store)
     return jax.tree_util.tree_map_with_path(f, tree)
 

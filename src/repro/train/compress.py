@@ -41,7 +41,8 @@ def compressed_psum(grads, axis, error: Any = None):
 
     Must run inside shard_map over ``axis``. Returns (mean grads, new error).
     """
-    P = jax.lax.axis_size(axis)
+    from repro.compat import axis_size
+    P = axis_size(axis)
 
     def one(g, e):
         g32 = g.astype(jnp.float32) + (e if e is not None else 0.0)

@@ -5,6 +5,8 @@ import collections
 import jax
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import DDF, DDFContext

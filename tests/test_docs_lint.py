@@ -1,0 +1,17 @@
+"""Satellite CI check: every exported core symbol has a docstring and the
+pattern docs cover the full registry (scripts/check_docs.py)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+
+import check_docs
+
+
+def test_core_exports_have_docstrings():
+    assert check_docs.missing_docstrings() == []
+
+
+def test_docs_cover_every_pattern():
+    assert check_docs.missing_pattern_docs() == []

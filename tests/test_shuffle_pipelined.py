@@ -1,0 +1,286 @@
+"""Pipelined chunked shuffle: bit-exact equivalence + cost-model units.
+
+The equivalence contract (ISSUE 1 acceptance): ``shuffle_table_pipelined``
+produces bit-identical output buffers, nvalid, and overflow counters vs the
+monolithic ``shuffle_table`` for every chunk count, including non-dividing
+chunk counts, overflow-forcing quotas, and capacity overrides. In-process
+tests run at P=1 (the pytest process owns a single CPU device); the
+multi-worker case runs on 8 host devices in a subprocess.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import DDF, DDFContext
+from repro.core import cost_model, patterns
+from repro.core.comm import collectives
+from repro.core.dataframe import Table
+from repro.core.partition import hash_partition_ids
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    return DDFContext(mesh=mesh, axes=("data",))
+
+
+def _run_shuffle(ctx, cols_np, counts_np, quota, num_chunks, capacity=None):
+    nw = ctx.nworkers
+    mesh = ctx.mesh
+
+    def run(cols, counts):
+        t = Table(dict(cols), counts.reshape(()))
+        dest = hash_partition_ids(t, ("k",), nw)
+        if num_chunks == 0:  # monolithic reference
+            out, ov = collectives.shuffle_table(t, dest, ctx.axis, quota,
+                                                capacity=capacity)
+        else:
+            out, ov = collectives.shuffle_table_pipelined(
+                t, dest, ctx.axis, quota, num_chunks, capacity=capacity)
+        return dict(out.columns), out.nvalid.reshape(1), ov.reshape(1)
+
+    spec = {name: P("data") for name in cols_np}
+    sm = shard_map(run, mesh=mesh, in_specs=(spec, P("data")),
+                   out_specs=P("data"), check_vma=False)
+    cols = {k: jnp.asarray(v.reshape(-1)) for k, v in cols_np.items()}
+    return jax.jit(sm)(cols, jnp.asarray(counts_np))
+
+
+def _table_inputs(nw, cap, n_per, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = {
+        "k": rng.integers(0, 500, size=(nw, cap)).astype(np.int32),
+        "v": rng.integers(-1000, 1000, size=(nw, cap)).astype(np.int32),
+    }
+    counts = np.full((nw,), n_per, np.int32)
+    return cols, counts
+
+
+@pytest.mark.parametrize("num_chunks", [1, 2, 3, 4, 7])
+def test_pipelined_bit_exact(ctx, num_chunks):
+    cols, counts = _table_inputs(ctx.nworkers, cap=64, n_per=50)
+    mono = _run_shuffle(ctx, cols, counts, quota=64, num_chunks=0)
+    pipe = _run_shuffle(ctx, cols, counts, quota=64, num_chunks=num_chunks)
+    assert np.array_equal(np.asarray(mono[1]), np.asarray(pipe[1]))
+    assert np.array_equal(np.asarray(mono[2]), np.asarray(pipe[2]))
+    assert int(np.asarray(pipe[2]).sum()) == 0  # well-sized quota: no overflow
+    for name in cols:
+        assert np.array_equal(np.asarray(mono[0][name]),
+                              np.asarray(pipe[0][name])), f"column {name}"
+
+
+@pytest.mark.parametrize("quota,capacity", [(8, None), (13, 40), (64, 500)])
+def test_pipelined_bit_exact_overflow_and_capacity(ctx, quota, capacity):
+    """Equivalence must hold when quotas overflow and capacities truncate/pad."""
+    cols, counts = _table_inputs(ctx.nworkers, cap=64, n_per=60, seed=1)
+    mono = _run_shuffle(ctx, cols, counts, quota, 0, capacity)
+    for num_chunks in (2, 3, 5):
+        pipe = _run_shuffle(ctx, cols, counts, quota, num_chunks, capacity)
+        assert np.array_equal(np.asarray(mono[1]), np.asarray(pipe[1]))
+        assert np.array_equal(np.asarray(mono[2]), np.asarray(pipe[2]))
+        for name in cols:
+            assert np.array_equal(np.asarray(mono[0][name]),
+                                  np.asarray(pipe[0][name]))
+
+
+def test_communicator_shuffle_pipelined_method(ctx):
+    """Communicator.shuffle_pipelined (always-chunked, even K=1) matches
+    Communicator.shuffle's monolithic output bit-exactly."""
+    cols_np, counts_np = _table_inputs(ctx.nworkers, cap=32, n_per=24, seed=3)
+    nw = ctx.nworkers
+
+    def run(method_chunks):
+        def f(cols, counts):
+            t = Table(dict(cols), counts.reshape(()))
+            dest = hash_partition_ids(t, ("k",), nw)
+            comm = ctx.comm()
+            if method_chunks is None:
+                out, ov = comm.shuffle(t, dest, quota=32)
+            else:
+                out, ov = comm.shuffle_pipelined(t, dest, quota=32,
+                                                 num_chunks=method_chunks)
+            return dict(out.columns), out.nvalid.reshape(1), ov.reshape(1)
+
+        spec = {name: P("data") for name in cols_np}
+        sm = shard_map(f, mesh=ctx.mesh, in_specs=(spec, P("data")),
+                       out_specs=P("data"), check_vma=False)
+        cols = {k: jnp.asarray(v.reshape(-1)) for k, v in cols_np.items()}
+        return jax.jit(sm)(cols, jnp.asarray(counts_np))
+
+    mono = run(None)
+    for k in (1, 2, 4):
+        pipe = run(k)
+        assert np.array_equal(np.asarray(mono[1]), np.asarray(pipe[1]))
+        assert np.array_equal(np.asarray(mono[2]), np.asarray(pipe[2]))
+        for name in cols_np:
+            assert np.array_equal(np.asarray(mono[0][name]),
+                                  np.asarray(pipe[0][name]))
+
+
+def test_pipelined_operators_match_monolithic(ctx):
+    """DDF join/groupby/sort give identical results with num_chunks > 1."""
+    rng = np.random.default_rng(2)
+    n = 400
+    L = {"k": rng.integers(0, 80, size=n).astype(np.int32),
+         "v": rng.integers(0, 1000, size=n).astype(np.int32)}
+    R = {"k": rng.integers(0, 80, size=n).astype(np.int32),
+         "w": rng.integers(0, 1000, size=n).astype(np.int32)}
+    dl = DDF.from_numpy(L, ctx, capacity=2 * n)
+    dr = DDF.from_numpy(R, ctx, capacity=2 * n)
+
+    j1, _ = dl.join(dr, on=("k",), strategy="shuffle", capacity=16 * n, num_chunks=1)
+    j3, _ = dl.join(dr, on=("k",), strategy="shuffle", capacity=16 * n, num_chunks=3)
+    for c in j1.column_names:
+        assert np.array_equal(j1.to_numpy()[c], j3.to_numpy()[c])
+
+    g1, _ = dl.groupby(("k",), {"v": ("sum", "count")}, pre_combine=True, num_chunks=1)
+    g4, _ = dl.groupby(("k",), {"v": ("sum", "count")}, pre_combine=True, num_chunks=4)
+    for c in g1.column_names:
+        assert np.array_equal(g1.to_numpy()[c], g4.to_numpy()[c])
+
+    s1, _ = dl.sort_values("v", num_chunks=1)
+    s2, _ = dl.sort_values("v", num_chunks=2)
+    assert np.array_equal(s1.to_numpy()["v"], s2.to_numpy()["v"])
+    assert np.array_equal(s1.to_numpy()["v"], np.sort(L["v"]))
+
+
+@pytest.mark.slow
+def test_pipelined_bit_exact_8_devices():
+    """The real multi-worker all-to-all: bit-exactness on 8 host devices."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.dataframe import Table
+from repro.core.partition import hash_partition_ids
+from repro.core.comm import collectives
+
+mesh = jax.make_mesh((8,), ("data",))
+nw, cap, quota = 8, 64, 16
+rng = np.random.default_rng(0)
+cols_np = {"k": rng.integers(0, 500, size=(nw, cap)).astype(np.int32),
+           "v": rng.integers(-1000, 1000, size=(nw, cap)).astype(np.int32)}
+counts_np = np.full((nw,), 50, np.int32)
+
+def run_shuffle(num_chunks):
+    def f(cols, cnt):
+        t = Table(dict(cols), cnt.reshape(()))
+        dest = hash_partition_ids(t, ("k",), nw)
+        if num_chunks == 0:
+            out, ov = collectives.shuffle_table(t, dest, "data", quota)
+        else:
+            out, ov = collectives.shuffle_table_pipelined(t, dest, "data", quota, num_chunks)
+        return dict(out.columns), out.nvalid.reshape(1), ov.reshape(1)
+    sm = shard_map(f, mesh=mesh, in_specs=({"k": P("data"), "v": P("data")}, P("data")),
+                   out_specs=P("data"), check_vma=False)
+    return jax.jit(sm)({k: jnp.asarray(v.reshape(-1)) for k, v in cols_np.items()},
+                       jnp.asarray(counts_np))
+
+mono = run_shuffle(0)
+for K in (2, 3, 4, 8):
+    pipe = run_shuffle(K)
+    assert np.array_equal(np.asarray(mono[1]), np.asarray(pipe[1])), f"K={K} nvalid"
+    assert np.array_equal(np.asarray(mono[2]), np.asarray(pipe[2])), f"K={K} overflow"
+    for name in ("k", "v"):
+        assert np.array_equal(np.asarray(mono[0][name]), np.asarray(pipe[0][name])), f"K={K} {name}"
+print("PIPELINED-8DEV-BITEXACT-OK")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "PIPELINED-8DEV-BITEXACT-OK" in res.stdout
+
+
+def test_shuffle_rejects_non_native_algorithm_with_chunks():
+    """algorithm='bruck' + num_chunks>1 is a contradiction, not a fallback."""
+    from repro.core.comm.communicator import make_communicator
+
+    comm = make_communicator("data")
+    t = Table({"k": jnp.zeros(4, jnp.int32)}, jnp.asarray(4, jnp.int32))
+    with pytest.raises(ValueError, match="monolithic"):
+        comm.shuffle(t, jnp.zeros(4, jnp.int32), quota=4,
+                     algorithm="bruck", num_chunks=2)
+
+
+# -- cost model / planner units -------------------------------------------------
+
+def test_pipelined_cost_degenerates_at_k1():
+    p = cost_model.CostParams()
+    for nb in (1e3, 1e6, 1e9):
+        mono = sum(cost_model.t_shuffle(8, nb, p))
+        assert cost_model.t_shuffle_pipelined(8, nb, 1, p) == pytest.approx(mono)
+
+
+def test_pipelined_cost_overlap_beats_monolithic_when_balanced():
+    """With comm ~ core, pipelining hides most of the smaller term."""
+    p = cost_model.CostParams()
+    nb = 1e8
+    core = sum(cost_model.t_shuffle(8, nb, p))  # core == comm exactly
+    mono = core + sum(cost_model.t_shuffle(8, nb, p))
+    piped = cost_model.t_shuffle_pipelined(8, nb, 16, p, core_s=core)
+    assert piped < 0.6 * mono  # ideal overlap approaches 0.5x
+
+
+def test_choose_chunk_count_bounds():
+    p = cost_model.CostParams()
+    # tiny payload: startup dominates -> monolithic
+    assert cost_model.choose_chunk_count(8, 1e3, p) == 1
+    # large payload: pipelining wins
+    k = cost_model.choose_chunk_count(8, 1e9, p, core_s=0.1)
+    assert k > 1
+    assert k <= 32
+    # chosen K is the argmin over the scanned candidates
+    cands = [1] + [2 ** i for i in range(1, 6) if 1e9 / 2 ** i >= 4096]
+    best = min(cands, key=lambda c: cost_model.t_shuffle_pipelined(8, 1e9, c, p, core_s=0.1))
+    assert k == best
+
+
+def test_plan_join_and_groupby_carry_num_chunks():
+    plan = patterns.plan_join(10_000_000, 10_000_000, 8, 2_500_000)
+    assert plan.strategy == "shuffle"
+    assert plan.num_chunks >= 1
+    small = patterns.plan_join(1_000, 1_000, 8, 250)
+    assert small.num_chunks == 1 or small.strategy == "broadcast"
+    g = patterns.plan_groupby(0.2, 8, 1_000_000, n_rows=8_000_000)
+    assert g.num_chunks >= 1
+    # no size info -> stays monolithic
+    assert patterns.plan_groupby(0.2, 8, 1_000).num_chunks == 1
+    # cardinality 0.0 = "unknown" sentinel: must size for the full payload,
+    # not a zero-byte shuffle (which would never pipeline)
+    g0 = patterns.plan_groupby(0.0, 8, 1_000_000, n_rows=80_000_000)
+    assert g0.num_chunks > 1
+    # a pinned pre_combine=False must size the payload at full n (no C
+    # shrink): at this scale the full payload picks K>1 while a wrongly
+    # C-shrunk payload (the bug this guards) would pick K=1
+    gf = patterns.plan_groupby(0.1, 8, 1_000_000, n_rows=200_000,
+                               pre_combine=False)
+    g1 = patterns.plan_groupby(1.0, 8, 1_000_000, n_rows=200_000,
+                               pre_combine=False)
+    assert gf.strategy == "shuffle_compute"
+    assert gf.num_chunks == g1.num_chunks  # cardinality must not shrink payload
+    assert gf.num_chunks > 1
+
+
+def test_pattern_cost_pipelined_total_not_worse():
+    for pat, op in (("shuffle_compute", "hash_join"),
+                    ("combine_shuffle_reduce", "groupby")):
+        mono = cost_model.pattern_cost(pat, P=8, n_rows=1e7, row_bytes=16.0,
+                                       cardinality=0.5, core_op=op)
+        piped = cost_model.pattern_cost(pat, P=8, n_rows=1e7, row_bytes=16.0,
+                                        cardinality=0.5, core_op=op, num_chunks=8)
+        assert piped["total"] <= mono["total"] + 1e-12

@@ -116,7 +116,8 @@ def test_compressed_psum_parity():
     def run(g, e):
         return compressed_psum(g, "data", e)
 
-    out, new_err = jax.jit(jax.shard_map(
+    from repro.compat import shard_map
+    out, new_err = jax.jit(shard_map(
         run, mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
         out_specs=jax.sharding.PartitionSpec(), check_vma=False))(grads, err)
