@@ -9,6 +9,7 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
   Fig 10/11+Table 5 -> bench_scaling (Summit-style scaling + projection)
   Fig 12   -> bench_vs_naive       (patterns vs baseline strategies)
   ISSUE 1  -> bench_pipeline       (monolithic vs pipelined chunked shuffle)
+  ISSUE 2  -> bench_pipeline_fusion (eager per-op vs lazy-optimized pipeline)
 """
 
 import os
@@ -22,6 +23,7 @@ BENCHES = [
     "benchmarks.bench_scaling",
     "benchmarks.bench_vs_naive",
     "benchmarks.bench_pipeline",
+    "benchmarks.bench_pipeline_fusion",
 ]
 
 

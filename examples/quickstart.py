@@ -46,6 +46,15 @@ def main():
     g, _ = df1.groupby(("c0",), {"c1": ("mean", "count")})
     print(f"groups: {g.num_rows()}, global mean(c1) = {float(df1.agg('c1', 'mean')):.1f}")
 
+    # the same join->groupby as ONE lazy plan: the optimizer sees the whole
+    # pipeline, elides the groupby shuffle (co-partition reuse) and compiles
+    # a single shard_map program (docs/LAZY_PLANS.md)
+    lz = (df1.lazy().join(df2.lazy(), on=("c0",), strategy="shuffle")
+          .groupby(("c0",), {"c1": ("count",)}))
+    print("lazy plan:")
+    print(lz.explain())
+    print(f"lazy groups: {lz.collect().num_rows()}")
+
 
 if __name__ == "__main__":
     main()

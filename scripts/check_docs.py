@@ -1,10 +1,13 @@
-"""Documentation lint (ISSUE 1 satellite CI check).
+"""Documentation lint (ISSUE 1 + ISSUE 2 satellite CI check).
 
 Fails (exit 1) if:
   1. any symbol exported via ``__all__`` from a module under
-     ``repro.core`` (including ``repro.core.comm``) lacks a docstring, or
+     ``repro.core`` (including ``repro.core.comm``) or the lazy-plan
+     package ``repro.plan`` lacks a docstring, or
   2. ``docs/PATTERNS.md`` / ``docs/ARCHITECTURE.md`` is missing, or does not
-     mention every pattern key in ``repro.core.patterns.PATTERNS``.
+     mention every pattern key in ``repro.core.patterns.PATTERNS``, or
+  3. ``docs/LAZY_PLANS.md`` is missing, or does not mention every logical
+     node type and rewrite pass exported by ``repro.plan``.
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -28,6 +31,12 @@ CORE_MODULES = [
     "repro.core.comm.channels",
     "repro.core.comm.collectives",
     "repro.core.comm.communicator",
+    # lazy logical-plan package (ISSUE 2): every export needs a docstring
+    "repro.plan",
+    "repro.plan.logical",
+    "repro.plan.optimizer",
+    "repro.plan.executor",
+    "repro.plan.frame",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -67,6 +76,26 @@ def missing_pattern_docs() -> list:
     return problems
 
 
+def missing_lazy_plan_docs() -> list:
+    """Return problems with docs/LAZY_PLANS.md coverage of the plan layer."""
+    from repro.plan import logical, optimizer
+
+    path = os.path.join(REPO_ROOT, "docs/LAZY_PLANS.md")
+    if not os.path.exists(path):
+        return ["docs/LAZY_PLANS.md is missing"]
+    text = open(path).read()
+    problems = []
+    node_types = [s for s in logical.__all__
+                  if inspect.isclass(getattr(logical, s, None))
+                  and issubclass(getattr(logical, s), logical.Node)]
+    passes = [s for s in optimizer.__all__ if s.startswith(("pushdown", "plan_",
+                                                            "elide", "fuse"))]
+    for sym in node_types + passes:
+        if sym not in text:
+            problems.append(f"docs/LAZY_PLANS.md does not mention '{sym}'")
+    return problems
+
+
 def main() -> int:
     failures = missing_docstrings()
     if failures:
@@ -78,10 +107,15 @@ def main() -> int:
         print("Pattern documentation problems:")
         for f in doc_failures:
             print(f"  - {f}")
-    if failures or doc_failures:
+    lazy_failures = missing_lazy_plan_docs()
+    if lazy_failures:
+        print("Lazy-plan documentation problems:")
+        for f in lazy_failures:
+            print(f"  - {f}")
+    if failures or doc_failures or lazy_failures:
         return 1
-    print("check_docs: all exported core symbols documented; "
-          "docs cover every pattern")
+    print("check_docs: all exported core+plan symbols documented; "
+          "docs cover every pattern, node type and rewrite pass")
     return 0
 
 

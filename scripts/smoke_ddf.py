@@ -206,6 +206,22 @@ def main():
     assert np.array_equal(Sp.to_numpy()["v"], np.sort(lval)), "pipelined sort mismatch"
     print("pipelined operators OK (join/groupby/sort, K=3)")
 
+    # --- lazy plan layer (ISSUE 2): whole-pipeline compile, bit-exact ---
+    lz = (L.lazy().select(lambda c: c["v"] > 500, name="vbig")
+          .join(R.lazy(), on=("k",), strategy="shuffle", capacity=16 * n)
+          .groupby(("k",), {"v": ("sum", "count")}))
+    ex = lz.explain()
+    assert "elide_shuffle" in ex and ex.strip().endswith("shuffles: 1"), ex
+    lzout = lz.to_numpy()
+    ESel = L.select(lambda c: c["v"] > 500, name="vbig")
+    EJ, _ = ESel.join(R, on=("k",), strategy="shuffle", capacity=16 * n)
+    EG, _ = EJ.groupby(("k",), {"v": ("sum", "count")})
+    eout = EG.to_numpy()
+    for name in eout:
+        assert np.array_equal(eout[name], lzout[name]), f"lazy mismatch: {name}"
+    assert all(int(np.asarray(v).sum()) == 0 for v in lz.last_info.values())
+    print("lazy plan OK (pushdown+elision, bit-exact vs eager)")
+
     print("ALL DDF SMOKE TESTS PASSED")
 
 

@@ -17,7 +17,9 @@ per-worker axis of size P.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -25,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import operators, patterns
+from . import cost_model, operators, patterns
 from ..compat import shard_map
 from .comm.communicator import Communicator, make_communicator
 from .dataframe import Table
@@ -34,7 +36,65 @@ from .partition import default_quota
 
 __all__ = ["DDFContext", "DDF"]
 
-_OP_CACHE: dict = {}
+
+class _LRUCache:
+    """Bounded least-recently-used cache for compiled operators/plans.
+
+    The previous unbounded dict keyed on ``id(mesh)`` could (a) grow without
+    limit across contexts and (b) alias entries when a garbage-collected
+    mesh's id was reused; this keys on stable signatures (see
+    :func:`mesh_signature`) and evicts the least recently used entry past
+    ``maxsize``.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._d: collections.OrderedDict = collections.OrderedDict()
+
+    def get(self, key):
+        try:
+            self._d.move_to_end(key)
+            return self._d[key]
+        except KeyError:
+            return None
+
+    def put(self, key, value):
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def __len__(self):
+        return len(self._d)
+
+
+@functools.lru_cache(maxsize=32)
+def mesh_signature(mesh: Mesh) -> tuple:
+    """Stable identity for a mesh: axis names + shape + device ids.
+
+    Unlike ``id(mesh)``, this survives garbage collection (ids can be
+    reused) and treats equal meshes as equal, so cache entries are neither
+    aliased nor duplicated. Memoized so the O(n_devices) tuple is not
+    rebuilt on every operator dispatch."""
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+_OP_CACHE = _LRUCache(maxsize=256)
+
+
+def cached_op(ctx: "DDFContext", key: tuple, fn: Callable, arg_schemas: tuple) -> Callable:
+    """Fetch-or-compile the jitted shard_map for (context, op key, schemas).
+
+    Shared by the eager ``DDF._run`` path and the lazy plan executor, so a
+    lazy pipeline whose final stage matches an eager op reuses the same
+    compiled callable."""
+    cache_key = (mesh_signature(ctx.mesh), ctx.axes, key, arg_schemas)
+    op = _OP_CACHE.get(cache_key)
+    if op is None:
+        op = _build_op(ctx, fn, arg_schemas)
+        _OP_CACHE.put(cache_key, op)
+    return op
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +125,38 @@ class DDFContext:
 
 def _schema_sig(ddf: "DDF") -> tuple:
     return tuple((k, str(v.dtype), v.shape) for k, v in sorted(ddf.columns.items()))
+
+
+def callable_signature(fn: Callable) -> tuple:
+    """Best-effort stable identity for a user callable (predicate/map fn):
+    code location + bytecode hash + hashable default/closure values.
+
+    Cache keys for select/map ops include this alongside the user-supplied
+    name, so two different lambdas (even same-line ones differing only in a
+    captured constant) do not silently alias a compiled operator."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return (repr(fn),)
+
+    def ident(v):
+        # keep the raw value when hashable: cache-key comparison then uses
+        # __eq__, so hash-equal-but-unequal values (hash(-1)==hash(-2))
+        # never alias; unhashable values fall back to object identity,
+        # which the cache entry itself keeps alive.
+        try:
+            hash(v)
+            return v
+        except TypeError:
+            return id(v)
+
+    cells = tuple(ident(c.cell_contents)
+                  for c in (getattr(fn, "__closure__", None) or ()))
+    defaults = tuple(ident(v) for v in (getattr(fn, "__defaults__", None) or ()))
+    # co_consts/co_names distinguish same-line lambdas that differ only in a
+    # literal or a referenced column name (identical co_code).
+    consts = tuple(ident(v) for v in code.co_consts)
+    return (code.co_filename, code.co_firstlineno, hash(code.co_code),
+            code.co_names, consts, defaults, cells)
 
 
 def _build_op(ctx: DDFContext, fn: Callable, arg_schemas: tuple) -> Callable:
@@ -110,6 +202,9 @@ class DDF:
     columns: dict[str, jax.Array]
     counts: jax.Array  # (P,) int32 — valid rows per partition
     ctx: DDFContext
+    # host-side caches (not pytree children): global row count + lazy handle
+    _nrows: int | None = dataclasses.field(default=None, repr=False, compare=False)
+    _lazy_cache: object = dataclasses.field(default=None, repr=False, compare=False)
 
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
@@ -131,14 +226,22 @@ class DDF:
         return tuple(sorted(self.columns))
 
     def num_rows(self) -> int:
-        return int(np.sum(np.asarray(self.counts)))
+        """Global live-row count (device->host sync; cached per instance)."""
+        if self._nrows is None:
+            self._nrows = int(np.sum(np.asarray(self.counts)))
+        return self._nrows
 
     # -- construction ------------------------------------------------------------
     @classmethod
     def from_numpy(cls, data: Mapping[str, np.ndarray], ctx: DDFContext,
-                   capacity: int | None = None) -> "DDF":
+                   capacity: int | None = None, mode: str | None = None):
         """Partitioned input: rows split contiguously across workers
-        (paper §5.3.8 partitioned I/O)."""
+        (paper §5.3.8 partitioned I/O).
+
+        ``mode`` selects the API flavor: "eager" returns a ``DDF`` whose
+        methods execute immediately (today's semantics); "lazy" returns a
+        ``repro.plan.LazyDDF`` that builds a logical plan and executes on
+        ``.collect()``. None consults ``repro.plan.get_default_mode()``."""
         nw = ctx.nworkers
         n = len(next(iter(data.values())))
         per = -(-n // nw)
@@ -152,7 +255,11 @@ class DDF:
                 buf[w, : len(chunk)] = chunk
             cols[k] = jax.device_put(buf.reshape((nw * cap,) + v.shape[1:]), ctx.sharding())
         counts = np.minimum(np.maximum(n - per * np.arange(nw), 0), min(per, cap)).astype(np.int32)
-        return cls(cols, jax.device_put(counts, ctx.sharding()), ctx)
+        ddf = cls(cols, jax.device_put(counts, ctx.sharding()), ctx)
+        if mode is None:
+            from .. import plan  # local import: plan depends on this module
+            mode = plan.get_default_mode()
+        return ddf.lazy() if mode == "lazy" else ddf
 
     def to_numpy(self) -> dict[str, np.ndarray]:
         """Gather live rows to host, in partition order."""
@@ -167,11 +274,7 @@ class DDF:
     # -- execution plumbing ---------------------------------------------------------
     def _run(self, key: tuple, fn, *ddfs: "DDF"):
         schemas = tuple(_schema_sig(d) for d in (self,) + ddfs)
-        cache_key = (id(self.ctx.mesh), self.ctx.axes, key, schemas)
-        op = _OP_CACHE.get(cache_key)
-        if op is None:
-            op = _build_op(self.ctx, fn, schemas)
-            _OP_CACHE[cache_key] = op
+        op = cached_op(self.ctx, key, fn, schemas)
         flat = []
         for d in (self,) + ddfs:
             flat.append(d.columns)
@@ -187,18 +290,45 @@ class DDF:
 
     # -- embarrassingly parallel (paper §5.3.1) ----------------------------------
     def select(self, pred, name: str = "pred") -> "DDF":
-        return self._run(("select", name), lambda comm, t: local_select(t, pred))
+        return self._run(("select", name, callable_signature(pred)),
+                         lambda comm, t: local_select(t, pred))
+
+    def _check_columns(self, names: Sequence[str], op: str) -> None:
+        missing = [n for n in names if n not in self.columns]
+        if missing:
+            raise KeyError(
+                f"{op}: unknown column(s) {missing}; "
+                f"available schema: {sorted(self.columns)}")
 
     def project(self, names: Sequence[str]) -> "DDF":
+        """Column projection (zero-copy). Unknown names raise ``KeyError``
+        listing the available schema instead of failing inside jit."""
+        self._check_columns(names, "project")
         return DDF({n: self.columns[n] for n in names}, self.counts, self.ctx)
 
+    def drop(self, names: Sequence[str]) -> "DDF":
+        """Drop columns — the natural inverse of :meth:`project`."""
+        names = tuple(names)
+        self._check_columns(names, "drop")
+        gone = set(names)
+        return DDF({k: v for k, v in self.columns.items() if k not in gone},
+                   self.counts, self.ctx)
+
     def rename(self, mapping: Mapping[str, str]) -> "DDF":
-        """Column rename (paper Fig. 6 Modin-algebra surface; zero-copy)."""
+        """Column rename (paper Fig. 6 Modin-algebra surface; zero-copy).
+        Unknown source names raise ``KeyError``; colliding target names
+        raise ``ValueError`` (a silent dict overwrite would drop a column)."""
+        self._check_columns(tuple(mapping), "rename")
+        targets = [mapping.get(k, k) for k in self.columns]
+        dup = {t for t in targets if targets.count(t) > 1}
+        if dup:
+            raise ValueError(f"rename: duplicate target column(s) {sorted(dup)}")
         return DDF({mapping.get(k, k): v for k, v in self.columns.items()},
                    self.counts, self.ctx)
 
     def map_columns(self, fn, name: str = "map") -> "DDF":
-        return self._run(("map", name), lambda comm, t: Table(dict(fn(t.columns)), t.nvalid))
+        return self._run(("map", name, callable_signature(fn)),
+                         lambda comm, t: Table(dict(fn(t.columns)), t.nvalid))
 
     # -- loosely synchronous ----------------------------------------------------
     def join(self, other: "DDF", on: Sequence[str], strategy: str = "auto",
@@ -210,7 +340,9 @@ class DDF:
         on = tuple(on)
         nw = self.ctx.nworkers
         if strategy == "auto":
-            plan = patterns.plan_join(self.num_rows(), other.num_rows(), nw, self.capacity)
+            plan = patterns.plan_join(
+                self.num_rows(), other.num_rows(), nw, self.capacity,
+                params=cost_model.params_for_fabric(self.ctx.fabric))
             strategy = plan.strategy
             if num_chunks is None:
                 num_chunks = plan.num_chunks
@@ -218,10 +350,13 @@ class DDF:
         quota = quota or default_quota(self.capacity, nw)
         capacity = capacity or 2 * self.capacity
         if strategy == "broadcast":
-            small, big = (self, other) if self.num_rows() <= other.num_rows() else (other, self)
-            return big._run(("bjoin", on, capacity),
-                            lambda comm, b, s: operators.dist_join_broadcast(comm, b, s, on, capacity),
-                            small)
+            # replicate the small side; left/right column roles are preserved
+            # either way (matches the lazy planner's broadcast_left/right)
+            gather = "left" if self.num_rows() <= other.num_rows() else "right"
+            return self._run(("bjoin", on, capacity, gather),
+                             lambda comm, l, r: operators.dist_join_broadcast(
+                                 comm, l, r, on, capacity, gather=gather),
+                             other)
         return self._run(("join", on, quota, capacity, num_chunks),
                          lambda comm, l, r: operators.dist_join_shuffle(
                              comm, l, r, on, quota, capacity, num_chunks=num_chunks),
@@ -244,8 +379,9 @@ class DDF:
             # planning reads row counts (a blocking device->host sync), so it
             # only runs when the caller left the strategy to the planner.
             card = cardinality_hint if cardinality_hint is not None else 0.0
-            plan = patterns.plan_groupby(card, nw, capacity or self.capacity,
-                                         n_rows=self.num_rows())
+            plan = patterns.plan_groupby(
+                card, nw, capacity or self.capacity, n_rows=self.num_rows(),
+                params=cost_model.params_for_fabric(self.ctx.fabric))
             pre_combine = plan.strategy == "combine_shuffle_reduce"
             if num_chunks is None:
                 num_chunks = plan.num_chunks
@@ -337,3 +473,19 @@ class DDF:
 
     def head(self, k: int) -> "DDF":
         return self._run(("head", k), lambda comm, t: operators.dist_head(comm, t, k))
+
+    # -- lazy plan layer (repro.plan) -------------------------------------------
+    def lazy(self):
+        """Lazy handle over this DDF: a ``repro.plan.LazyDDF`` whose operator
+        methods build a logical plan; ``.collect()`` optimizes and executes
+        the whole pipeline in one compiled program. Cached per instance so
+        rebuilding a pipeline from the same DDF reuses plan/op caches."""
+        if self._lazy_cache is None:
+            from ..plan.frame import LazyDDF
+            self._lazy_cache = LazyDDF.from_ddf(self)
+        return self._lazy_cache
+
+    def eager(self) -> "DDF":
+        """This DDF itself — the eager escape hatch mirrors
+        ``LazyDDF.eager()`` so either handle can be normalized."""
+        return self

@@ -91,7 +91,9 @@ class Communicator:
 
     def shuffle_pipelined(self, table: Table, dest, quota: int, num_chunks: int,
                           capacity: int | None = None):
-        """Pipelined chunked shuffle (always chunked, even at K=1)."""
+        """Pipelined chunked shuffle (always chunked, even at K=1 — unlike
+        :meth:`shuffle`, which uses the monolithic engine at K=1). Covered
+        by test_shuffle_pipelined as the forced-chunked reference path."""
         return collectives.shuffle_table_pipelined(
             table, dest, self.axis, quota, num_chunks, capacity)
 

@@ -21,6 +21,7 @@ from .comm.communicator import DCN, HOST, ICI, FabricProfile
 
 __all__ = [
     "CostParams",
+    "params_for_fabric",
     "t_shuffle",
     "t_shuffle_pipelined",
     "t_allgather",
@@ -61,6 +62,17 @@ class CostParams:
     def beta(self) -> float:
         """Per-byte transfer time in seconds/byte (Hockney beta = 1/BW)."""
         return self.fabric.beta_s_per_byte
+
+
+_FABRIC_PROFILES = {"ici": ICI, "dcn": DCN, "host": HOST}
+
+
+def params_for_fabric(fabric: str) -> CostParams:
+    """CostParams for a DDFContext fabric name ("ici" | "dcn" | "host").
+
+    Both the eager per-method planners and the lazy plan optimizer route
+    through this so the same context yields the same cost-model constants."""
+    return CostParams(fabric=_FABRIC_PROFILES.get(fabric, ICI))
 
 
 # -- Table 3: collective communication costs ------------------------------------

@@ -97,11 +97,19 @@ def dist_join_broadcast(
     right: Table,
     key_columns: Sequence[str],
     capacity: int,
+    gather: str = "right",
 ) -> tuple[Table, dict]:
-    """Broadcast join: replicate the (small) right relation on every worker,
-    join against the local left partition. No shuffle of the big side."""
-    r_all = comm.allgather(right)
-    out, ovj = local_join(left, r_all, key_columns, capacity)
+    """Broadcast join: replicate the small relation on every worker, join
+    against the other side's local partition. No shuffle of the big side.
+
+    ``gather`` names the replicated (small) side — the caller's planner
+    picks it from row counts. Left/right column roles are preserved either
+    way (the output schema never depends on which side was gathered), so
+    broadcast and shuffle strategies stay interchangeable."""
+    if gather == "left":
+        out, ovj = local_join(comm.allgather(left), right, key_columns, capacity)
+    else:
+        out, ovj = local_join(left, comm.allgather(right), key_columns, capacity)
     return out, {"overflow_join": ovj}
 
 

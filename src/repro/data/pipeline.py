@@ -35,7 +35,10 @@ class TokenPipeline:
         self.seed = seed
 
         corpus = synthetic_token_corpus(n_docs, vocab, seed=seed)
-        ddf = DDF.from_numpy(corpus, ctx, capacity=2 * (n_docs // ctx.nworkers + 1))
+        # mode pinned: this internal pipeline drives the eager tuple-returning
+        # API and must not be affected by repro.plan.set_default_mode("lazy")
+        ddf = DDF.from_numpy(corpus, ctx, mode="eager",
+                             capacity=2 * (n_docs // ctx.nworkers + 1))
 
         # 2. dedup on content hash (combine-shuffle-reduce)
         ddf, self.dedup_info = ddf.unique(("content_hash",))

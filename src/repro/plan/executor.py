@@ -1,0 +1,262 @@
+"""Whole-pipeline compiler/executor for optimized logical plans.
+
+The executor lowers an optimized DAG into **one** ``fn(comm, *tables)``
+composed from the in-shard_map operators of ``repro.core.operators`` /
+``local_ops``, compiles it through the same ``_build_op`` machinery (and
+compiled-op cache) the eager API uses, and runs it as a single jitted
+shard_map program — so an N-op pipeline pays one dispatch instead of N, and
+XLA can schedule collectives across operator boundaries.
+
+Two host-side caches sit in front of compilation:
+
+- the optimized-plan cache (:data:`_PLAN_CACHE`), keyed by (workers, fabric,
+  structural plan signature, source row counts) — skips re-running the
+  optimizer for repeated collects;
+- the compiled-op cache (``repro.core.api._OP_CACHE``), keyed by the fully
+  planned DAG + argument schemas — skips re-tracing/compiling.
+
+Source row counts are fetched with a single device->host sync per pipeline
+(:func:`source_row_counts`) and memoized on the source DDFs, replacing the
+per-method blocking syncs of eager mode.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cost_model, operators
+from ..core.api import DDF, DDFContext, _LRUCache, _schema_sig, cached_op
+from ..core.dataframe import Table, concat
+from ..core.local_ops import (
+    finalize_groupby,
+    local_anti_join,
+    local_groupby,
+    local_join,
+    local_unique,
+)
+from ..core.local_ops import select as local_select
+from . import optimizer
+from .logical import (
+    Difference,
+    Fused,
+    GroupBy,
+    Join,
+    MapColumns,
+    Node,
+    Project,
+    Rebalance,
+    Rename,
+    Select,
+    Sort,
+    Source,
+    Union,
+    Unique,
+    walk,
+)
+
+__all__ = ["execute", "optimized_plan", "source_row_counts"]
+
+_PLAN_CACHE = _LRUCache(maxsize=128)
+
+
+def source_row_counts(sources: Mapping) -> dict:
+    """Global row count per source id, with ONE device->host sync.
+
+    All not-yet-known source count vectors are concatenated device-side and
+    transferred in a single ``np.asarray`` call; results are memoized on the
+    source DDF instances (``DDF.num_rows`` cache), so repeated collects of
+    pipelines over the same tables sync zero times.
+    """
+    out: dict = {}
+    pending = []
+    for s in sorted(sources):
+        d = sources[s]
+        if d._nrows is not None:
+            out[s] = d._nrows
+        else:
+            pending.append(s)
+    if pending:
+        allc = np.asarray(jnp.concatenate(
+            [jnp.ravel(sources[s].counts) for s in pending]))
+        off = 0
+        for s in pending:
+            n = int(sources[s].counts.shape[0])
+            val = int(allc[off:off + n].sum())
+            off += n
+            out[s] = val
+            sources[s]._nrows = val
+    return out
+
+
+def optimized_plan(root: Node, ctx: DDFContext, src_rows: Mapping,
+                   level: str = "all") -> Node:
+    """Optimize (and fully plan) a logical DAG, with caching.
+
+    ``level``: "all" runs every rewrite pass; "plan-only" runs just the
+    cost-model shuffle planning (for A/B-ing the optimizer; execution always
+    needs concrete quotas/capacities).
+    """
+    key = (ctx.nworkers, ctx.axes, ctx.fabric, level, root,
+           tuple(sorted(src_rows.items())))
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        params = cost_model.params_for_fabric(ctx.fabric)
+        if level == "all":
+            plan = optimizer.optimize(root, ctx.nworkers, src_rows, params)
+        else:
+            plan = optimizer.plan_shuffles(root, ctx.nworkers, src_rows, params)
+        _PLAN_CACHE.put(key, plan)
+    return plan
+
+
+def _apply_ep(step: Node, t: Table) -> Table:
+    """Apply one embarrassingly-parallel step to a local partition."""
+    if isinstance(step, Select):
+        return local_select(t, step.fn)
+    if isinstance(step, Project):
+        return t.select_columns(step.names)
+    if isinstance(step, Rename):
+        m = dict(step.mapping)
+        return Table({m.get(k, k): v for k, v in t.columns.items()}, t.nvalid)
+    if isinstance(step, MapColumns):
+        return Table(dict(step.fn(t.columns)), t.nvalid)
+    raise TypeError(step)
+
+
+def _make_plan_fn(root: Node, ordered_sids: tuple):
+    """Build the single shard_map body that evaluates the whole plan."""
+    order = {n: i for i, n in enumerate(walk(root))}
+
+    def fn(comm, *tables):
+        env = dict(zip(ordered_sids, tables))
+        memo: dict = {}
+        aux: dict = {}
+
+        def put_aux(node, info: dict):
+            i = order[node]
+            for k, v in info.items():
+                aux[f"n{i}:{k}"] = v
+
+        def lower(node: Node) -> Table:
+            if node in memo:
+                return memo[node]
+            if isinstance(node, Source):
+                out = env[node.sid]
+            elif isinstance(node, Fused):
+                out = lower(node.child)
+                for step in node.steps:
+                    out = _apply_ep(step, out)
+            elif isinstance(node, (Select, Project, Rename, MapColumns)):
+                out = _apply_ep(node, lower(node.child))
+            elif isinstance(node, Join):
+                l, r = lower(node.left), lower(node.right)
+                if node.strategy == "shuffle":
+                    out, info = operators.dist_join_shuffle(
+                        comm, l, r, node.on, node.quota, node.capacity,
+                        num_chunks=node.num_chunks or 1)
+                    put_aux(node, info)
+                elif node.strategy == "local":
+                    out, ov = local_join(l, r, node.on, node.capacity)
+                    put_aux(node, {"overflow_join": ov})
+                elif node.strategy == "broadcast_right":
+                    out, info = operators.dist_join_broadcast(
+                        comm, l, r, node.on, node.capacity)
+                    put_aux(node, info)
+                elif node.strategy == "broadcast_left":
+                    out, info = operators.dist_join_broadcast(
+                        comm, l, r, node.on, node.capacity, gather="left")
+                    put_aux(node, info)
+                else:
+                    raise ValueError(f"unplanned join strategy {node.strategy!r}")
+            elif isinstance(node, GroupBy):
+                t = lower(node.child)
+                aggs = {k: v for k, v in node.aggs}
+                if node.elide_shuffle:
+                    red = local_groupby(t, node.by, aggs,
+                                        capacity=node.capacity, merge=False)
+                    out = finalize_groupby(red, aggs)
+                else:
+                    out, info = operators.dist_groupby(
+                        comm, t, node.by, aggs, node.quota, node.capacity,
+                        bool(node.pre_combine), num_chunks=node.num_chunks or 1)
+                    put_aux(node, info)
+            elif isinstance(node, Unique):
+                t = lower(node.child)
+                if node.elide_shuffle:
+                    out = local_unique(t, node.subset, capacity=node.capacity)
+                else:
+                    out, info = operators.dist_unique(
+                        comm, t, node.subset, node.quota, node.capacity,
+                        num_chunks=node.num_chunks or 1)
+                    put_aux(node, info)
+            elif isinstance(node, Union):
+                l, r = lower(node.left), lower(node.right)
+                if node.elide_shuffle:
+                    out = local_unique(concat(l, r), node.on,
+                                       capacity=node.capacity)
+                else:
+                    out, info = operators.dist_union(
+                        comm, l, r, node.on, node.quota, node.capacity,
+                        num_chunks=node.num_chunks or 1)
+                    put_aux(node, info)
+            elif isinstance(node, Difference):
+                l, r = lower(node.left), lower(node.right)
+                if node.elide_shuffle:
+                    out = local_anti_join(l, r, node.on, capacity=node.capacity)
+                else:
+                    out, info = operators.dist_difference(
+                        comm, l, r, node.on, node.quota, node.capacity,
+                        num_chunks=node.num_chunks or 1)
+                    put_aux(node, info)
+            elif isinstance(node, Sort):
+                out, info = operators.dist_sort(
+                    comm, lower(node.child), node.by, node.quota, node.capacity,
+                    descending=node.descending, num_chunks=node.num_chunks or 1)
+                put_aux(node, {"overflow_shuffle": info["overflow_shuffle"]})
+            elif isinstance(node, Rebalance):
+                out, info = operators.rebalance(
+                    comm, lower(node.child), node.quota,
+                    num_chunks=node.num_chunks or 1)
+                put_aux(node, info)
+            else:
+                raise TypeError(node)
+            memo[node] = out
+            return out
+
+        result = lower(root)
+        return result, aux
+
+    return fn
+
+
+def execute(root: Node, ctx: DDFContext, sources: Mapping,
+            src_rows: Mapping | None = None, level: str = "all"):
+    """Optimize, compile and run a logical plan.
+
+    Args:
+      root: the logical DAG to evaluate.
+      ctx: execution environment (mesh + row-partition axes).
+      sources: source id -> eager DDF backing each ``Source`` leaf.
+      src_rows: optional pre-fetched source row counts (else one sync).
+      level: optimizer level, see :func:`optimized_plan`.
+
+    Returns:
+      (result DDF, info dict) where info maps ``"n<i>:<counter>"`` aux keys
+      (overflow counters etc., one leading per-worker axis) per plan node.
+    """
+    src_rows = dict(src_rows) if src_rows is not None else source_row_counts(sources)
+    plan = optimized_plan(root, ctx, src_rows, level=level)
+    ordered_sids = tuple(sorted(sources))
+    ddfs = [sources[s] for s in ordered_sids]
+    arg_schemas = tuple(_schema_sig(d) for d in ddfs)
+    fn = _make_plan_fn(plan, ordered_sids)
+    op = cached_op(ctx, ("plan", plan), fn, arg_schemas)
+    flat = []
+    for d in ddfs:
+        flat.append(d.columns)
+        flat.append(d.counts)
+    (cols, counts), aux = op(*flat)
+    return DDF(dict(cols), counts, ctx), dict(aux)

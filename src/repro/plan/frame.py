@@ -1,0 +1,277 @@
+"""``LazyDDF``: the lazy distributed-dataframe handle.
+
+Operator methods mirror the eager ``DDF`` surface but only *build* logical
+nodes (``repro.plan.logical``); nothing touches the devices until a terminal
+call:
+
+- ``.collect()`` / ``.eager()`` — optimize + compile + execute, returning an
+  eager ``DDF`` (``.collect_with_info()`` also returns the aux counters);
+- ``.to_numpy()`` — collect and gather to host;
+- ``.explain()`` — render the (optimized) plan without executing.
+
+Schema validation happens at graph-build time: unknown columns raise
+``KeyError`` carrying the available schema immediately, not deep inside jit.
+Select predicates and map functions are probed on a tiny host table to learn
+which columns they read (enabling predicate/projection pushdown) and the map
+output schema.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Mapping, Sequence
+
+from ..core.api import DDF, DDFContext, callable_signature
+from . import executor
+from .logical import (
+    Difference,
+    GroupBy,
+    Join,
+    MapColumns,
+    Node,
+    Project,
+    Rebalance,
+    Rename,
+    Select,
+    Sort,
+    Source,
+    Union,
+    Unique,
+    format_plan,
+    probe_columns,
+    schema_names,
+    schema_of,
+)
+
+__all__ = ["LazyDDF"]
+
+_SIDS = itertools.count()
+
+
+class LazyDDF:
+    """Lazy distributed dataframe: a logical-plan root + its source tables.
+
+    Build pipelines by chaining operator methods (each returns a new
+    ``LazyDDF``; plans are immutable and shareable), then call a terminal
+    (``collect`` / ``to_numpy`` / ``explain``). Obtain one via
+    ``DDF.lazy()`` or ``DDF.from_numpy(..., mode="lazy")``.
+    """
+
+    def __init__(self, root: Node, ctx: DDFContext, sources: Mapping):
+        self._root = root
+        self._ctx = ctx
+        self._sources = dict(sources)
+        self.last_info: dict | None = None
+
+    @classmethod
+    def from_ddf(cls, ddf: DDF) -> "LazyDDF":
+        """Wrap a materialized eager DDF as a plan source."""
+        sid = next(_SIDS)
+        schema = tuple(sorted(
+            (n, str(v.dtype), tuple(v.shape[1:])) for n, v in ddf.columns.items()))
+        return cls(Source(sid, schema, ddf.capacity), ddf.ctx, {sid: ddf})
+
+    # -- introspection ----------------------------------------------------------
+    @property
+    def schema(self) -> tuple:
+        """Propagated output schema: ((name, dtype, trailing shape), ...)."""
+        return schema_of(self._root)
+
+    @property
+    def column_names(self) -> tuple:
+        return schema_names(self.schema)
+
+    @property
+    def plan(self) -> Node:
+        """The (unoptimized) logical-plan root."""
+        return self._root
+
+    def _check(self, names: Sequence[str], op: str) -> None:
+        have = set(self.column_names)
+        missing = [n for n in names if n not in have]
+        if missing:
+            raise KeyError(f"{op}: unknown column(s) {missing}; "
+                           f"available schema: {sorted(have)}")
+
+    def _derive(self, node: Node, other: "LazyDDF | None" = None) -> "LazyDDF":
+        srcs = dict(self._sources)
+        if other is not None:
+            if other._ctx is not self._ctx and other._ctx != self._ctx:
+                raise ValueError("cannot combine LazyDDFs from different contexts")
+            srcs.update(other._sources)
+        return LazyDDF(node, self._ctx, srcs)
+
+    @staticmethod
+    def _coerce(other) -> "LazyDDF":
+        return other.lazy() if isinstance(other, DDF) else other
+
+    def _probe(self, fn: Callable, op: str):
+        """Probe a user callable, converting a missing-column KeyError into
+        the build-time schema error the frame contract promises."""
+        try:
+            return probe_columns(fn, self.schema)
+        except KeyError as e:
+            raise KeyError(f"{op}: callable references unknown column(s) "
+                           f"[{e.args[0] if e.args else e}]; available "
+                           f"schema: {sorted(self.column_names)}") from e
+
+    # -- embarrassingly parallel -------------------------------------------------
+    def select(self, pred: Callable, name: str = "pred") -> "LazyDDF":
+        """Filter rows by a predicate over the column dict. The predicate is
+        probed host-side to learn which columns it reads (pushdown);
+        references to unknown columns raise ``KeyError`` at build time.
+
+        Contract: the predicate must access a *data-independent* set of
+        columns — branching on column values to decide which columns to
+        read can make projection pushdown drop a column the real run needs
+        (dict iteration / ``in``-membership tests are detected and disable
+        pushdown; value-dependent branches cannot be)."""
+        used, _ = self._probe(pred, f"select '{name}'")
+        return self._derive(Select(self._root, pred, name, used,
+                                   fn_sig=callable_signature(pred)))
+
+    def project(self, names: Sequence[str]) -> "LazyDDF":
+        """Keep only ``names`` (validated against the propagated schema)."""
+        names = tuple(names)
+        self._check(names, "project")
+        return self._derive(Project(self._root, names))
+
+    def drop(self, names: Sequence[str]) -> "LazyDDF":
+        """Drop columns — inverse of :meth:`project`."""
+        names = tuple(names)
+        self._check(names, "drop")
+        keep = tuple(n for n in self.column_names if n not in set(names))
+        return self._derive(Project(self._root, keep))
+
+    def rename(self, mapping: Mapping[str, str]) -> "LazyDDF":
+        """Rename columns (old -> new). Colliding targets raise ValueError
+        (matching eager ``DDF.rename``; a silent overwrite drops a column)."""
+        self._check(tuple(mapping), "rename")
+        targets = [mapping.get(n, n) for n in self.column_names]
+        dup = {t for t in targets if targets.count(t) > 1}
+        if dup:
+            raise ValueError(f"rename: duplicate target column(s) {sorted(dup)}")
+        return self._derive(Rename(self._root, tuple(sorted(mapping.items()))))
+
+    def map_columns(self, fn: Callable, name: str = "map") -> "LazyDDF":
+        """Column-wise map; output schema is probed host-side at build time."""
+        used, out_schema = self._probe(fn, f"map_columns '{name}'")
+        if out_schema is None:
+            raise TypeError(
+                f"map_columns '{name}': fn must return a column mapping when "
+                "probed on a tiny table (needed for schema propagation)")
+        return self._derive(MapColumns(self._root, fn, name, used, out_schema,
+                                       fn_sig=callable_signature(fn)))
+
+    # -- keyed / shuffle ops ------------------------------------------------------
+    def join(self, other, on: Sequence[str], strategy: str = "auto",
+             quota: int | None = None, capacity: int | None = None,
+             num_chunks: int | None = None) -> "LazyDDF":
+        """Equi-join; the optimizer picks hash-shuffle vs broadcast and the
+        pipeline depth for the whole pipeline unless pinned here."""
+        other = self._coerce(other)
+        on = tuple(on)
+        self._check(on, "join")
+        other._check(on, "join(right)")
+        return self._derive(Join(self._root, other._root, on, strategy,
+                                 quota, capacity, num_chunks), other)
+
+    def groupby(self, by: Sequence[str], aggs: Mapping[str, Sequence[str]],
+                pre_combine: bool | None = None,
+                cardinality_hint: float | None = None,
+                quota: int | None = None, capacity: int | None = None,
+                num_chunks: int | None = None) -> "LazyDDF":
+        """GroupBy-aggregate; strategy/pipelining planned from DAG estimates
+        (and elided entirely when the input is already co-partitioned)."""
+        by = tuple(by)
+        self._check(by, "groupby")
+        self._check(tuple(aggs), "groupby(aggs)")
+        aggs_t = tuple(sorted((k, tuple(v)) for k, v in aggs.items()))
+        return self._derive(GroupBy(self._root, by, aggs_t, pre_combine,
+                                    cardinality_hint, quota, capacity, num_chunks))
+
+    def unique(self, subset: Sequence[str], quota: int | None = None,
+               capacity: int | None = None,
+               num_chunks: int | None = None) -> "LazyDDF":
+        """Distinct rows by ``subset`` key columns."""
+        subset = tuple(subset)
+        self._check(subset, "unique")
+        return self._derive(Unique(self._root, subset, quota, capacity, num_chunks))
+
+    def union(self, other, on: Sequence[str], quota: int | None = None,
+              capacity: int | None = None,
+              num_chunks: int | None = None) -> "LazyDDF":
+        """Set union by key (both inputs must share a schema)."""
+        other = self._coerce(other)
+        on = tuple(on)
+        self._check(on, "union")
+        if set(self.column_names) != set(other.column_names):
+            raise ValueError(
+                f"union: schema mismatch {sorted(self.column_names)} vs "
+                f"{sorted(other.column_names)}")
+        return self._derive(Union(self._root, other._root, on, quota,
+                                  capacity, num_chunks), other)
+
+    def difference(self, other, on: Sequence[str], quota: int | None = None,
+                   capacity: int | None = None,
+                   num_chunks: int | None = None) -> "LazyDDF":
+        """Set difference by key (rows of self whose key is absent in other)."""
+        other = self._coerce(other)
+        on = tuple(on)
+        self._check(on, "difference")
+        other._check(on, "difference(right)")
+        return self._derive(Difference(self._root, other._root, on, quota,
+                                       capacity, num_chunks), other)
+
+    def sort_values(self, by: str, descending: bool = False,
+                    quota: int | None = None, capacity: int | None = None,
+                    num_chunks: int | None = None) -> "LazyDDF":
+        """Global sample sort by ``by``."""
+        self._check((by,), "sort_values")
+        return self._derive(Sort(self._root, by, descending, quota,
+                                 capacity, num_chunks))
+
+    def rebalance(self, quota: int | None = None,
+                  num_chunks: int | None = None) -> "LazyDDF":
+        """Evenly redistribute rows across workers, preserving global order."""
+        return self._derive(Rebalance(self._root, quota, num_chunks))
+
+    # -- terminals ---------------------------------------------------------------
+    def _rows(self) -> dict:
+        return executor.source_row_counts(self._sources)
+
+    def collect(self, level: str = "all") -> DDF:
+        """Optimize + compile + execute the pipeline; returns an eager DDF.
+
+        Aux outputs (overflow counters etc.) land in ``self.last_info``.
+        ``level="plan-only"`` skips the rewrite passes (A/B baseline)."""
+        out, info = executor.execute(self._root, self._ctx, self._sources,
+                                     src_rows=self._rows(), level=level)
+        self.last_info = info
+        return out
+
+    def collect_with_info(self, level: str = "all"):
+        """Like :meth:`collect` but returns ``(DDF, info dict)``."""
+        out = self.collect(level=level)
+        return out, self.last_info
+
+    def eager(self) -> DDF:
+        """Materialize to an eager DDF (today's semantics escape hatch)."""
+        return self.collect()
+
+    def to_numpy(self) -> dict:
+        """Collect and gather live rows to host, in partition order."""
+        return self.collect().to_numpy()
+
+    def explain(self, optimized: bool = True) -> str:
+        """Render the logical plan (post-optimizer by default) with row
+        estimates and a shuffle count — no device execution."""
+        rows = self._rows()
+        if not optimized:
+            return format_plan(self._root, rows)
+        plan = executor.optimized_plan(self._root, self._ctx, rows)
+        return format_plan(plan, rows)
+
+    def __repr__(self) -> str:
+        return (f"LazyDDF(cols={list(self.column_names)}, "
+                f"plan={type(self._root).__name__})")

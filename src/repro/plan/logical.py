@@ -1,0 +1,656 @@
+"""Logical-plan node types for the lazy DDF API (paper §2, Fig. 2b).
+
+The lazy layer represents a whole dataframe pipeline as an immutable DAG of
+logical nodes *before* anything executes, so the cost-model-driven optimizer
+(``repro.plan.optimizer``) can see the entire query — the design argued for
+by Modin's dataframe algebra and Cylon's execution plans. Each node mirrors
+one ``DDF`` operator; node classes are frozen dataclasses, hashable and
+structurally comparable, which is what lets optimized plans key the compiled
+-plan cache.
+
+Alongside the node types this module implements the *property propagation*
+the optimizer relies on:
+
+- :func:`schema_of` — output schema (name, dtype, trailing shape) per node.
+- :func:`capacity_of` — static output capacity, mirroring the eager
+  operator defaults exactly (bit-exactness contract).
+- :func:`partitioning_of` — the hash-partition key tuple the node's output
+  is co-partitioned on, or None; drives shuffle elision (paper Table 2
+  co-partition reuse).
+- :func:`estimate_rows` — global row-count estimates propagated from source
+  counts, feeding the cost model's strategy/chunk-depth selection.
+
+Callable-carrying nodes (``Select``/``MapColumns``) compare by their
+user-supplied ``name`` plus a callable fingerprint
+(``repro.core.api.callable_signature``: code location, bytecode, hashable
+closure/default values) rather than the function object itself, so
+structurally-identical plans hit the compile caches while different
+predicates never alias.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, ClassVar, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Node",
+    "Source",
+    "Select",
+    "Project",
+    "Rename",
+    "MapColumns",
+    "Join",
+    "GroupBy",
+    "Unique",
+    "Union",
+    "Difference",
+    "Sort",
+    "Rebalance",
+    "Fused",
+    "Schema",
+    "schema_of",
+    "schema_names",
+    "capacity_of",
+    "partitioning_of",
+    "estimate_rows",
+    "row_bytes_of",
+    "probe_columns",
+    "count_shuffles",
+    "format_plan",
+    "walk",
+]
+
+# ((column name, dtype string, trailing shape), ...) sorted by name.
+Schema = tuple
+
+SELECT_SELECTIVITY = 0.5   # default filter selectivity when nothing is known
+UNKNOWN_CARDINALITY = 0.5  # default key-cardinality fraction for dedup ops
+JOIN_SUFFIX = "_r"
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """Base class for logical-plan nodes (immutable, hashable, comparable)."""
+
+    _CHILD_FIELDS: ClassVar[tuple] = ()
+
+    @property
+    def children(self) -> tuple:
+        """Input nodes, in argument order."""
+        return tuple(getattr(self, f) for f in self._CHILD_FIELDS)
+
+    def with_children(self, new: Sequence["Node"]) -> "Node":
+        """Copy of this node with its input nodes replaced."""
+        return dataclasses.replace(self, **dict(zip(self._CHILD_FIELDS, new)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Source(Node):
+    """Leaf: one materialized eager DDF, identified by a stable source id."""
+
+    sid: int
+    schema: Schema
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Select(Node):
+    """Row filter (embarrassingly parallel). ``used`` lists the columns the
+    predicate reads (probed at build time); None means unknown/all.
+    ``fn_sig`` is the callable fingerprint (``api.callable_signature``) that
+    keeps structurally-equal nodes with different predicates distinct."""
+
+    child: Node
+    fn: Callable = dataclasses.field(compare=False)
+    name: str = "pred"
+    used: tuple | None = None
+    fn_sig: tuple = ()
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Project(Node):
+    """Column projection. ``synthetic`` marks optimizer-inserted pushdowns."""
+
+    child: Node
+    names: tuple
+    synthetic: bool = False
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rename(Node):
+    """Column rename; ``mapping`` is ((old, new), ...) sorted."""
+
+    child: Node
+    mapping: tuple
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class MapColumns(Node):
+    """Column-wise map (embarrassingly parallel). Output schema is probed at
+    build time (``out_schema``); ``used`` and ``fn_sig`` as in
+    :class:`Select`."""
+
+    child: Node
+    fn: Callable = dataclasses.field(compare=False)
+    name: str = "map"
+    used: tuple | None = None
+    out_schema: Schema | None = None
+    fn_sig: tuple = ()
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Join(Node):
+    """Equi-join. ``strategy``: "auto" (planner decides) | "shuffle" |
+    "broadcast" (planner picks the gathered side) | "broadcast_left" /
+    "broadcast_right" (that side is replicated) | "local" (co-partition
+    reuse: shuffle elided)."""
+
+    left: Node
+    right: Node
+    on: tuple
+    strategy: str = "auto"
+    quota: int | None = None
+    capacity: int | None = None
+    num_chunks: int | None = None
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("left", "right")
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupBy(Node):
+    """GroupBy-aggregate; ``aggs`` is ((value_col, (op, ...)), ...) sorted."""
+
+    child: Node
+    by: tuple
+    aggs: tuple
+    pre_combine: bool | None = None
+    cardinality_hint: float | None = None
+    quota: int | None = None
+    capacity: int | None = None
+    num_chunks: int | None = None
+    elide_shuffle: bool = False
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Unique(Node):
+    """Distinct rows by ``subset`` key columns."""
+
+    child: Node
+    subset: tuple
+    quota: int | None = None
+    capacity: int | None = None
+    num_chunks: int | None = None
+    elide_shuffle: bool = False
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Union(Node):
+    """Set union by key (concat + distinct); both inputs share a schema."""
+
+    left: Node
+    right: Node
+    on: tuple
+    quota: int | None = None
+    capacity: int | None = None
+    num_chunks: int | None = None
+    elide_shuffle: bool = False
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("left", "right")
+
+
+@dataclasses.dataclass(frozen=True)
+class Difference(Node):
+    """Set difference by key (co-partition + local anti-join)."""
+
+    left: Node
+    right: Node
+    on: tuple
+    quota: int | None = None
+    capacity: int | None = None
+    num_chunks: int | None = None
+    elide_shuffle: bool = False
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("left", "right")
+
+
+@dataclasses.dataclass(frozen=True)
+class Sort(Node):
+    """Global sample sort by one key column (range shuffle)."""
+
+    child: Node
+    by: str
+    descending: bool = False
+    quota: int | None = None
+    capacity: int | None = None
+    num_chunks: int | None = None
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rebalance(Node):
+    """Even redistribution of rows across workers, preserving global order."""
+
+    child: Node
+    quota: int | None = None
+    num_chunks: int | None = None
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fused(Node):
+    """A chain of embarrassingly-parallel steps compiled as one shard_map
+    body (the optimizer's fusion pass). ``steps`` apply in order to the
+    child's output; each step is an EP node whose own child link is only
+    used for schema propagation."""
+
+    child: Node
+    steps: tuple
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+# -- build-time probing -------------------------------------------------------
+
+class _RecordingColumns(dict):
+    """Column dict that records which keys a probed callable reads."""
+
+    def __init__(self, cols):
+        super().__init__(cols)
+        self.accessed: set = set()
+        self.touched_all = False
+
+    def __getitem__(self, k):
+        self.accessed.add(k)
+        return super().__getitem__(k)
+
+    def get(self, k, default=None):
+        self.accessed.add(k)
+        return super().get(k, default)
+
+    def _all(self):
+        self.touched_all = True
+
+    def keys(self):
+        self._all()
+        return super().keys()
+
+    def values(self):
+        self._all()
+        return super().values()
+
+    def items(self):
+        self._all()
+        return super().items()
+
+    def __iter__(self):
+        self._all()
+        return super().__iter__()
+
+    def __contains__(self, k):
+        # membership tests make the callable's behavior depend on the full
+        # column set, so pushdown must not narrow it (treat as touch-all)
+        self._all()
+        return super().__contains__(k)
+
+
+def probe_columns(fn: Callable, schema: Schema):
+    """Run ``fn`` on a tiny concrete table to learn (used columns, output
+    schema). The probe sees a ones-valued table, so callables whose column
+    accesses depend on data *values* (not just the schema) can under-report
+    ``used``; the API contract requires data-independent access patterns
+    (iteration and ``in``-membership are detected and reported as
+    touch-all). Returns ``(used, out_schema)`` where ``used`` is a sorted name
+    tuple or None (unknown — the callable iterated the dict or raised) and
+    ``out_schema`` is the probed output schema or None (non-dict result,
+    e.g. a select predicate mask). A ``KeyError`` (the callable referenced
+    a column absent from ``schema``) propagates so callers can surface it
+    at build time instead of deep inside jit."""
+    cols = {n: jnp.ones((2,) + tuple(tail), jnp.dtype(dt)) for n, dt, tail in schema}
+    rec = _RecordingColumns(cols)
+    try:
+        out = fn(rec)
+    except KeyError:
+        raise
+    except Exception:
+        return None, None
+    used = None if rec.touched_all else tuple(sorted(rec.accessed))
+    out_schema = None
+    if isinstance(out, Mapping):
+        try:
+            out_schema = tuple(sorted(
+                (n, str(jnp.asarray(v).dtype), tuple(jnp.asarray(v).shape[1:]))
+                for n, v in dict(out).items()))
+        except Exception:
+            out_schema = None
+    return used, out_schema
+
+
+# -- property propagation -----------------------------------------------------
+
+def schema_names(schema: Schema) -> tuple:
+    """Column names of a schema, in schema order."""
+    return tuple(n for n, _, _ in schema)
+
+
+def _join_schema(ls: Schema, rs: Schema, on: tuple) -> Schema:
+    lnames = set(schema_names(ls))
+    out = list(ls)
+    for n, dt, tail in rs:
+        if n in on:
+            continue
+        out.append((n if n not in lnames else n + JOIN_SUFFIX, dt, tail))
+    return tuple(sorted(out))
+
+
+def _groupby_schema(child: Schema, by: tuple, aggs: tuple) -> Schema:
+    d = {n: (dt, tail) for n, dt, tail in child}
+    out = [(n, *d[n]) for n in by]
+    for col, ops in aggs:
+        for op in ops:
+            if op == "count":
+                out.append((f"{col}_count", "int32", ()))
+            elif op == "mean":
+                out.append((f"{col}_mean", "float32", d[col][1]))
+            else:
+                out.append((f"{col}_{op}", d[col][0], d[col][1]))
+    return tuple(sorted(set(out)))
+
+
+def schema_of(node: Node, memo: dict | None = None) -> Schema:
+    """Output schema of a node: ((name, dtype, trailing shape), ...) sorted."""
+    memo = {} if memo is None else memo
+    if id(node) in memo:
+        return memo[id(node)]
+    if isinstance(node, Source):
+        s = node.schema
+    elif isinstance(node, (Select, Sort, Rebalance, Unique)):
+        s = schema_of(node.child, memo)
+    elif isinstance(node, Project):
+        d = {n: (dt, tail) for n, dt, tail in schema_of(node.child, memo)}
+        s = tuple(sorted((n, *d[n]) for n in node.names))
+    elif isinstance(node, Rename):
+        m = dict(node.mapping)
+        s = tuple(sorted((m.get(n, n), dt, tail)
+                         for n, dt, tail in schema_of(node.child, memo)))
+    elif isinstance(node, MapColumns):
+        if node.out_schema is None:
+            raise ValueError(f"map '{node.name}': output schema unknown "
+                             "(probe failed); cannot plan")
+        s = node.out_schema
+    elif isinstance(node, Join):
+        s = _join_schema(schema_of(node.left, memo), schema_of(node.right, memo), node.on)
+    elif isinstance(node, GroupBy):
+        s = _groupby_schema(schema_of(node.child, memo), node.by, node.aggs)
+    elif isinstance(node, (Union, Difference)):
+        s = schema_of(node.left, memo)
+    elif isinstance(node, Fused):
+        s = schema_of(node.steps[-1], memo)
+    else:
+        raise TypeError(node)
+    memo[id(node)] = s
+    return s
+
+
+def row_bytes_of(schema: Schema) -> float:
+    """Bytes per row implied by a schema (drives the Hockney comm terms)."""
+    total = 0.0
+    for _, dt, tail in schema:
+        total += np.dtype(dt).itemsize * float(np.prod(tail)) if tail else np.dtype(dt).itemsize
+    return max(total, 1.0)
+
+
+def capacity_of(node: Node, nworkers: int) -> int:
+    """Static per-partition output capacity, mirroring the eager defaults."""
+    if isinstance(node, Source):
+        return node.capacity
+    if isinstance(node, (Select, Project, Rename, MapColumns, Fused)):
+        return capacity_of(node.child, nworkers)
+    if isinstance(node, Join):
+        return node.capacity if node.capacity else 2 * capacity_of(node.left, nworkers)
+    if isinstance(node, (GroupBy, Unique)):
+        return node.capacity if node.capacity else capacity_of(node.child, nworkers)
+    if isinstance(node, Union):
+        return node.capacity if node.capacity else (
+            capacity_of(node.left, nworkers) + capacity_of(node.right, nworkers))
+    if isinstance(node, Difference):
+        return node.capacity if node.capacity else capacity_of(node.left, nworkers)
+    if isinstance(node, Sort):
+        return node.capacity if node.capacity else 2 * capacity_of(node.child, nworkers)
+    if isinstance(node, Rebalance):
+        q = node.quota if node.quota else capacity_of(node.child, nworkers)
+        return nworkers * q
+    raise TypeError(node)
+
+
+def partitioning_of(node: Node) -> tuple | None:
+    """Hash-partition key tuple the node's output is co-partitioned on, or
+    None. "Co-partitioned on K" means: rows with equal K-values live on the
+    same worker, placed by ``hash_partition_ids`` over K in order — the
+    property the shuffle-elision pass exploits (paper Table 2)."""
+    if isinstance(node, Source):
+        return None
+    if isinstance(node, Select):
+        return partitioning_of(node.child)
+    if isinstance(node, Project):
+        p = partitioning_of(node.child)
+        return p if p and set(p) <= set(node.names) else None
+    if isinstance(node, Rename):
+        p = partitioning_of(node.child)
+        m = dict(node.mapping)
+        return tuple(m.get(c, c) for c in p) if p else None
+    if isinstance(node, MapColumns):
+        return None  # conservatively: the map may rewrite key columns
+    if isinstance(node, Join):
+        if node.strategy in ("shuffle",):
+            return node.on
+        if node.strategy == "local":
+            return partitioning_of(node.left)
+        if node.strategy == "broadcast_left":   # left replicated, right in place
+            return partitioning_of(node.right)
+        if node.strategy == "broadcast_right":
+            return partitioning_of(node.left)
+        return None  # "auto"/"broadcast": unknown until planned
+    if isinstance(node, GroupBy):
+        return partitioning_of(node.child) if node.elide_shuffle else node.by
+    if isinstance(node, Unique):
+        return partitioning_of(node.child) if node.elide_shuffle else node.subset
+    if isinstance(node, (Union, Difference)):
+        return partitioning_of(node.left) if node.elide_shuffle else node.on
+    if isinstance(node, (Sort, Rebalance)):
+        return None  # range/round-robin placement, not hash
+    if isinstance(node, Fused):
+        p = partitioning_of(node.child)
+        for step in node.steps:
+            if p is None:
+                return None
+            if isinstance(step, Select):
+                continue
+            if isinstance(step, Project):
+                p = p if set(p) <= set(step.names) else None
+            elif isinstance(step, Rename):
+                m = dict(step.mapping)
+                p = tuple(m.get(c, c) for c in p)
+            else:  # MapColumns
+                p = None
+        return p
+    raise TypeError(node)
+
+
+def estimate_rows(node: Node, src_rows: Mapping, memo: dict | None = None) -> float:
+    """Estimated global row count, propagated from measured source counts.
+
+    ``src_rows`` maps source id -> exact global rows (one host sync per
+    pipeline, done by the executor). Estimates use the paper's planning
+    inputs: filter selectivity, key cardinality, and join multiplicity
+    default to conservative constants when no hint is available.
+    """
+    memo = {} if memo is None else memo
+    if id(node) in memo:
+        return memo[id(node)]
+    if isinstance(node, Source):
+        r = float(src_rows.get(node.sid, node.capacity))
+    elif isinstance(node, Select):
+        r = SELECT_SELECTIVITY * estimate_rows(node.child, src_rows, memo)
+    elif isinstance(node, (Project, Rename, MapColumns, Sort, Rebalance)):
+        r = estimate_rows(node.child, src_rows, memo)
+    elif isinstance(node, Join):
+        r = max(estimate_rows(node.left, src_rows, memo),
+                estimate_rows(node.right, src_rows, memo))
+    elif isinstance(node, GroupBy):
+        card = node.cardinality_hint
+        card = card if card is not None and 0.0 < card <= 1.0 else UNKNOWN_CARDINALITY
+        r = card * estimate_rows(node.child, src_rows, memo)
+    elif isinstance(node, Unique):
+        r = UNKNOWN_CARDINALITY * estimate_rows(node.child, src_rows, memo)
+    elif isinstance(node, Union):
+        r = (estimate_rows(node.left, src_rows, memo)
+             + estimate_rows(node.right, src_rows, memo))
+    elif isinstance(node, Difference):
+        r = estimate_rows(node.left, src_rows, memo)
+    elif isinstance(node, Fused):
+        r = estimate_rows(node.child, src_rows, memo)
+        for step in node.steps:
+            if isinstance(step, Select):
+                r *= SELECT_SELECTIVITY
+    else:
+        raise TypeError(node)
+    memo[id(node)] = r
+    return r
+
+
+# -- traversal / display ------------------------------------------------------
+
+def walk(root: Node):
+    """Post-order traversal of the DAG, visiting shared nodes once."""
+    seen: set = set()
+    out: list = []
+
+    def rec(n: Node):
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        for c in n.children:
+            rec(c)
+        out.append(n)
+
+    rec(root)
+    return out
+
+
+def count_shuffles(root: Node) -> int:
+    """Number of all-to-all shuffle communication ops the plan will execute
+    (a join's co-partitioning pair counts as one shuffle op, matching the
+    pattern taxonomy; elided/broadcast ops count zero)."""
+    n = 0
+    for node in walk(root):
+        if isinstance(node, Join) and node.strategy in ("auto", "shuffle"):
+            n += 1
+        elif isinstance(node, (GroupBy, Unique, Union, Difference)) and not node.elide_shuffle:
+            n += 1
+        elif isinstance(node, (Sort, Rebalance)):
+            n += 1
+    return n
+
+
+def _describe(node: Node) -> str:
+    def planned(n):
+        parts = []
+        if n.quota is not None:
+            parts.append(f"quota={n.quota}")
+        if getattr(n, "capacity", None) is not None:
+            parts.append(f"capacity={n.capacity}")
+        if n.num_chunks is not None:
+            parts.append(f"num_chunks={n.num_chunks}")
+        return (" " + " ".join(parts)) if parts else ""
+
+    if isinstance(node, Source):
+        return (f"SOURCE#{node.sid} cols={schema_names(node.schema)} "
+                f"capacity={node.capacity}")
+    if isinstance(node, Select):
+        return f"SELECT {node.name} used={node.used}"
+    if isinstance(node, Project):
+        star = "*" if node.synthetic else ""
+        return f"PROJECT{star} cols={node.names}"
+    if isinstance(node, Rename):
+        return f"RENAME {dict(node.mapping)}"
+    if isinstance(node, MapColumns):
+        return f"MAP {node.name}"
+    if isinstance(node, Join):
+        return f"JOIN on={node.on} strategy={node.strategy}{planned(node)}"
+    if isinstance(node, GroupBy):
+        s = f"GROUPBY by={node.by} aggs={node.aggs} pre_combine={node.pre_combine}"
+        s += planned(node)
+        return s + (" elide_shuffle" if node.elide_shuffle else "")
+    if isinstance(node, Unique):
+        return (f"UNIQUE subset={node.subset}{planned(node)}"
+                + (" elide_shuffle" if node.elide_shuffle else ""))
+    if isinstance(node, Union):
+        return (f"UNION on={node.on}{planned(node)}"
+                + (" elide_shuffle" if node.elide_shuffle else ""))
+    if isinstance(node, Difference):
+        return (f"DIFFERENCE on={node.on}{planned(node)}"
+                + (" elide_shuffle" if node.elide_shuffle else ""))
+    if isinstance(node, Sort):
+        return (f"SORT by={node.by}"
+                + (" desc" if node.descending else "") + planned(node))
+    if isinstance(node, Rebalance):
+        parts = []
+        if node.quota is not None:
+            parts.append(f"quota={node.quota}")
+        if node.num_chunks is not None:
+            parts.append(f"num_chunks={node.num_chunks}")
+        return "REBALANCE" + ((" " + " ".join(parts)) if parts else "")
+    if isinstance(node, Fused):
+        inner = []
+        for s in node.steps:
+            if isinstance(s, Select):
+                inner.append(f"select:{s.name}")
+            elif isinstance(s, Project):
+                inner.append(f"project{'*' if s.synthetic else ''}{s.names}")
+            elif isinstance(s, Rename):
+                inner.append(f"rename{dict(s.mapping)}")
+            else:
+                inner.append(f"map:{s.name}")
+        return "EP[" + " -> ".join(inner) + "]"
+    return repr(node)
+
+
+def format_plan(root: Node, src_rows: Mapping | None = None) -> str:
+    """Indented textual rendering of a plan tree (the ``.explain()`` body).
+
+    Children print below their parent at one extra indent level; with
+    ``src_rows`` each line carries the propagated row estimate. A summary
+    line reports the shuffle-op count.
+    """
+    memo: dict = {}
+    lines: list = []
+
+    def rec(n: Node, depth: int):
+        extra = ""
+        if src_rows is not None:
+            extra = f"  rows~{estimate_rows(n, src_rows, memo):.0f}"
+        lines.append("  " * depth + _describe(n) + extra)
+        for c in n.children:
+            rec(c, depth + 1)
+
+    rec(root, 0)
+    lines.append(f"shuffles: {count_shuffles(root)}")
+    return "\n".join(lines)

@@ -1,0 +1,380 @@
+"""Rewrite passes over logical plans (the cost-model-driven query optimizer).
+
+``optimize`` runs, in order:
+
+1. :func:`pushdown_predicates` — sink ``SELECT`` below projections, sorts and
+   (side-resolvable) joins so filters run before shuffles shrink payloads.
+2. :func:`pushdown_projections` — thread the set of columns each ancestor
+   actually needs down the DAG and insert minimal ``PROJECT*`` nodes below
+   shuffle boundaries (shrinks shuffled bytes; paper §5: comm terms scale
+   with bold-n in bytes).
+3. :func:`plan_shuffles` — the single host-side planning pass: concretize
+   every shuffle op's strategy, quota, capacity and pipeline depth
+   ``num_chunks`` from DAG-propagated size estimates via the Hockney cost
+   model (replaces eager mode's scattered per-method planning).
+4. :func:`elide_shuffles` — co-partition reuse (paper Table 2): drop a keyed
+   op's shuffle when its input is already hash-partitioned on a subset of
+   its keys (e.g. join→groupby on the same key runs the groupby locally).
+5. :func:`fuse_elementwise` — collapse adjacent embarrassingly-parallel ops
+   into one ``EP[...]`` stage compiled as a single shard_map body.
+
+All passes are pure: nodes are immutable, so each pass rebuilds the DAG
+bottom-up and returns a new root. Every pass is also exposed individually so
+tests can assert on single rewrites via ``format_plan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from ..core import cost_model, patterns
+from ..core.partition import default_quota
+from .logical import (
+    JOIN_SUFFIX,
+    Difference,
+    Fused,
+    GroupBy,
+    Join,
+    MapColumns,
+    Node,
+    Project,
+    Rebalance,
+    Rename,
+    Select,
+    Sort,
+    Union,
+    Unique,
+    capacity_of,
+    estimate_rows,
+    partitioning_of,
+    row_bytes_of,
+    schema_names,
+    schema_of,
+)
+
+__all__ = [
+    "optimize",
+    "pushdown_predicates",
+    "pushdown_projections",
+    "plan_shuffles",
+    "elide_shuffles",
+    "fuse_elementwise",
+]
+
+_EP = (Select, Project, Rename, MapColumns)
+
+
+def _rewrite_up(root: Node, fn) -> Node:
+    """Bottom-up structural rewrite: children first, then ``fn`` per node."""
+    memo: dict = {}
+
+    def rec(orig: Node) -> Node:
+        if id(orig) in memo:
+            return memo[id(orig)]
+        n = orig
+        kids = tuple(rec(c) for c in n.children)
+        if kids != n.children:
+            n = n.with_children(kids)
+        out = fn(n)
+        memo[id(orig)] = out
+        return out
+
+    return rec(root)
+
+
+# -- pass 1: predicate pushdown ----------------------------------------------
+
+def _sink_select_once(sel: Select) -> Node:
+    """Push one SELECT one level down when legal; returns ``sel`` unchanged
+    otherwise. Legality needs the predicate's accessed columns (``used``)."""
+    child = sel.child
+    if sel.used is None:
+        return sel
+    used = set(sel.used)
+    if isinstance(child, Project) and used <= set(child.names):
+        return dataclasses.replace(
+            child, child=dataclasses.replace(sel, child=child.child))
+    if isinstance(child, Sort):
+        # filter-then-sort: same rows in the same global order (sample-sort
+        # pivots move, but equal keys stay co-located and ties stay stable).
+        return dataclasses.replace(
+            child, child=dataclasses.replace(sel, child=child.child))
+    if isinstance(child, Join):
+        lnames = set(schema_names(schema_of(child.left)))
+        rnames = set(schema_names(schema_of(child.right)))
+        on = set(child.on)
+        if used <= lnames:
+            return dataclasses.replace(
+                child, left=dataclasses.replace(sel, child=child.left))
+        # names clashing with the left side are suffixed in the join output,
+        # so an un-suffixed name in `used` can only target the right side if
+        # it does not collide with a left non-key column.
+        if used <= (rnames | on) and not (used & (lnames - on)):
+            return dataclasses.replace(
+                child, right=dataclasses.replace(sel, child=child.right))
+    return sel
+
+
+def pushdown_predicates(root: Node) -> Node:
+    """Sink SELECT nodes below projections, sorts and joins (to fixpoint)."""
+    prev = None
+    while prev != root:
+        prev = root
+        root = _rewrite_up(
+            root, lambda n: _sink_select_once(n) if isinstance(n, Select) else n)
+    return root
+
+
+# -- pass 2: projection pushdown ----------------------------------------------
+
+def _maybe_project(node: Node, needed: frozenset) -> Node:
+    names = schema_names(schema_of(node))
+    keep = tuple(sorted(n for n in names if n in needed))
+    if keep and set(keep) < set(names):
+        return Project(node, keep, synthetic=True)
+    return node
+
+
+def pushdown_projections(root: Node) -> Node:
+    """Insert minimal PROJECT* nodes below shuffle boundaries.
+
+    The required-column set flows top-down from the root schema; at every
+    shuffle input (join/groupby/... child) and source, columns nobody above
+    needs are dropped before they are shuffled.
+    """
+
+    def prune(node: Node, needed: frozenset) -> Node:
+        if isinstance(node, Select):
+            used = set(node.used) if node.used is not None else set(
+                schema_names(schema_of(node.child)))
+            return dataclasses.replace(
+                node, child=prune(node.child, frozenset(needed | used)))
+        if isinstance(node, Project):
+            keep = tuple(n for n in node.names if n in needed) or node.names
+            return dataclasses.replace(
+                node, names=keep, child=prune(node.child, frozenset(keep)))
+        if isinstance(node, Rename):
+            inv = {new: old for old, new in node.mapping}
+            child_needed = frozenset(inv.get(n, n) for n in needed)
+            return dataclasses.replace(node, child=prune(node.child, child_needed))
+        if isinstance(node, MapColumns):
+            child_names = set(schema_names(schema_of(node.child)))
+            used = set(node.used) if node.used is not None else child_names
+            child = prune(node.child, frozenset(used))
+            return dataclasses.replace(node, child=_maybe_project(child, frozenset(used)))
+        if isinstance(node, Join):
+            lnames = set(schema_names(schema_of(node.left)))
+            on = set(node.on)
+            needed_l = set((needed & lnames) | on)
+            needed_r = set(on)
+            for rn, _, _ in schema_of(node.right):
+                if rn in on:
+                    continue
+                out_name = rn if rn not in lnames else rn + JOIN_SUFFIX
+                if out_name in needed:
+                    needed_r.add(rn)
+                    if out_name != rn:
+                        # an ancestor references the suffixed name; keep the
+                        # colliding left column so the suffix (and thus the
+                        # output schema) survives pruning
+                        needed_l.add(rn)
+            needed_l = frozenset(needed_l)
+            left = _maybe_project(prune(node.left, needed_l), needed_l)
+            right = _maybe_project(prune(node.right, frozenset(needed_r)),
+                                   frozenset(needed_r))
+            return dataclasses.replace(node, left=left, right=right)
+        if isinstance(node, GroupBy):
+            child_needed = frozenset(set(node.by) | {c for c, _ in node.aggs})
+            child = _maybe_project(prune(node.child, child_needed), child_needed)
+            return dataclasses.replace(node, child=child)
+        if isinstance(node, Unique):
+            child_needed = frozenset(needed | set(node.subset))
+            child = _maybe_project(prune(node.child, child_needed), child_needed)
+            return dataclasses.replace(node, child=child)
+        if isinstance(node, Union):
+            child_needed = frozenset(needed | set(node.on))
+            left = _maybe_project(prune(node.left, child_needed), child_needed)
+            right = _maybe_project(prune(node.right, child_needed), child_needed)
+            return dataclasses.replace(node, left=left, right=right)
+        if isinstance(node, Difference):
+            needed_l = frozenset(needed | set(node.on))
+            needed_r = frozenset(node.on)  # anti-join reads only the keys
+            left = _maybe_project(prune(node.left, needed_l), needed_l)
+            right = _maybe_project(prune(node.right, needed_r), needed_r)
+            return dataclasses.replace(node, left=left, right=right)
+        if isinstance(node, Sort):
+            child_needed = frozenset(needed | {node.by})
+            child = _maybe_project(prune(node.child, child_needed), child_needed)
+            return dataclasses.replace(node, child=child)
+        if isinstance(node, Rebalance):
+            child = _maybe_project(prune(node.child, needed), frozenset(needed))
+            return dataclasses.replace(node, child=child)
+        # Source (and any leaf): narrowing happens at the consumer boundary.
+        return node
+
+    out_names = frozenset(schema_names(schema_of(root)))
+    return prune(root, out_names)
+
+
+# -- pass 3: cost-model shuffle planning ---------------------------------------
+
+def plan_shuffles(root: Node, nworkers: int, src_rows: Mapping,
+                  params: cost_model.CostParams | None = None) -> Node:
+    """Concretize strategy / quota / capacity / ``num_chunks`` per shuffle op.
+
+    One host-side pass over the whole DAG: row estimates propagate from the
+    (single-sync) source counts, row widths come from the post-pushdown
+    schemas, and the PR-1 pipelined-shuffle cost model picks the chunk depth
+    per shuffle (``cost_model.choose_chunk_count``). Explicit user overrides
+    (non-None quota/capacity/num_chunks/strategy) are respected.
+    """
+    P = nworkers
+    p = params or cost_model.CostParams()
+    memo: dict = {}
+
+    def rows(n: Node) -> float:
+        return estimate_rows(n, src_rows, memo)
+
+    def chunks(node, n_rows_w: float, rb: float, core_op: str, card: float = 1.0):
+        if node.num_chunks is not None:
+            return node.num_chunks
+        core_s = cost_model.t_local(core_op, max(n_rows_w, 1.0), card, p)
+        return cost_model.choose_chunk_count(P, n_rows_w * rb, p, core_s=core_s)
+
+    def plan(node: Node) -> Node:
+        if isinstance(node, Join):
+            cap_l = capacity_of(node.left, P)
+            quota = node.quota or default_quota(cap_l, P)
+            capacity = node.capacity or 2 * cap_l
+            nl, nr = rows(node.left), rows(node.right)
+            rb = (row_bytes_of(schema_of(node.left))
+                  + row_bytes_of(schema_of(node.right))) / 2.0
+            strategy = node.strategy
+            if strategy == "auto":
+                strategy = cost_model.choose_join_strategy(nl, nr, P, rb, p)
+            if strategy == "broadcast":
+                strategy = "broadcast_left" if nl <= nr else "broadcast_right"
+            num_chunks = node.num_chunks or 1
+            if strategy == "shuffle":
+                num_chunks = chunks(node, (nl + nr) / max(P, 1), rb, "hash_join")
+            return dataclasses.replace(node, strategy=strategy, quota=quota,
+                                       capacity=capacity, num_chunks=num_chunks)
+        if isinstance(node, GroupBy):
+            cap = capacity_of(node.child, P)
+            card = node.cardinality_hint if node.cardinality_hint is not None else 0.0
+            plan_ = patterns.plan_groupby(
+                card, P, node.capacity or cap, n_rows=rows(node.child),
+                row_bytes=row_bytes_of(schema_of(node.child)), params=p,
+                pre_combine=node.pre_combine)
+            return dataclasses.replace(
+                node,
+                pre_combine=plan_.strategy == "combine_shuffle_reduce",
+                quota=node.quota or default_quota(cap, P),
+                capacity=node.capacity or cap,
+                num_chunks=node.num_chunks or plan_.num_chunks)
+        if isinstance(node, Unique):
+            cap = capacity_of(node.child, P)
+            rb = row_bytes_of(schema_of(node.child))
+            return dataclasses.replace(
+                node, quota=node.quota or default_quota(cap, P),
+                capacity=node.capacity or cap,
+                num_chunks=chunks(node, rows(node.child) / max(P, 1), rb, "unique"))
+        if isinstance(node, Union):
+            cap = capacity_of(node.left, P) + capacity_of(node.right, P)
+            rb = row_bytes_of(schema_of(node.left))
+            n_w = (rows(node.left) + rows(node.right)) / max(P, 1)
+            return dataclasses.replace(
+                node, quota=node.quota or default_quota(cap, P),
+                capacity=node.capacity or cap,
+                num_chunks=chunks(node, n_w, rb, "unique"))
+        if isinstance(node, Difference):
+            cap = capacity_of(node.left, P)
+            rb = row_bytes_of(schema_of(node.left))
+            return dataclasses.replace(
+                node, quota=node.quota or default_quota(cap, P),
+                capacity=node.capacity or cap,
+                num_chunks=chunks(node, rows(node.left) / max(P, 1), rb,
+                                  "set_difference"))
+        if isinstance(node, Sort):
+            cap = capacity_of(node.child, P)
+            rb = row_bytes_of(schema_of(node.child))
+            return dataclasses.replace(
+                node, quota=node.quota or default_quota(cap, P, safety=3.0),
+                capacity=node.capacity or 2 * cap,
+                num_chunks=chunks(node, rows(node.child) / max(P, 1), rb, "sort"))
+        if isinstance(node, Rebalance):
+            cap = capacity_of(node.child, P)
+            rb = row_bytes_of(schema_of(node.child))
+            return dataclasses.replace(
+                node, quota=node.quota or cap,
+                num_chunks=chunks(node, rows(node.child) / max(P, 1), rb, "map"))
+        return node
+
+    return _rewrite_up(root, plan)
+
+
+# -- pass 4: shuffle elision (co-partition reuse) ------------------------------
+
+def elide_shuffles(root: Node) -> Node:
+    """Drop shuffles whose input is already co-partitioned on the op's key.
+
+    A keyed op needs rows with equal keys co-located. If the input is
+    hash-partitioned on tuple T and T's columns are a subset of the op's
+    keys, equal op-keys imply equal T — already co-located, so the op runs
+    locally (paper Table 2's co-partition column). Binary set ops and joins
+    additionally need both inputs partitioned by the *same* tuple (same hash
+    placement). Runs after :func:`plan_shuffles` so join strategies are
+    concrete.
+    """
+
+    def elide(node: Node) -> Node:
+        if isinstance(node, GroupBy) and not node.elide_shuffle:
+            p = partitioning_of(node.child)
+            if p and set(p) <= set(node.by):
+                return dataclasses.replace(node, elide_shuffle=True)
+        if isinstance(node, Unique) and not node.elide_shuffle:
+            p = partitioning_of(node.child)
+            if p and set(p) <= set(node.subset):
+                return dataclasses.replace(node, elide_shuffle=True)
+        if isinstance(node, Join) and node.strategy == "shuffle":
+            pl, pr = partitioning_of(node.left), partitioning_of(node.right)
+            if pl and pl == pr and set(pl) <= set(node.on):
+                return dataclasses.replace(node, strategy="local")
+        if isinstance(node, (Union, Difference)) and not node.elide_shuffle:
+            pl, pr = partitioning_of(node.left), partitioning_of(node.right)
+            if pl and pl == pr and set(pl) <= set(node.on):
+                return dataclasses.replace(node, elide_shuffle=True)
+        return node
+
+    return _rewrite_up(root, elide)
+
+
+# -- pass 5: embarrassingly-parallel fusion ------------------------------------
+
+def fuse_elementwise(root: Node) -> Node:
+    """Fuse chains of adjacent EP ops into single ``Fused`` stages."""
+
+    def fuse(node: Node) -> Node:
+        if isinstance(node, _EP):
+            c = node.child
+            if isinstance(c, Fused):
+                return Fused(c.child, c.steps + (node,))
+            if isinstance(c, _EP):
+                return Fused(c.child, (c, node))
+        return node
+
+    return _rewrite_up(root, fuse)
+
+
+# -- the full pipeline ---------------------------------------------------------
+
+def optimize(root: Node, nworkers: int, src_rows: Mapping,
+             params: cost_model.CostParams | None = None) -> Node:
+    """Run all rewrite passes and return the optimized, fully-planned root."""
+    root = pushdown_predicates(root)
+    root = pushdown_projections(root)
+    root = plan_shuffles(root, nworkers, src_rows, params)
+    root = elide_shuffles(root)
+    root = fuse_elementwise(root)
+    return root
