@@ -10,6 +10,8 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
   Fig 12   -> bench_vs_naive       (patterns vs baseline strategies)
   ISSUE 1  -> bench_pipeline       (monolithic vs pipelined chunked shuffle)
   ISSUE 2  -> bench_pipeline_fusion (eager per-op vs lazy-optimized pipeline)
+  ISSUE 3  -> bench_stream         (out-of-core streaming: overlap vs serial
+                                    decode vs monolithic-when-it-fits)
 """
 
 import os
@@ -24,6 +26,7 @@ BENCHES = [
     "benchmarks.bench_vs_naive",
     "benchmarks.bench_pipeline",
     "benchmarks.bench_pipeline_fusion",
+    "benchmarks.bench_stream",
 ]
 
 

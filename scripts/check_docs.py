@@ -1,13 +1,17 @@
-"""Documentation lint (ISSUE 1 + ISSUE 2 satellite CI check).
+"""Documentation lint (ISSUE 1 + ISSUE 2 + ISSUE 3 satellite CI check).
 
 Fails (exit 1) if:
   1. any symbol exported via ``__all__`` from a module under
-     ``repro.core`` (including ``repro.core.comm``) or the lazy-plan
-     package ``repro.plan`` lacks a docstring, or
+     ``repro.core`` (including ``repro.core.comm``), the lazy-plan
+     package ``repro.plan``, the streaming engine ``repro.stream``, or
+     the chunked dataset layer ``repro.data.dataset`` lacks a docstring, or
   2. ``docs/PATTERNS.md`` / ``docs/ARCHITECTURE.md`` is missing, or does not
      mention every pattern key in ``repro.core.patterns.PATTERNS``, or
   3. ``docs/LAZY_PLANS.md`` is missing, or does not mention every logical
-     node type and rewrite pass exported by ``repro.plan``.
+     node type and rewrite pass exported by ``repro.plan``, or
+  4. ``docs/STREAMING.md`` is missing, or does not mention every
+     ``repro.stream`` export (plus the batch-sizing entry point
+     ``choose_batch_rows``).
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -37,6 +41,11 @@ CORE_MODULES = [
     "repro.plan.optimizer",
     "repro.plan.executor",
     "repro.plan.frame",
+    # out-of-core streaming engine + dataset format (ISSUE 3)
+    "repro.stream",
+    "repro.stream.scan",
+    "repro.stream.runner",
+    "repro.data.dataset",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -96,6 +105,22 @@ def missing_lazy_plan_docs() -> list:
     return problems
 
 
+def missing_streaming_docs() -> list:
+    """Return problems with docs/STREAMING.md coverage of repro.stream."""
+    import repro.stream as stream_pkg
+
+    path = os.path.join(REPO_ROOT, "docs/STREAMING.md")
+    if not os.path.exists(path):
+        return ["docs/STREAMING.md is missing"]
+    text = open(path).read()
+    problems = []
+    for sym in list(stream_pkg.__all__) + ["choose_batch_rows",
+                                           "to_batches", "collect_stream"]:
+        if sym not in text:
+            problems.append(f"docs/STREAMING.md does not mention '{sym}'")
+    return problems
+
+
 def main() -> int:
     failures = missing_docstrings()
     if failures:
@@ -112,10 +137,16 @@ def main() -> int:
         print("Lazy-plan documentation problems:")
         for f in lazy_failures:
             print(f"  - {f}")
-    if failures or doc_failures or lazy_failures:
+    stream_failures = missing_streaming_docs()
+    if stream_failures:
+        print("Streaming documentation problems:")
+        for f in stream_failures:
+            print(f"  - {f}")
+    if failures or doc_failures or lazy_failures or stream_failures:
         return 1
-    print("check_docs: all exported core+plan symbols documented; "
-          "docs cover every pattern, node type and rewrite pass")
+    print("check_docs: all exported core+plan+stream symbols documented; "
+          "docs cover every pattern, node type, rewrite pass and streaming "
+          "export")
     return 0
 
 

@@ -35,6 +35,7 @@ __all__ = [
     "choose_groupby_strategy",
     "choose_shuffle_algorithm",
     "choose_chunk_count",
+    "choose_batch_rows",
 ]
 
 
@@ -180,6 +181,61 @@ def choose_chunk_count(
                 best_k, best_t = k, t
         k *= 2
     return best_k
+
+
+def choose_batch_rows(
+    P: int,
+    row_bytes: float,
+    p: CostParams = CostParams(),
+    total_rows: int | None = None,
+    memory_budget_bytes: float = 32e6,
+    working_set_factor: float = 4.0,
+    dispatch_overhead_s: float = 1e-3,
+    overhead_fraction: float = 0.05,
+    min_rows: int = 256,
+) -> int:
+    """Pick the global row count per streamed batch (morsel size).
+
+    Two forces bound the choice (the streaming analogue of
+    :func:`choose_chunk_count`'s alpha-vs-beta tradeoff):
+
+    - **memory ceiling** (hard): a batch's per-device working set —
+      ``row_bytes * rows / P`` inflated by ``working_set_factor`` for
+      shuffle buffers and operator intermediates — must fit
+      ``memory_budget_bytes``;
+    - **overhead amortization** (soft): each batch pays a fixed host-side
+      cost ``dispatch_overhead_s`` (decode setup, cache lookups, one
+      program dispatch), so batches should be large enough that this stays
+      under ``overhead_fraction`` of per-batch device work, modeled as
+      ``rows/P * (gamma + row_bytes * beta)`` seconds.
+
+    The intra-batch shuffle pipeline depth is planned separately per
+    shuffle op by :func:`choose_chunk_count` once batch-scale row estimates
+    are known (``repro.plan.optimizer.plan_shuffles``).
+
+    Args:
+      P: number of workers.
+      row_bytes: bytes per row of the scanned schema (post-pushdown).
+      p: Hockney/compute calibration.
+      total_rows: dataset rows, to clamp the batch to the data.
+      memory_budget_bytes: per-device budget for one batch's working set.
+      working_set_factor: working-set inflation over raw batch bytes.
+      dispatch_overhead_s: fixed per-batch host overhead.
+      overhead_fraction: target ceiling for overhead / device work.
+      min_rows: floor on the returned batch size.
+
+    Returns:
+      Global rows per batch (>= 1).
+    """
+    P = max(int(P), 1)
+    row_bytes = max(float(row_bytes), 1.0)
+    mem_rows = P * memory_budget_bytes / (row_bytes * max(working_set_factor, 1.0))
+    t_row = p.gamma_s_per_row + row_bytes * p.beta  # device seconds/row/worker
+    amort_rows = dispatch_overhead_s * P / (max(overhead_fraction, 1e-6) * t_row)
+    rows = min(mem_rows, max(amort_rows, float(min_rows)))
+    if total_rows is not None:
+        rows = min(rows, float(max(int(total_rows), 1)))
+    return max(int(rows), 1)
 
 
 def t_allgather(P: int, n_bytes: float, p: CostParams, algorithm: str = "ring"):

@@ -124,6 +124,7 @@ def dist_groupby(
     capacity: int,
     pre_combine: bool = True,
     num_chunks: int = 1,
+    finalize: bool = True,
 ) -> tuple[Table, dict]:
     """GroupBy-aggregate. pre_combine=True is the Combine-Shuffle-Reduce
     pattern (efficient at low cardinality C); False degenerates to plain
@@ -138,6 +139,10 @@ def dist_groupby(
       capacity: output capacity (>= distinct keys landing on this worker).
       pre_combine: combine locally before the shuffle (paper §5.4.1).
       num_chunks: shuffle pipeline depth K (K > 1 = pipelined chunked engine).
+      finalize: compute means and drop helper partials. ``finalize=False``
+        emits the mergeable partial-aggregate form (``<col>_sum`` /
+        ``<col>_count`` / ...) — the streaming engine's per-batch carry
+        state, merged across batches with ``local_groupby(merge=True)``.
 
     Returns:
       (aggregated table, {"overflow_shuffle": rows dropped at the shuffle}).
@@ -153,7 +158,7 @@ def dist_groupby(
         red = local_groupby(shuf, key_columns, aggs, capacity=capacity, merge=True)
     else:
         red = local_groupby(shuf, key_columns, aggs, capacity=capacity, merge=False)
-    out = finalize_groupby(red, aggs)
+    out = finalize_groupby(red, aggs) if finalize else red
     return out, {"overflow_shuffle": ov}
 
 

@@ -17,6 +17,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from ..core import DDF, DDFContext
+from .dataset import iter_csv_chunks
 
 __all__ = ["read_csv_dist", "write_csv_dist", "assign_files"]
 
@@ -33,17 +34,25 @@ def assign_files(files: Sequence[str], nworkers: int,
 
 
 def _read_csv(path: str, schema: Mapping[str, np.dtype]) -> dict[str, np.ndarray]:
-    with open(path) as f:
-        reader = csv.DictReader(f)
-        rows = list(reader)
-    return {k: np.asarray([r[k] for r in rows], dtype=d) for k, d in schema.items()}
+    """Read one CSV file into typed columns via the chunked columnar reader
+    (``dataset.iter_csv_chunks`` — no row-at-a-time dict materialization)."""
+    chunks = list(iter_csv_chunks(path, schema))
+    if not chunks:
+        return {k: np.zeros((0,), dtype=d) for k, d in schema.items()}
+    return {k: np.concatenate([c[k] for c in chunks]) for k in schema}
 
 
 def read_csv_dist(files: Sequence[str], schema: Mapping[str, np.dtype],
                   ctx: DDFContext, capacity: int | None = None,
                   mapping: Mapping[int, Sequence[str]] | None = None) -> DDF:
     """Partitioned input: each worker reads its file assignment; empty
-    workers get an empty partition with the shared schema (paper §5.3.8)."""
+    workers get an empty partition with the shared schema (paper §5.3.8).
+
+    An explicit ``capacity`` smaller than some worker's assigned rows raises
+    ``ValueError`` — rows are never silently dropped. Omit ``capacity`` to
+    size partitions from the largest assignment. For datasets that should
+    not be fully materialized, use ``repro.stream.scan_csv`` instead.
+    """
     nw = ctx.nworkers
     assignment = assign_files(files, nw, mapping)
     per_worker: list[dict[str, np.ndarray]] = []
@@ -54,14 +63,22 @@ def read_csv_dist(files: Sequence[str], schema: Mapping[str, np.dtype],
         else:
             per_worker.append({k: np.zeros((0,), dtype=d) for k, d in schema.items()})
 
-    cap = capacity or max(max((len(next(iter(p.values()))) for p in per_worker)), 1)
+    lens = [len(next(iter(p.values()))) for p in per_worker]
+    cap = capacity or max(max(lens), 1)
+    if max(lens) > cap:
+        offenders = {w: n for w, n in enumerate(lens) if n > cap}
+        raise ValueError(
+            f"read_csv_dist: capacity={cap} would silently drop rows on "
+            f"worker(s) {offenders} (rows assigned > capacity). Pass "
+            f"capacity >= {max(lens)}, omit capacity to auto-size, or "
+            f"stream the files with repro.stream.scan_csv.")
     import jax
     cols = {}
     counts = np.zeros((nw,), np.int32)
     for k, d in schema.items():
         buf = np.zeros((nw, cap), dtype=d)
         for w, p in enumerate(per_worker):
-            v = p[k][:cap]
+            v = p[k]
             buf[w, : len(v)] = v
             counts[w] = len(v)
         cols[k] = jax.device_put(buf.reshape(nw * cap), ctx.sharding())

@@ -2,24 +2,36 @@
 trainer's first-class data path (DESIGN.md §3).
 
 Stages (each one of the paper's patterns):
-  1. partitioned input  — synthetic corpus metadata split across workers
+  1. partitioned input  — synthetic corpus written as a chunked on-disk
+                          dataset, opened through ``repro.stream.scan_dataset``
   2. dedup              — Combine-Shuffle-Reduce ``unique`` on content hash
-  3. quality filter     — Embarrassingly-Parallel ``select``
+                          (streamed with cross-batch carry state)
+  3. quality filter     — Embarrassingly-Parallel ``select`` (pushed into
+                          the scan where the planner can)
   4. length bucketing   — Sample-Shuffle-Compute ``sort_values`` by length
+                          (host-side spill + merge when streamed)
   5. rebalance          — Partitioned-I/O repartition (straggler guard)
   6. stats              — Globally-Reduce aggregations (token budget)
 
+The whole document pipeline runs through the out-of-core streaming engine:
+construction materializes the processed docs via ``collect_stream`` and
+:meth:`TokenPipeline.epoch` re-streams one epoch through ``.to_batches()``
+so the trainer's data path exercises the streaming engine end to end.
+
 The pipeline yields fixed-shape token batches; document token content is
 generated deterministically from (doc_id, position) so the corpus never
-needs to exist on disk — honest for a synthetic benchmark while keeping the
-DDF stages real.
+needs to exist on disk at token granularity — honest for a synthetic
+benchmark while keeping the DDF stages real.
 """
 
 from __future__ import annotations
 
+import tempfile
+
 import numpy as np
 
-from ..core import DDF, DDFContext
+from ..core import DDFContext
+from .dataset import write_dataset
 from .synthetic import synthetic_token_corpus
 
 __all__ = ["TokenPipeline"]
@@ -33,22 +45,24 @@ class TokenPipeline:
         self.seq_len = seq_len
         self.batch = batch
         self.seed = seed
+        self._quality_threshold = quality_threshold
 
         corpus = synthetic_token_corpus(n_docs, vocab, seed=seed)
-        # mode pinned: this internal pipeline drives the eager tuple-returning
-        # API and must not be affected by repro.plan.set_default_mode("lazy")
-        ddf = DDF.from_numpy(corpus, ctx, mode="eager",
-                             capacity=2 * (n_docs // ctx.nworkers + 1))
+        # 1. partitioned input: the corpus lives as a chunked on-disk
+        # dataset; the pipeline streams it in morsels rather than
+        # materializing the full table on device first
+        self._tmpdir = tempfile.TemporaryDirectory(prefix="repro-corpus-")
+        chunk = max(n_docs // 8, 64)
+        self._manifest = write_dataset(corpus, self._tmpdir.name,
+                                       chunk_rows=chunk)
+        self._batch_rows = max(n_docs // 4, 64)
 
-        # 2. dedup on content hash (combine-shuffle-reduce)
-        ddf, self.dedup_info = ddf.unique(("content_hash",))
-        # 3. quality filter (embarrassingly parallel)
-        ddf = ddf.select(lambda c: c["quality"] > quality_threshold, name="quality")
-        # 4. length bucketing (sample-shuffle-compute)
-        ddf, self.sort_info = ddf.sort_values("length")
-        # 5. rebalance (partitioned I/O)
-        ddf, self.rebalance_info = ddf.rebalance()
+        lz = self._doc_plan()
+        ddf = lz.collect_stream(prefetch=True)
+        self.stream_info = dict(lz.last_info or {})
         self.docs = ddf
+        # legacy per-stage info slots now carry the streamed run's counters
+        self.dedup_info = self.sort_info = self.rebalance_info = self.stream_info
         # 6. global stats (globally reduce)
         self.total_tokens = int(ddf.agg("length", "sum"))
         self.n_docs = ddf.length()
@@ -58,20 +72,50 @@ class TokenPipeline:
         self._lengths = host["length"]
         self._rng = np.random.default_rng(seed + 1)
 
+    def _doc_plan(self):
+        """Build the lazy document pipeline over the on-disk corpus:
+        scan -> dedup (carry) -> quality select -> length sort (spill) ->
+        rebalance."""
+        from ..stream import scan_dataset  # local import: stream dep is lazy
+
+        thr = self._quality_threshold
+        return (scan_dataset(self._manifest, self.ctx,
+                             batch_rows=self._batch_rows)
+                .unique(("content_hash",))
+                .select(lambda c: c["quality"] > thr, name="quality")
+                .sort_values("length")
+                .rebalance())
+
+    def epoch(self, prefetch: bool = True):
+        """Stream one epoch of the processed document pipeline through the
+        out-of-core engine (``LazyDDF.to_batches``), yielding packed
+        ``(batch, seq_len)`` token blocks per document morsel. Leftover
+        docs that do not fill a batch are dropped (epoch semantics)."""
+        for host in self._doc_plan().to_batches(prefetch=prefetch):
+            ids, lens = host["doc_id"], host["length"]
+            for s in range(0, len(ids) - self.batch + 1, self.batch):
+                yield self._pack(ids[s:s + self.batch],
+                                 lens[s:s + self.batch])
+
+    def _pack(self, doc_ids: np.ndarray, lengths: np.ndarray) -> dict:
+        """Pack documents into a (batch, seq_len) token block. Tokens are a
+        deterministic hash of (doc_id, pos) — reproducible across restarts."""
+        doc = doc_ids[:, None].astype(np.uint32)
+        pos = np.arange(self.seq_len, dtype=np.uint32)[None, :]
+        h = (doc * np.uint32(2654435761) + pos * np.uint32(40503)) & np.uint32(0xFFFFFFFF)
+        h ^= h >> np.uint32(16)
+        tokens = (h % np.uint32(self.vocab)).astype(np.int32)
+        length = np.minimum(lengths, self.seq_len)[:, None]
+        mask = (np.arange(self.seq_len)[None, :] < length).astype(np.float32)
+        labels = np.roll(tokens, -1, axis=1)
+        return {"tokens": tokens, "labels": labels, "loss_mask": mask}
+
     def __iter__(self):
         return self
 
     def __next__(self) -> dict[str, np.ndarray]:
-        """Pack documents into a (batch, seq_len) token block. Tokens are a
-        deterministic hash of (doc_id, pos) — reproducible across restarts."""
-        B, S = self.batch, self.seq_len
-        idx = self._rng.integers(0, len(self._doc_ids), size=B)
-        doc = self._doc_ids[idx][:, None].astype(np.uint32)
-        pos = np.arange(S, dtype=np.uint32)[None, :]
-        h = (doc * np.uint32(2654435761) + pos * np.uint32(40503)) & np.uint32(0xFFFFFFFF)
-        h ^= h >> np.uint32(16)
-        tokens = (h % np.uint32(self.vocab)).astype(np.int32)
-        length = np.minimum(self._lengths[idx], S)[:, None]
-        mask = (np.arange(S)[None, :] < length).astype(np.float32)
-        labels = np.roll(tokens, -1, axis=1)
-        return {"tokens": tokens, "labels": labels, "loss_mask": mask}
+        """Random fixed-shape token batch sampled from the processed docs
+        (the steady-state trainer feed; use :meth:`epoch` for sequential
+        streamed epochs)."""
+        idx = self._rng.integers(0, len(self._doc_ids), size=self.batch)
+        return self._pack(self._doc_ids[idx], self._lengths[idx])

@@ -49,6 +49,7 @@ from .logical import (
     Project,
     Rebalance,
     Rename,
+    Scan,
     Select,
     Sort,
     Source,
@@ -57,7 +58,7 @@ from .logical import (
     walk,
 )
 
-__all__ = ["execute", "optimized_plan", "source_row_counts"]
+__all__ = ["execute", "run_planned", "optimized_plan", "source_row_counts"]
 
 _PLAN_CACHE = _LRUCache(maxsize=128)
 
@@ -143,7 +144,9 @@ def _make_plan_fn(root: Node, ordered_sids: tuple):
         def lower(node: Node) -> Table:
             if node in memo:
                 return memo[node]
-            if isinstance(node, Source):
+            if isinstance(node, (Source, Scan)):
+                # a Scan's per-batch table is bound by the streaming runner
+                # under the scan's sid, exactly like a Source binding
                 out = env[node.sid]
             elif isinstance(node, Fused):
                 out = lower(node.child)
@@ -177,11 +180,12 @@ def _make_plan_fn(root: Node, ordered_sids: tuple):
                 if node.elide_shuffle:
                     red = local_groupby(t, node.by, aggs,
                                         capacity=node.capacity, merge=False)
-                    out = finalize_groupby(red, aggs)
+                    out = red if node.emit_partials else finalize_groupby(red, aggs)
                 else:
                     out, info = operators.dist_groupby(
                         comm, t, node.by, aggs, node.quota, node.capacity,
-                        bool(node.pre_combine), num_chunks=node.num_chunks or 1)
+                        bool(node.pre_combine), num_chunks=node.num_chunks or 1,
+                        finalize=not node.emit_partials)
                     put_aux(node, info)
             elif isinstance(node, Unique):
                 t = lower(node.child)
@@ -249,6 +253,18 @@ def execute(root: Node, ctx: DDFContext, sources: Mapping,
     """
     src_rows = dict(src_rows) if src_rows is not None else source_row_counts(sources)
     plan = optimized_plan(root, ctx, src_rows, level=level)
+    return run_planned(plan, ctx, sources)
+
+
+def run_planned(plan: Node, ctx: DDFContext, sources: Mapping):
+    """Execute an already-optimized/planned DAG — no optimizer pass.
+
+    The streaming runner calls this once per batch: the compiled-op cache
+    key is the planned DAG + argument schemas, so every batch after the
+    first is a cache hit (one trace/compile per streamed pipeline).
+    ``sources`` must bind every ``Source``/``Scan`` sid in ``plan``.
+    Returns ``(result DDF, aux info dict)`` like :func:`execute`.
+    """
     ordered_sids = tuple(sorted(sources))
     ddfs = [sources[s] for s in ordered_sids]
     arg_schemas = tuple(_schema_sig(d) for d in ddfs)

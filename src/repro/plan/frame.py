@@ -57,10 +57,13 @@ class LazyDDF:
     ``DDF.lazy()`` or ``DDF.from_numpy(..., mode="lazy")``.
     """
 
-    def __init__(self, root: Node, ctx: DDFContext, sources: Mapping):
+    def __init__(self, root: Node, ctx: DDFContext, sources: Mapping,
+                 scans: Mapping | None = None):
         self._root = root
         self._ctx = ctx
         self._sources = dict(sources)
+        # scan sid -> DatasetManifest (out-of-core leaves, repro.stream)
+        self._scans = dict(scans or {})
         self.last_info: dict | None = None
 
     @classmethod
@@ -95,11 +98,13 @@ class LazyDDF:
 
     def _derive(self, node: Node, other: "LazyDDF | None" = None) -> "LazyDDF":
         srcs = dict(self._sources)
+        scans = dict(self._scans)
         if other is not None:
             if other._ctx is not self._ctx and other._ctx != self._ctx:
                 raise ValueError("cannot combine LazyDDFs from different contexts")
             srcs.update(other._sources)
-        return LazyDDF(node, self._ctx, srcs)
+            scans.update(other._scans)
+        return LazyDDF(node, self._ctx, srcs, scans)
 
     @staticmethod
     def _coerce(other) -> "LazyDDF":
@@ -238,17 +243,57 @@ class LazyDDF:
 
     # -- terminals ---------------------------------------------------------------
     def _rows(self) -> dict:
-        return executor.source_row_counts(self._sources)
+        rows = executor.source_row_counts(self._sources)
+        rows.update({sid: m.num_rows for sid, m in self._scans.items()})
+        return rows
 
     def collect(self, level: str = "all") -> DDF:
         """Optimize + compile + execute the pipeline; returns an eager DDF.
 
         Aux outputs (overflow counters etc.) land in ``self.last_info``.
-        ``level="plan-only"`` skips the rewrite passes (A/B baseline)."""
+        ``level="plan-only"`` skips the rewrite passes (A/B baseline).
+        Plans with ``SCAN`` leaves (built via ``repro.stream.scan_csv`` /
+        ``scan_dataset``) route through :meth:`collect_stream` — the
+        out-of-core engine is the only way to run them (and it always runs
+        the full optimizer, so ``level`` overrides are rejected there)."""
+        if self._scans:
+            if level != "all":
+                raise ValueError(
+                    f"collect(level={level!r}) is not supported for "
+                    "scan-bearing plans; the streaming engine always runs "
+                    "the full optimizer")
+            return self.collect_stream()
         out, info = executor.execute(self._root, self._ctx, self._sources,
                                      src_rows=self._rows(), level=level)
         self.last_info = info
         return out
+
+    def collect_stream(self, batch_rows: int | None = None,
+                       prefetch: bool = True, **opts) -> DDF:
+        """Run the pipeline through the out-of-core streaming engine
+        (``repro.stream``): SCAN leaves are sliced into cost-model-sized
+        batches, each batch runs through the compiled plan, and non-EP
+        tails finalize via carry-state merges (groupby/unique) or host-side
+        spill + merge (sort, scan×scan joins). Returns the final eager DDF;
+        per-batch aux counters land in ``self.last_info``."""
+        from ..stream import runner as _runner
+        out, info = _runner.collect(self, batch_rows=batch_rows,
+                                    prefetch=prefetch, **opts)
+        self.last_info = info
+        return out
+
+    def to_batches(self, batch_rows: int | None = None,
+                   prefetch: bool = True, **opts):
+        """Stream the pipeline's result as host column-dict batches.
+
+        For fully streamable plans this is true out-of-core iteration —
+        each yielded batch is one morsel through the compiled plan and the
+        full result never materializes. Plans whose tail needs carry/spill
+        finalization finalize first, then yield the result in
+        ``batch_rows``-sized slices."""
+        from ..stream import runner as _runner
+        return _runner.to_batches(self, batch_rows=batch_rows,
+                                  prefetch=prefetch, **opts)
 
     def collect_with_info(self, level: str = "all"):
         """Like :meth:`collect` but returns ``(DDF, info dict)``."""

@@ -39,6 +39,7 @@ import numpy as np
 __all__ = [
     "Node",
     "Source",
+    "Scan",
     "Select",
     "Project",
     "Rename",
@@ -95,6 +96,30 @@ class Source(Node):
     sid: int
     schema: Schema
     capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan(Node):
+    """Leaf: a chunked on-disk dataset streamed in cost-model-sized batches.
+
+    ``sid`` keys the ``DatasetManifest`` held by the owning ``LazyDDF`` /
+    streaming runner (manifests stay out of the node so plans remain
+    hashable). ``schema`` is the full on-disk schema; ``columns`` is the
+    projection pushed into the scan (None = all — only these ``.npz``
+    members are decompressed per batch). ``pred_names``/``pred_sigs``
+    identify predicates pushed into the scan for plan equality and compile
+    caching (the callables themselves, ``pred_fns``, are compare-excluded,
+    mirroring :class:`Select`); the runner applies them host-side per batch
+    *before* rows are admitted to the device. ``capacity`` is the
+    per-worker batch capacity the runner slices the manifest into."""
+
+    sid: int
+    schema: Schema
+    capacity: int
+    columns: tuple | None = None
+    pred_names: tuple = ()
+    pred_sigs: tuple = ()
+    pred_fns: tuple = dataclasses.field(compare=False, default=())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,7 +195,12 @@ class Join(Node):
 
 @dataclasses.dataclass(frozen=True)
 class GroupBy(Node):
-    """GroupBy-aggregate; ``aggs`` is ((value_col, (op, ...)), ...) sorted."""
+    """GroupBy-aggregate; ``aggs`` is ((value_col, (op, ...)), ...) sorted.
+
+    ``emit_partials=True`` makes the node emit mergeable partial aggregates
+    (``<col>_sum``/``<col>_count``/... — mean stays decomposed, no
+    finalization) — the per-batch form the streaming runner's carry state
+    merges across batches before one final ``finalize_groupby``."""
 
     child: Node
     by: tuple
@@ -181,6 +211,7 @@ class GroupBy(Node):
     capacity: int | None = None
     num_chunks: int | None = None
     elide_shuffle: bool = False
+    emit_partials: bool = False
 
     _CHILD_FIELDS: ClassVar[tuple] = ("child",)
 
@@ -374,6 +405,23 @@ def _groupby_schema(child: Schema, by: tuple, aggs: tuple) -> Schema:
     return tuple(sorted(set(out)))
 
 
+def _groupby_partial_schema(child: Schema, by: tuple, aggs: tuple) -> Schema:
+    """Schema of the mergeable partial-aggregate form (``emit_partials``):
+    mean decomposes into sum+count, nothing is finalized or dropped."""
+    d = {n: (dt, tail) for n, dt, tail in child}
+    out = [(n, *d[n]) for n in by]
+    for col, ops in aggs:
+        for op in ops:
+            if op == "mean":
+                out.append((f"{col}_sum", d[col][0], d[col][1]))
+                out.append((f"{col}_count", "int32", ()))
+            elif op == "count":
+                out.append((f"{col}_count", "int32", ()))
+            else:
+                out.append((f"{col}_{op}", d[col][0], d[col][1]))
+    return tuple(sorted(set(out)))
+
+
 def schema_of(node: Node, memo: dict | None = None) -> Schema:
     """Output schema of a node: ((name, dtype, trailing shape), ...) sorted."""
     memo = {} if memo is None else memo
@@ -381,6 +429,12 @@ def schema_of(node: Node, memo: dict | None = None) -> Schema:
         return memo[id(node)]
     if isinstance(node, Source):
         s = node.schema
+    elif isinstance(node, Scan):
+        if node.columns is None:
+            s = node.schema
+        else:
+            keep = set(node.columns)
+            s = tuple(x for x in node.schema if x[0] in keep)
     elif isinstance(node, (Select, Sort, Rebalance, Unique)):
         s = schema_of(node.child, memo)
     elif isinstance(node, Project):
@@ -398,7 +452,8 @@ def schema_of(node: Node, memo: dict | None = None) -> Schema:
     elif isinstance(node, Join):
         s = _join_schema(schema_of(node.left, memo), schema_of(node.right, memo), node.on)
     elif isinstance(node, GroupBy):
-        s = _groupby_schema(schema_of(node.child, memo), node.by, node.aggs)
+        fn = _groupby_partial_schema if node.emit_partials else _groupby_schema
+        s = fn(schema_of(node.child, memo), node.by, node.aggs)
     elif isinstance(node, (Union, Difference)):
         s = schema_of(node.left, memo)
     elif isinstance(node, Fused):
@@ -419,7 +474,7 @@ def row_bytes_of(schema: Schema) -> float:
 
 def capacity_of(node: Node, nworkers: int) -> int:
     """Static per-partition output capacity, mirroring the eager defaults."""
-    if isinstance(node, Source):
+    if isinstance(node, (Source, Scan)):
         return node.capacity
     if isinstance(node, (Select, Project, Rename, MapColumns, Fused)):
         return capacity_of(node.child, nworkers)
@@ -445,7 +500,7 @@ def partitioning_of(node: Node) -> tuple | None:
     None. "Co-partitioned on K" means: rows with equal K-values live on the
     same worker, placed by ``hash_partition_ids`` over K in order — the
     property the shuffle-elision pass exploits (paper Table 2)."""
-    if isinstance(node, Source):
+    if isinstance(node, (Source, Scan)):
         return None
     if isinstance(node, Select):
         return partitioning_of(node.child)
@@ -507,6 +562,10 @@ def estimate_rows(node: Node, src_rows: Mapping, memo: dict | None = None) -> fl
         return memo[id(node)]
     if isinstance(node, Source):
         r = float(src_rows.get(node.sid, node.capacity))
+    elif isinstance(node, Scan):
+        # predicates pushed into the scan filter before admission
+        r = (float(src_rows.get(node.sid, node.capacity))
+             * SELECT_SELECTIVITY ** len(node.pred_sigs))
     elif isinstance(node, Select):
         r = SELECT_SELECTIVITY * estimate_rows(node.child, src_rows, memo)
     elif isinstance(node, (Project, Rename, MapColumns, Sort, Rebalance)):
@@ -584,6 +643,11 @@ def _describe(node: Node) -> str:
     if isinstance(node, Source):
         return (f"SOURCE#{node.sid} cols={schema_names(node.schema)} "
                 f"capacity={node.capacity}")
+    if isinstance(node, Scan):
+        cols = node.columns if node.columns is not None else schema_names(node.schema)
+        preds = f" preds={node.pred_names}" if node.pred_names else ""
+        return (f"SCAN#{node.sid} cols={tuple(cols)} "
+                f"batch_capacity={node.capacity}{preds}")
     if isinstance(node, Select):
         return f"SELECT {node.name} used={node.used}"
     if isinstance(node, Project):
@@ -598,6 +662,7 @@ def _describe(node: Node) -> str:
     if isinstance(node, GroupBy):
         s = f"GROUPBY by={node.by} aggs={node.aggs} pre_combine={node.pre_combine}"
         s += planned(node)
+        s += " partials" if node.emit_partials else ""
         return s + (" elide_shuffle" if node.elide_shuffle else "")
     if isinstance(node, Unique):
         return (f"UNIQUE subset={node.subset}{planned(node)}"

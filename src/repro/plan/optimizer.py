@@ -28,6 +28,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
+import numpy as np
+
 from ..core import cost_model, patterns
 from ..core.partition import default_quota
 from .logical import (
@@ -41,6 +43,7 @@ from .logical import (
     Project,
     Rebalance,
     Rename,
+    Scan,
     Select,
     Sort,
     Union,
@@ -57,6 +60,7 @@ __all__ = [
     "optimize",
     "pushdown_predicates",
     "pushdown_projections",
+    "pushdown_scans",
     "plan_shuffles",
     "elide_shuffles",
     "fuse_elementwise",
@@ -217,6 +221,73 @@ def pushdown_projections(root: Node) -> Node:
     return prune(root, out_names)
 
 
+# -- pass 2b: scan pushdown ----------------------------------------------------
+
+def _host_pred_ok(fn, schema) -> bool:
+    """Probe whether a select predicate can run host-side on numpy columns
+    (the scan's pre-admission filter). Mirrors ``probe_columns`` but with a
+    plain numpy table; any exception or a non-boolean/miss-shaped result
+    means the predicate stays on the device."""
+    cols = {n: np.ones((2,) + tuple(tail), dtype=np.dtype(dt))
+            for n, dt, tail in schema}
+    try:
+        out = np.asarray(fn(dict(cols)))
+    except Exception:
+        return False
+    return out.shape[:1] == (2,) and out.dtype in (np.dtype(bool),)
+
+
+def pushdown_scans(root: Node) -> Node:
+    """Absorb projections and predicates sitting on a ``SCAN`` into the scan.
+
+    Three rewrites run to fixpoint:
+
+    - ``PROJECT(SCAN)`` -> ``SCAN[columns]`` — only the referenced ``.npz``
+      members are decompressed per batch;
+    - ``SELECT(SCAN)`` -> ``SCAN[+pred]`` — the predicate runs host-side on
+      the decoded chunk *before* rows are admitted to the device (probed on
+      a tiny numpy table first; predicates that cannot run on numpy stay as
+      device SELECTs);
+    - ``PROJECT(SELECT(x))`` -> ``SELECT(PROJECT(x))`` when the predicate's
+      accessed columns survive the projection, so projections keep sinking
+      toward the scan.
+    """
+
+    def absorb(node: Node) -> Node:
+        if isinstance(node, Project) and isinstance(node.child, Scan):
+            sc = node.child
+            narrowed = dataclasses.replace(sc, columns=tuple(sorted(node.names)))
+            if sc.pred_fns:
+                # predicates already absorbed into the scan run on the
+                # decoded batch: only narrow the decode set if every pred
+                # still evaluates on the projected schema (re-probe)
+                restricted = schema_of(narrowed)
+                if not all(_host_pred_ok(fn, restricted) for fn in sc.pred_fns):
+                    return node
+            return narrowed
+        if isinstance(node, Select) and isinstance(node.child, Scan):
+            sc = node.child
+            if node.fn_sig and _host_pred_ok(node.fn, schema_of(sc)):
+                return dataclasses.replace(
+                    sc,
+                    pred_names=sc.pred_names + (node.name,),
+                    pred_sigs=sc.pred_sigs + (node.fn_sig,),
+                    pred_fns=sc.pred_fns + (node.fn,))
+        if (isinstance(node, Project) and isinstance(node.child, Select)
+                and node.child.used is not None
+                and set(node.child.used) <= set(node.names)):
+            sel = node.child
+            return dataclasses.replace(
+                sel, child=dataclasses.replace(node, child=sel.child))
+        return node
+
+    prev = None
+    while prev != root:
+        prev = root
+        root = _rewrite_up(root, absorb)
+    return root
+
+
 # -- pass 3: cost-model shuffle planning ---------------------------------------
 
 def plan_shuffles(root: Node, nworkers: int, src_rows: Mapping,
@@ -245,8 +316,12 @@ def plan_shuffles(root: Node, nworkers: int, src_rows: Mapping,
     def plan(node: Node) -> Node:
         if isinstance(node, Join):
             cap_l = capacity_of(node.left, P)
-            quota = node.quota or default_quota(cap_l, P)
-            capacity = node.capacity or 2 * cap_l
+            # the join shuffles BOTH relations with one quota, so size it
+            # (and the output) from the larger side — with streamed scans
+            # the probe batch can be far smaller than the build relation
+            cap_m = max(cap_l, capacity_of(node.right, P))
+            quota = node.quota or default_quota(cap_m, P)
+            capacity = node.capacity or 2 * cap_m
             nl, nr = rows(node.left), rows(node.right)
             rb = (row_bytes_of(schema_of(node.left))
                   + row_bytes_of(schema_of(node.right))) / 2.0
@@ -290,9 +365,11 @@ def plan_shuffles(root: Node, nworkers: int, src_rows: Mapping,
                 num_chunks=chunks(node, n_w, rb, "unique"))
         if isinstance(node, Difference):
             cap = capacity_of(node.left, P)
+            # both relations shuffle with one quota (see Join above)
+            cap_q = max(cap, capacity_of(node.right, P))
             rb = row_bytes_of(schema_of(node.left))
             return dataclasses.replace(
-                node, quota=node.quota or default_quota(cap, P),
+                node, quota=node.quota or default_quota(cap_q, P),
                 capacity=node.capacity or cap,
                 num_chunks=chunks(node, rows(node.left) / max(P, 1), rb,
                                   "set_difference"))
@@ -374,6 +451,7 @@ def optimize(root: Node, nworkers: int, src_rows: Mapping,
     """Run all rewrite passes and return the optimized, fully-planned root."""
     root = pushdown_predicates(root)
     root = pushdown_projections(root)
+    root = pushdown_scans(root)
     root = plan_shuffles(root, nworkers, src_rows, params)
     root = elide_shuffles(root)
     root = fuse_elementwise(root)

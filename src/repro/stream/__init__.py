@@ -1,0 +1,24 @@
+"""Out-of-core streaming execution engine (ISSUE 3 tentpole).
+
+Runs lazy ``repro.plan`` pipelines over chunked on-disk datasets larger
+than aggregate device capacity:
+
+- ``scan``   — ``scan_csv`` / ``scan_dataset`` build ``LazyDDF`` handles
+  whose leaves are ``SCAN`` plan nodes over a ``DatasetManifest``;
+- ``runner`` — the morsel-driven batch runner: slices manifests into
+  cost-model-sized batches (``cost_model.choose_batch_rows``), drives each
+  batch through the one compiled shard_map program, overlaps host-side
+  chunk decode of batch *k+1* with device execution of batch *k*
+  (double-buffered prefetch), and finalizes non-EP tails via carry-state
+  merges (groupby/unique) or host-side spill + merge (sort, scan x scan
+  joins).
+
+Entry points: ``repro.stream.scan_csv(...)`` / ``scan_dataset(...)``
+returning a ``LazyDDF``; then ``.collect_stream()`` / ``.to_batches()``
+(plain ``.collect()`` on a scan-bearing plan routes here automatically).
+"""
+
+from .runner import collect, to_batches  # noqa: F401
+from .scan import scan_csv, scan_dataset  # noqa: F401
+
+__all__ = ["scan_csv", "scan_dataset", "collect", "to_batches"]

@@ -1,0 +1,645 @@
+"""Morsel-driven out-of-core batch runner (the streaming engine's core).
+
+The runner executes a lazy plan whose leaves include ``SCAN`` nodes over
+chunked on-disk datasets (``repro.data.dataset``). The dataset is sliced
+into cost-model-sized batches (``SCAN.capacity`` per worker, from
+``cost_model.choose_batch_rows``); every batch is decoded host-side
+(projection + pushed-down predicates applied *before* admission), laid out
+as a fixed-capacity device table, and driven through the **same** compiled
+shard_map program (``executor.run_planned`` — one trace/compile per
+pipeline, every later batch is a compiled-op cache hit). Host-side decode
+of batch *k+1* overlaps device execution of batch *k* via a double-buffered
+prefetch thread, mirroring the PR-1 pipelined shuffle at the I/O layer.
+
+**Streamable vs blocking.** A subtree is *streamable* when evaluating it on
+a contiguous scan batch equals the global evaluation restricted to that
+batch: embarrassingly-parallel ops, rebalance, joins whose other side is
+scan-free. Blocking ops (groupby / unique / sort / set ops / scan x scan
+joins) need cross-batch state:
+
+- **carry state** — ``groupby`` runs per batch with ``emit_partials`` and
+  the partial aggregates are merged into a device-resident carry table
+  (``local_groupby(merge=True)``; hash placement is identical across
+  batches, so the merge is worker-local). ``unique`` carries the distinct
+  rows seen so far. One finalize pass at the end.
+- **host-side spill** — ``sort_values`` streams its input to an on-disk
+  spill dataset and runs one final stable host merge by the sort key;
+  joins with scans on *both* sides spill each side into key-hash buckets
+  and join bucket pairs (build side never has to fit device capacity).
+
+Plans mixing these compose by staged materialization: the deepest blocking
+node is finalized first, substituted back as an in-memory ``Source``, and
+the rewritten plan streams again until no scans remain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import shutil
+import tempfile
+import threading
+from typing import Iterator, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cost_model
+from ..core.api import DDF, DDFContext
+from ..core.dataframe import Table, concat
+from ..core.local_ops import finalize_groupby, local_groupby, local_unique
+from ..core.partition import default_quota
+from ..data.dataset import DatasetManifest, DatasetWriter, read_rows
+from ..plan import executor, optimizer
+from ..plan.logical import (
+    Fused,
+    GroupBy,
+    Join,
+    MapColumns,
+    Node,
+    Project,
+    Rebalance,
+    Rename,
+    Scan,
+    Select,
+    Sort,
+    Source,
+    Unique,
+    schema_of,
+    walk,
+)
+
+__all__ = ["collect", "to_batches"]
+
+_EPLIKE = (Select, Project, Rename, MapColumns, Fused, Rebalance)
+_SIDS = itertools.count(1 << 20)  # runner-created Source ids, disjoint range
+
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+
+
+# -- plan analysis -------------------------------------------------------------
+
+def _has_scan(node: Node) -> bool:
+    return any(isinstance(n, Scan) for n in walk(node))
+
+
+def _streamable(node: Node) -> bool:
+    """True when per-batch evaluation == global evaluation per batch."""
+    if not _has_scan(node):
+        return True
+    if isinstance(node, Scan):
+        return True
+    if isinstance(node, _EPLIKE):
+        return _streamable(node.child)
+    if isinstance(node, Join):
+        lh, rh = _has_scan(node.left), _has_scan(node.right)
+        if lh and rh:
+            return False  # cross-batch matches: needs the spill join
+        return _streamable(node.left if lh else node.right)
+    # GroupBy / Unique / Sort / Union / Difference: cross-batch state
+    # (set ops deduplicate, so even a probe-side scan cannot stream)
+    return False
+
+
+def _find_blocking(root: Node) -> Node | None:
+    """Deepest non-streamable scan-bearing node whose children are each
+    scan-free or streamable (post-order walk => deepest first)."""
+    for n in walk(root):
+        if _has_scan(n) and not _streamable(n):
+            if all((not _has_scan(c)) or _streamable(c) for c in n.children):
+                return n
+    return None
+
+
+def _replace_node(root: Node, target: Node, repl: Node) -> Node:
+    memo: dict = {}
+
+    def rec(n: Node) -> Node:
+        if n is target:
+            return repl
+        if id(n) in memo:
+            return memo[id(n)]
+        kids = tuple(rec(c) for c in n.children)
+        out = n if kids == n.children else n.with_children(kids)
+        memo[id(n)] = out
+        return out
+
+    return rec(root)
+
+
+def _set_batch_caps(root: Node, cap: int) -> Node:
+    def rec(n: Node) -> Node:
+        if isinstance(n, Scan):
+            return dataclasses.replace(n, capacity=cap)
+        kids = tuple(rec(c) for c in n.children)
+        return n if kids == n.children else n.with_children(kids)
+
+    return rec(root)
+
+
+def _ddf_schema(ddf: DDF) -> tuple:
+    return tuple(sorted((n, str(v.dtype), tuple(v.shape[1:]))
+                        for n, v in ddf.columns.items()))
+
+
+# -- host-side hashing (spill-join bucketing) ----------------------------------
+
+def _np_hash32(x: np.ndarray) -> np.ndarray:
+    """numpy replica of ``partition.hash32`` (lowbias32), for host bucketing."""
+    x = np.asarray(x)
+    if x.dtype in (np.int64, np.uint64):
+        u = x.astype(np.uint64)
+        x = (u ^ (u >> np.uint64(32))).astype(np.uint32)
+    elif x.dtype == np.bool_:
+        x = x.astype(np.uint32)
+    elif np.issubdtype(x.dtype, np.floating):
+        x = np.ascontiguousarray(x.astype(np.float32)).view(np.uint32)
+    else:
+        x = x.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        x = x ^ (x >> np.uint32(16))
+        x = x * _M1
+        x = x ^ (x >> np.uint32(15))
+        x = x * _M2
+        x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def _np_hash_columns(host: Mapping[str, np.ndarray], cols) -> np.ndarray:
+    n = len(next(iter(host.values())))
+    h = np.zeros((n,), np.uint32)
+    with np.errstate(over="ignore"):
+        for name in cols:
+            hk = _np_hash32(host[name])
+            h = h ^ (hk + np.uint32(0x9E3779B9) + (h << np.uint32(6))
+                     + (h >> np.uint32(2)))
+    return h
+
+
+# -- prefetch (double buffering) -----------------------------------------------
+
+def _prefetched(gen: Iterator, depth: int = 2) -> Iterator:
+    """Run ``gen`` on a background thread with a bounded queue, so host
+    decode of the next batch overlaps device execution of the current one.
+
+    Abandoning the iterator early (consumer ``break``/``close``) sets a
+    stop flag the producer polls between puts, so the thread exits instead
+    of blocking forever on a full queue."""
+    q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+    done = object()
+    stop = threading.Event()
+
+    def put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def work():
+        try:
+            for item in gen:
+                if not put(item):
+                    return
+            put(done)
+        except BaseException as e:  # surfaced on the consumer thread
+            put(e)
+
+    t = threading.Thread(target=work, name="repro-stream-prefetch", daemon=True)
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is done:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+
+
+# -- the runner ---------------------------------------------------------------
+
+class _Runner:
+    def __init__(self, lazy, batch_rows=None, prefetch=True,
+                 carry_capacity=None, spill_dir=None, spill_compress=False,
+                 strict_overflow=True):
+        self.ctx: DDFContext = lazy._ctx
+        self.P = self.ctx.nworkers
+        self.params = cost_model.params_for_fabric(self.ctx.fabric)
+        self.sources = dict(lazy._sources)
+        self.scans: dict[int, DatasetManifest] = dict(lazy._scans)
+        self.prefetch = bool(prefetch)
+        self.carry_capacity = carry_capacity
+        self.spill_dir = spill_dir
+        self.spill_compress = bool(spill_compress)
+        self.strict_overflow = bool(strict_overflow)
+        root = lazy._root
+        if batch_rows is not None:
+            root = _set_batch_caps(root, max(-(-int(batch_rows) // self.P), 1))
+        self.root = root
+        caps = [n.capacity for n in walk(root) if isinstance(n, Scan)]
+        self.nominal_batch_rows = (max(caps) * self.P) if caps else None
+        self.info: dict = {"batches": 0}
+
+    # -- info bookkeeping ------------------------------------------------------
+    def _fold_aux(self, aux_list: list) -> None:
+        for aux in aux_list:
+            for k, v in aux.items():
+                v = np.asarray(v)
+                if "overflow" in k:
+                    prev = self.info.get(k)
+                    self.info[k] = v if prev is None else prev + v
+                else:
+                    self.info[k] = v
+        if self.strict_overflow:
+            bad = {k: int(np.sum(v)) for k, v in self.info.items()
+                   if "overflow" in k and np.sum(v) > 0}
+            if bad:
+                raise RuntimeError(
+                    f"streaming run overflowed static buffers: {bad} rows "
+                    "dropped — results would silently diverge from eager "
+                    "execution. Pin larger quota/capacity on the offending "
+                    "op, lower batch_rows, or pass strict_overflow=False to "
+                    "accept eager-style truncation semantics.")
+
+    # -- batch iteration over one streamable subtree ---------------------------
+    def _prep(self, root: Node):
+        scans = [n for n in walk(root) if isinstance(n, Scan)]
+        sids = {s.sid for s in scans}
+        if len(sids) != 1:
+            raise ValueError(f"streamable subtree must hold exactly one scan, "
+                             f"got {sorted(sids)}")
+        scan = scans[0]
+        man = self.scans[scan.sid]
+        batch_rows = scan.capacity * self.P
+        srcs = {n.sid: self.sources[n.sid] for n in walk(root)
+                if isinstance(n, Source)}
+        src_rows = executor.source_row_counts(srcs)
+        src_rows[scan.sid] = max(min(man.num_rows, batch_rows), 1)
+        plan = optimizer.optimize(root, self.P, src_rows, self.params)
+        scan_opt = next(n for n in walk(plan) if isinstance(n, Scan))
+        return plan, scan_opt, man, batch_rows, srcs
+
+    def _host_batches(self, man: DatasetManifest, scan: Scan,
+                      batch_rows: int) -> Iterator[dict]:
+        cols = scan.columns
+        total = man.num_rows
+        nb = max(-(-total // batch_rows), 1)
+        for k in range(nb):
+            lo, hi = k * batch_rows, min((k + 1) * batch_rows, total)
+            data = read_rows(man, lo, hi, columns=cols)
+            for fn in scan.pred_fns:
+                mask = np.asarray(fn(data)).astype(bool)
+                data = {n: v[mask] for n, v in data.items()}
+            yield data
+
+    def _iter_batches(self, root: Node, prep=None):
+        """Yield (result DDF, aux) per streamed batch of a streamable subtree."""
+        plan, scan_opt, man, batch_rows, srcs = prep or self._prep(root)
+        gen = self._host_batches(man, scan_opt, batch_rows)
+        if self.prefetch:
+            gen = _prefetched(gen)
+        for data in gen:
+            bddf = DDF.from_numpy(data, self.ctx, capacity=scan_opt.capacity,
+                                  mode="eager")
+            out, aux = executor.run_planned(
+                plan, self.ctx, {**srcs, scan_opt.sid: bddf})
+            self.info["batches"] += 1
+            yield out, aux
+
+    # -- streamable whole-plan paths -------------------------------------------
+    def _stream_host(self, root: Node) -> Iterator[dict]:
+        # aux folds per batch: a strict_overflow violation raises BEFORE the
+        # truncated batch is handed out (and early iterator abandon cannot
+        # skip the check). The per-batch device sync this implies is free
+        # here — to_numpy() syncs on the same results anyway.
+        for out, aux in self._iter_batches(root):
+            self._fold_aux([aux])
+            yield out.to_numpy()
+
+    def _from_host(self, host: dict, schema: tuple) -> DDF:
+        if not host:
+            host = {n: np.zeros((0,) + tuple(tail), np.dtype(dt))
+                    for n, dt, tail in schema}
+        total = len(next(iter(host.values())))
+        cap = max(-(-total // self.P), 1)
+        return DDF.from_numpy(host, self.ctx, capacity=cap, mode="eager")
+
+    def _stream_concat(self, root: Node) -> DDF:
+        outs = list(self._stream_host(root))
+        schema = schema_of(root)
+        host = {n: np.concatenate([o[n] for o in outs])
+                for n, _, _ in schema} if outs else {}
+        return self._from_host(host, schema)
+
+    # -- carry-state tails ------------------------------------------------------
+    def _carry_cap(self, node: Node, scan_total: int) -> int:
+        if self.carry_capacity:
+            return int(self.carry_capacity)
+        if getattr(node, "capacity", None):
+            return int(node.capacity)
+        return max(-(-max(scan_total, 1) // self.P), 1)
+
+    def _empty_carry(self, schema: tuple, cap: int) -> DDF:
+        host = {n: np.zeros((0,) + tuple(tail), np.dtype(dt))
+                for n, dt, tail in schema}
+        return DDF.from_numpy(host, self.ctx, capacity=cap, mode="eager")
+
+    @staticmethod
+    def _truncate_with_overflow(full: Table, cap: int):
+        """Cut a compacted table down to the carry capacity, reporting how
+        many live rows (groups) the cut drops — the carry-state analogue of
+        the shuffle overflow counters, so ``strict_overflow`` sees it."""
+        cols = {k: v[:cap] for k, v in full.columns.items()}
+        ov = jnp.maximum(full.nvalid - cap, 0)
+        return Table(cols, jnp.minimum(full.nvalid, cap)), {"overflow_carry": ov}
+
+    def _run_carry(self, B: Node, batch_root: Node, merge_key: tuple, merge):
+        """Shared carry-state drive loop: stream batches through the
+        compiled per-batch plan, folding each result into the carry DDF."""
+        prep = self._prep(batch_root)
+        plan = prep[0]
+        cap = self._carry_cap(B, prep[2].num_rows)
+        carry = self._empty_carry(schema_of(plan), cap)
+        aux_list = []
+        for out, aux in self._iter_batches(batch_root, prep=prep):
+            aux_list.append(aux)
+            carry, carry_ov = carry._run(merge_key + (cap,), merge(cap), out)
+            aux_list.append({"carry:overflow_carry": carry_ov["overflow_carry"]})
+        self._fold_aux(aux_list)
+        return carry, cap
+
+    def _stream_groupby(self, B: GroupBy) -> DDF:
+        aggs = {k: v for k, v in B.aggs}
+        batch_root = dataclasses.replace(B, emit_partials=True, quota=None,
+                                         capacity=None, num_chunks=None)
+        by, aggs_t = B.by, B.aggs
+
+        def merge(cap):
+            def fn(comm, c, b):
+                # merge at full concat capacity (groups <= rows, so no
+                # truncation), then cut to the carry capacity with an
+                # explicit overflow counter
+                full = local_groupby(concat(c, b), by, aggs, merge=True)
+                return self._truncate_with_overflow(full, cap)
+            return fn
+
+        carry, cap = self._run_carry(B, batch_root,
+                                     ("stream-gb-merge", by, aggs_t), merge)
+        return carry._run(("stream-gb-fin", aggs_t, cap),
+                          lambda comm, t: finalize_groupby(t, aggs))
+
+    def _stream_unique(self, B: Unique) -> DDF:
+        batch_root = dataclasses.replace(B, quota=None, capacity=None,
+                                         num_chunks=None)
+        subset = B.subset
+
+        def merge(cap):
+            def fn(comm, c, b):
+                # carry rows concat first: earliest-batch occurrence wins,
+                # matching local_unique's stable first-occurrence contract
+                full = local_unique(concat(c, b), subset)
+                return self._truncate_with_overflow(full, cap)
+            return fn
+
+        carry, _ = self._run_carry(B, batch_root,
+                                   ("stream-uq-merge", subset), merge)
+        return carry
+
+    # -- spill tails ------------------------------------------------------------
+    def _spill_writer(self, schema: tuple) -> DatasetWriter:
+        d = tempfile.mkdtemp(prefix="repro-spill-",
+                             dir=self.spill_dir)
+        rows = self.nominal_batch_rows or 65536
+        return DatasetWriter(d, schema=schema, chunk_rows=rows,
+                             compress=self.spill_compress)
+
+    def _stream_sort(self, B: Sort) -> DDF:
+        """Spill the sort's input to disk while streaming, then one stable
+        host merge by the key. The spill bounds host RSS *during* the
+        streaming phase (batches land on disk, not in a growing list); the
+        final merge necessarily materializes on host — the sorted result
+        becomes a device DDF anyway, so that peak is unavoidable. A k-way
+        merge of pre-sorted runs would only change the merge's working set,
+        not the result materialization."""
+        prefix = B.child
+        writer = self._spill_writer(schema_of(prefix))
+        try:
+            for host in self._stream_host(prefix):
+                writer.append(host)
+            man = writer.close()
+            host = read_rows(man, 0, man.num_rows)
+        finally:
+            shutil.rmtree(writer.directory, ignore_errors=True)
+        key = host[B.by]
+        if B.descending:
+            # the same order-reversing map local_sort uses: exact for ints,
+            # sign-flip for floats; stable argsort keeps global row order
+            # among equal keys (matching the eager shuffle arrival order)
+            key = -key if np.issubdtype(key.dtype, np.floating) \
+                else np.bitwise_not(key)
+        order = np.argsort(key, kind="stable")
+        host = {k: v[order] for k, v in host.items()}
+        return self._from_host(host, schema_of(prefix))
+
+    def _spill_buckets(self, side: Node, on: tuple, nb: int):
+        """Stream (or eagerly compute) one join side into key-hash buckets."""
+        if not _has_scan(side):
+            raise AssertionError(
+                "spill join is only reachable with scans on both sides")
+        schema = schema_of(side)
+        writers = [self._spill_writer(schema) for _ in range(nb)]
+        for host in self._stream_host(side):
+            if not len(next(iter(host.values()))):
+                continue
+            h = _np_hash_columns(host, on) % np.uint32(nb)
+            for b in range(nb):
+                m = h == b
+                if m.any():
+                    writers[b].append({k: v[m] for k, v in host.items()})
+        return [w.close() for w in writers]
+
+    def _stream_join_spill(self, B: Join) -> DDF:
+        """Out-of-core join with scans on both sides: hash-bucket spill.
+
+        Each side spills into ``nb`` key-hash buckets (equal keys share a
+        bucket), then bucket pairs are joined on device one at a time —
+        neither side's build table ever has to fit device capacity. Output
+        order is bucket-major (row-set equal to the eager join; a downstream
+        sort/groupby canonicalizes it)."""
+        on = B.on
+        per_side_rows = []
+        for side in (B.left, B.right):
+            sids = [n.sid for n in walk(side) if isinstance(n, Scan)]
+            per_side_rows.append(sum(self.scans[s].num_rows for s in sids))
+        br = self.nominal_batch_rows or max(max(per_side_rows), 1)
+        nb = max(-(-2 * max(per_side_rows) // br), 1)
+        mans_l = self._spill_buckets(B.left, on, nb)
+        mans_r = self._spill_buckets(B.right, on, nb)
+        try:
+            cap_l = max(max((m.num_rows for m in mans_l), default=0) // self.P + 1, 1)
+            cap_r = max(max((m.num_rows for m in mans_r), default=0) // self.P + 1, 1)
+            sid_l, sid_r = next(_SIDS), next(_SIDS)
+            quota = B.quota or default_quota(max(cap_l, cap_r), self.P)
+            cap_out = B.capacity or 2 * max(cap_l, cap_r)
+            outs = []
+            for ml, mr in zip(mans_l, mans_r):
+                if ml.num_rows == 0 or mr.num_rows == 0:
+                    continue
+                dl = DDF.from_numpy(read_rows(ml, 0, ml.num_rows), self.ctx,
+                                    capacity=cap_l, mode="eager")
+                dr = DDF.from_numpy(read_rows(mr, 0, mr.num_rows), self.ctx,
+                                    capacity=cap_r, mode="eager")
+                while True:
+                    # adaptive sizing: join multiplicity is data-dependent,
+                    # so grow the static buffers and retry the bucket when
+                    # pairs (capacity) or skewed keys (quota) overflow
+                    jroot = Join(Source(sid_l, mans_l[0].schema, cap_l),
+                                 Source(sid_r, mans_r[0].schema, cap_r),
+                                 on, strategy="auto", quota=quota,
+                                 capacity=cap_out)
+                    out, aux = executor.execute(
+                        jroot, self.ctx, {sid_l: dl, sid_r: dr},
+                        src_rows={sid_l: cap_l * self.P, sid_r: cap_r * self.P})
+                    ovj = sum(int(np.sum(v)) for k, v in aux.items()
+                              if "overflow_join" in k)
+                    ovs = sum(int(np.sum(v)) for k, v in aux.items()
+                              if "overflow" in k and "overflow_join" not in k)
+                    if not ovj and not ovs:
+                        self._fold_aux([aux])
+                        break
+                    if ovj:
+                        cap_out *= 2
+                    if ovs:
+                        quota *= 2
+                outs.append(out.to_numpy())
+        finally:
+            for m in mans_l + mans_r:
+                shutil.rmtree(m.directory, ignore_errors=True)
+        schema = schema_of(B)
+        host = {n: np.concatenate([o[n] for o in outs])
+                for n, _, _ in schema} if outs else {}
+        return self._from_host(host, schema)
+
+    # -- staged materialization --------------------------------------------------
+    def _collect_scanfree(self, root: Node):
+        srcs = {n.sid: self.sources[n.sid] for n in walk(root)
+                if isinstance(n, Source)}
+        if isinstance(root, Source):
+            return srcs[root.sid], {}
+        return executor.execute(root, self.ctx, srcs)
+
+    def _materialize_blocking(self, B: Node) -> DDF:
+        if isinstance(B, GroupBy) and _streamable(B.child) and _has_scan(B.child):
+            return self._stream_groupby(B)
+        if isinstance(B, Unique) and _streamable(B.child) and _has_scan(B.child):
+            return self._stream_unique(B)
+        if isinstance(B, Sort) and _streamable(B.child) and _has_scan(B.child):
+            return self._stream_sort(B)
+        if (isinstance(B, Join) and _has_scan(B.left) and _has_scan(B.right)
+                and _streamable(B.left) and _streamable(B.right)):
+            return self._stream_join_spill(B)
+        # generic fallback: materialize scan-bearing children individually,
+        # then run the (now scan-free) blocking op eagerly
+        kids = []
+        for c in B.children:
+            if _has_scan(c):
+                d = self._collect_node(c)
+                sid = next(_SIDS)
+                self.sources[sid] = d
+                kids.append(Source(sid, _ddf_schema(d), d.capacity))
+            else:
+                kids.append(c)
+        out, aux = self._collect_scanfree(B.with_children(kids))
+        self._fold_aux([aux])
+        return out
+
+    def _drain_blocking(self, root: Node) -> Node:
+        """Finalize blocking nodes bottom-up until the plan is streamable
+        (or scan-free), substituting each result back as a Source."""
+        while _has_scan(root) and not _streamable(root):
+            B = _find_blocking(root)
+            if B is None:  # cannot happen; guard against infinite loop
+                raise RuntimeError("unstreamable plan with no blocking node")
+            mat = self._materialize_blocking(B)
+            sid = next(_SIDS)
+            self.sources[sid] = mat
+            root = _replace_node(root, B, Source(sid, _ddf_schema(mat),
+                                                 mat.capacity))
+        return root
+
+    def _collect_node(self, root: Node) -> DDF:
+        root = self._drain_blocking(root)
+        if _has_scan(root):
+            return self._stream_concat(root)
+        out, aux = self._collect_scanfree(root)
+        self._fold_aux([aux])
+        return out
+
+    # -- public entry points -----------------------------------------------------
+    def run(self):
+        out = self._collect_node(self.root)
+        return out, dict(self.info)
+
+    def batches(self) -> Iterator[dict]:
+        root = self._drain_blocking(self.root)
+        if _has_scan(root):
+            yield from self._stream_host(root)
+            return
+        out, aux = self._collect_scanfree(root)
+        self._fold_aux([aux])
+        host = out.to_numpy()
+        total = len(next(iter(host.values()))) if host else 0
+        step = self.nominal_batch_rows or max(total, 1)
+        for lo in range(0, max(total, 1), step):
+            yield {k: v[lo:lo + step] for k, v in host.items()}
+
+
+def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,
+            carry_capacity: int | None = None, spill_dir: str | None = None,
+            spill_compress: bool = False, strict_overflow: bool = True):
+    """Run a scan-bearing lazy plan through the streaming engine.
+
+    Args:
+      lazy: the ``LazyDDF`` to execute (``repro.stream.scan_*`` leaves).
+      batch_rows: override the cost-model batch size (global rows/batch).
+      prefetch: overlap host decode of batch k+1 with device execution of
+        batch k (double buffering); False decodes serially (A/B baseline).
+      carry_capacity: per-worker capacity of groupby/unique carry state
+        (default: scan rows / workers, the eager-equivalent bound).
+      spill_dir: parent directory for spill datasets (default: system tmp).
+      spill_compress: compress spilled chunks (saves disk, costs CPU).
+      strict_overflow: raise when any static shuffle/join buffer overflowed
+        (rows dropped) instead of silently diverging from eager results.
+
+    Returns:
+      ``(result DDF, info dict)`` — info carries ``batches`` plus summed
+      per-batch overflow counters.
+    """
+    r = _Runner(lazy, batch_rows=batch_rows, prefetch=prefetch,
+                carry_capacity=carry_capacity, spill_dir=spill_dir,
+                spill_compress=spill_compress, strict_overflow=strict_overflow)
+    return r.run()
+
+
+def to_batches(lazy, batch_rows: int | None = None, prefetch: bool = True,
+               carry_capacity: int | None = None, spill_dir: str | None = None,
+               spill_compress: bool = False,
+               strict_overflow: bool = True) -> Iterator[dict]:
+    """Stream a lazy plan's result as host column-dict batches.
+
+    Fully-streamable plans yield one dict per morsel without materializing
+    the whole result (true out-of-core iteration); plans needing carry or
+    spill finalization finalize first and yield ``batch_rows``-sized slices
+    of the final table. Args as :func:`collect`.
+    """
+    r = _Runner(lazy, batch_rows=batch_rows, prefetch=prefetch,
+                carry_capacity=carry_capacity, spill_dir=spill_dir,
+                spill_compress=spill_compress, strict_overflow=strict_overflow)
+    yield from r.batches()

@@ -1,0 +1,88 @@
+"""SCAN builders: open chunked datasets (or CSV files) as lazy pipelines.
+
+``scan_dataset`` wraps a ``DatasetManifest`` as a ``LazyDDF`` whose leaf is
+a ``SCAN`` plan node; ``scan_csv`` first ingests CSV files into a chunked
+dataset (``data.dataset.csv_to_dataset`` — chunked columnar parsing, never
+the whole file at once) and then scans it. Neither touches a device: the
+batch capacity recorded on the ``SCAN`` node comes from the cost model
+(``choose_batch_rows``) using only the manifest's schema and row count.
+"""
+
+from __future__ import annotations
+
+import tempfile
+from typing import Iterable, Mapping
+
+from ..core import cost_model
+from ..core.api import DDFContext
+from ..data.dataset import (
+    DEFAULT_CHUNK_ROWS,
+    DatasetManifest,
+    csv_to_dataset,
+    open_dataset,
+)
+from ..plan import frame as _frame
+from ..plan.logical import Scan
+
+__all__ = ["scan_dataset", "scan_csv"]
+
+
+def _batch_capacity(manifest: DatasetManifest, ctx: DDFContext,
+                    batch_rows: int | None,
+                    memory_budget_bytes: float | None) -> int:
+    P = ctx.nworkers
+    if batch_rows is None:
+        kw = {}
+        if memory_budget_bytes is not None:
+            kw["memory_budget_bytes"] = memory_budget_bytes
+        batch_rows = cost_model.choose_batch_rows(
+            P, manifest.row_bytes(),
+            cost_model.params_for_fabric(ctx.fabric),
+            total_rows=max(manifest.num_rows, 1), **kw)
+    return max(-(-int(batch_rows) // P), 1)
+
+
+def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
+                 memory_budget_bytes: float | None = None) -> "_frame.LazyDDF":
+    """Open a chunked dataset as a lazy out-of-core pipeline source.
+
+    Args:
+      dataset: a ``DatasetManifest`` or a dataset directory path.
+      ctx: execution environment (mesh + row-partition axes).
+      batch_rows: global rows per streamed batch; default from
+        ``cost_model.choose_batch_rows`` (memory ceiling vs per-batch
+        dispatch-overhead amortization).
+      memory_budget_bytes: per-device batch working-set budget forwarded to
+        the batch-sizing model when ``batch_rows`` is not pinned.
+
+    Returns:
+      A ``LazyDDF`` whose plan root is a ``SCAN`` leaf. Terminal calls
+      route through the streaming engine (``collect_stream``/``to_batches``).
+    """
+    manifest = dataset if isinstance(dataset, DatasetManifest) \
+        else open_dataset(str(dataset))
+    cap = _batch_capacity(manifest, ctx, batch_rows, memory_budget_bytes)
+    sid = next(_frame._SIDS)
+    root = Scan(sid=sid, schema=manifest.schema, capacity=cap)
+    return _frame.LazyDDF(root, ctx, {}, scans={sid: manifest})
+
+
+def scan_csv(files: Iterable[str], schema: Mapping, ctx: DDFContext,
+             directory: str | None = None,
+             chunk_rows: int = DEFAULT_CHUNK_ROWS,
+             batch_rows: int | None = None,
+             memory_budget_bytes: float | None = None) -> "_frame.LazyDDF":
+    """Scan CSV files out-of-core: chunked ingestion + ``scan_dataset``.
+
+    Files are converted once into a chunked dataset under ``directory``
+    (a fresh temporary directory when None — pass a path to keep/reuse the
+    converted dataset) and scanned from there, so repeated pipelines pay
+    CSV parsing once. Header/schema mismatches raise ``ValueError`` at
+    ingestion time. Unlike ``read_csv_dist`` nothing is materialized on
+    device here; dataset size is bounded by disk, not device memory.
+    """
+    if directory is None:
+        directory = tempfile.mkdtemp(prefix="repro-scan-csv-")
+    manifest = csv_to_dataset(files, schema, directory, chunk_rows=chunk_rows)
+    return scan_dataset(manifest, ctx, batch_rows=batch_rows,
+                        memory_budget_bytes=memory_budget_bytes)

@@ -1,0 +1,419 @@
+"""Out-of-core streaming engine (ISSUE 3): chunked dataset format, SCAN
+pushdown, morsel-driven execution with carry/spill finalization, distributed
+I/O round-trips, and the read_csv_dist overflow regression."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DDF, DDFContext
+from repro.core.cost_model import CostParams, choose_batch_rows
+from repro.data.dataset import (
+    DatasetWriter,
+    csv_to_dataset,
+    open_dataset,
+    read_chunk,
+    read_rows,
+    write_dataset,
+)
+from repro.data.io import read_csv_dist, write_csv_dist
+from repro import stream
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    return DDFContext(mesh=mesh, axes=("data",))
+
+
+def _table(n, nkeys=150, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, nkeys, n).astype(np.int32),
+            "v": rng.integers(0, 1000, n).astype(np.int32),
+            "junk": rng.integers(0, 5, n).astype(np.int32)}
+
+
+def _canon(host):
+    order = np.lexsort(tuple(host[k] for k in sorted(host)))
+    return {k: v[order] for k, v in host.items()}
+
+
+# -- chunked dataset format ----------------------------------------------------
+
+def test_dataset_roundtrip(tmp_path):
+    data = _table(1111)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=256)
+    assert man.num_rows == 1111
+    assert len(man.chunks) == -(-1111 // 256)
+    again = open_dataset(str(tmp_path / "ds"))
+    assert again == man
+    host = read_rows(man, 0, man.num_rows)
+    for k in data:
+        assert np.array_equal(host[k], data[k])
+    # arbitrary row ranges, chunk-straddling
+    part = read_rows(man, 200, 700)
+    for k in data:
+        assert np.array_equal(part[k], data[k][200:700])
+    # projection decodes only requested columns
+    proj = read_chunk(man, 0, columns=["v"])
+    assert list(proj) == ["v"]
+    with pytest.raises(KeyError):
+        read_chunk(man, 0, columns=["nope"])
+
+
+def test_dataset_writer_incremental(tmp_path):
+    w = DatasetWriter(str(tmp_path / "ds"), chunk_rows=100)
+    a, b = _table(130, seed=1), _table(45, seed=2)
+    w.append(a)
+    w.append(b)
+    man = w.close()
+    assert man.num_rows == 175
+    assert [r for _, r in man.chunks] == [100, 75]
+    host = read_rows(man, 0, 175)
+    for k in a:
+        assert np.array_equal(host[k], np.concatenate([a[k], b[k]]))
+    with pytest.raises(ValueError):
+        w.append(a)  # closed
+
+
+def test_csv_to_dataset_and_schema_mismatch(tmp_path):
+    import csv as _csv
+    data = _table(300, seed=3)
+    path = str(tmp_path / "in.csv")
+    with open(path, "w", newline="") as f:
+        wr = _csv.writer(f)
+        wr.writerow(["k", "v", "junk"])
+        for i in range(300):
+            wr.writerow([data["k"][i], data["v"][i], data["junk"][i]])
+    schema = {"k": np.int32, "v": np.int32, "junk": np.int32}
+    man = csv_to_dataset([path], schema, str(tmp_path / "ds"), chunk_rows=64)
+    host = read_rows(man, 0, man.num_rows)
+    for k in data:
+        assert np.array_equal(host[k], data[k])
+    with pytest.raises(ValueError, match="schema mismatch"):
+        csv_to_dataset([path], {"missing_col": np.int32},
+                       str(tmp_path / "ds2"))
+
+
+# -- batch sizing --------------------------------------------------------------
+
+def test_choose_batch_rows_bounds():
+    p = CostParams()
+    # memory ceiling binds: huge rows ask, small budget
+    r = choose_batch_rows(8, row_bytes=1000.0, p=p,
+                          memory_budget_bytes=1e6, working_set_factor=4.0)
+    assert r <= 8 * 1e6 / (1000.0 * 4.0)
+    # amortization floor: cheap rows want big batches, memory permits
+    r2 = choose_batch_rows(8, row_bytes=8.0, p=p, memory_budget_bytes=1e9)
+    assert r2 > r
+    # clamped to the dataset
+    assert choose_batch_rows(8, 8.0, p, total_rows=100) == 100
+    assert choose_batch_rows(1, 8.0, p, total_rows=1) >= 1
+
+
+# -- streaming vs eager bit-exactness ------------------------------------------
+
+def test_stream_ep_pipeline_bit_identical(ctx, tmp_path):
+    data = _table(4000, seed=4)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=700)
+    lz = (stream.scan_dataset(man, ctx, batch_rows=512)
+          .select(lambda c: c["v"] % 2 == 0, name="even")
+          .project(["k", "v"]))
+    got = lz.collect().to_numpy()
+    ref = (DDF.from_numpy(data, ctx)
+           .select(lambda c: c["v"] % 2 == 0).project(["k", "v"])).to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+    assert lz.last_info["batches"] == 8  # 4000 rows / 512-row morsels
+
+
+def test_scan_pushdown_in_plan(ctx, tmp_path):
+    man = write_dataset(_table(1000, seed=5), str(tmp_path / "ds"),
+                        chunk_rows=300)
+    lz = (stream.scan_dataset(man, ctx, batch_rows=256)
+          .select(lambda c: c["v"] > 10, name="gt")
+          .project(["k", "v"]))
+    plan = lz.explain()
+    # projection narrowed into the scan, predicate absorbed host-side
+    assert "SCAN" in plan and "cols=('k', 'v')" in plan
+    assert "preds=('gt',)" in plan
+    assert "SELECT" not in plan and "PROJECT" not in plan
+
+
+def test_stream_groupby_carry_bit_identical(ctx, tmp_path):
+    data = _table(4000, seed=6)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=600)
+    aggs = {"v": ("sum", "count", "mean", "min", "max")}
+    lz = stream.scan_dataset(man, ctx, batch_rows=500).groupby(("k",), aggs)
+    got = lz.collect().to_numpy()
+    ref = DDF.from_numpy(data, ctx).groupby(("k",), aggs)[0].to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+    assert lz.last_info["batches"] == 8
+
+
+def test_stream_unique_carry(ctx, tmp_path):
+    base = _table(1500, seed=7)
+    dup = {k: np.concatenate([v, v[:400]]) for k, v in base.items()}
+    man = write_dataset(dup, str(tmp_path / "ds"), chunk_rows=333)
+    got = (stream.scan_dataset(man, ctx, batch_rows=300)
+           .unique(("k",)).collect().to_numpy())
+    ref = DDF.from_numpy(dup, ctx).unique(("k",))[0].to_numpy()
+    # full-duplicate rows: survivor identical -> bitwise equality
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_stream_sort_spill_bit_identical(ctx, tmp_path):
+    data = _table(3000, seed=8)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=500)
+    for desc in (False, True):
+        got = (stream.scan_dataset(man, ctx, batch_rows=400)
+               .sort_values("v", descending=desc).collect().to_numpy())
+        ref = DDF.from_numpy(data, ctx).sort_values(
+            "v", descending=desc)[0].to_numpy()
+        for k in ref:
+            assert np.array_equal(ref[k], got[k]), (k, desc)
+
+
+def test_stream_4op_pipeline_8x_capacity(ctx, tmp_path):
+    """Acceptance: select -> project -> join -> groupby streamed over a
+    dataset 8x the per-batch device footprint, bit-identical to eager."""
+    data = _table(4000, seed=9)
+    rng = np.random.default_rng(10)
+    R = {"k": rng.integers(0, 150, 900).astype(np.int32),
+         "w": rng.integers(0, 50, 900).astype(np.int32)}
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=700)
+    dr = DDF.from_numpy(R, ctx)
+    lz = (stream.scan_dataset(man, ctx, batch_rows=500)  # 8 batches
+          .select(lambda c: c["v"] % 2 == 0, name="even")
+          .project(["k", "v"])
+          # capacity pinned: join multiplicity (~6 rows/key) exceeds the
+          # default 2x bound; strict_overflow would catch the truncation
+          .join(dr.lazy(), on=("k",), strategy="shuffle", capacity=2000)
+          .groupby(("k",), {"v": ("sum", "count")}))
+    got = lz.collect().to_numpy()
+    ref = (DDF.from_numpy(data, ctx)
+           .select(lambda c: c["v"] % 2 == 0).project(["k", "v"])
+           .join(dr, on=("k",), strategy="shuffle", capacity=16000)[0]
+           .groupby(("k",), {"v": ("sum", "count")})[0]).to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+    assert lz.last_info["batches"] == 8
+
+
+def test_stream_join_spill_both_scans(ctx, tmp_path):
+    data = _table(2500, seed=11)
+    rng = np.random.default_rng(12)
+    R = {"k": rng.integers(0, 150, 700).astype(np.int32),
+         "w": rng.integers(0, 50, 700).astype(np.int32)}
+    man_l = write_dataset(data, str(tmp_path / "l"), chunk_rows=400)
+    man_r = write_dataset(R, str(tmp_path / "r"), chunk_rows=200)
+    got = (stream.scan_dataset(man_l, ctx, batch_rows=400)
+           .join(stream.scan_dataset(man_r, ctx, batch_rows=400), on=("k",))
+           .collect().to_numpy())
+    ref = DDF.from_numpy(data, ctx).join(
+        DDF.from_numpy(R, ctx), on=("k",), strategy="shuffle",
+        capacity=30000)[0].to_numpy()
+    cg, cr = _canon(got), _canon(ref)
+    assert len(cg["k"]) == len(cr["k"])
+    for k in cr:
+        assert np.array_equal(cr[k], cg[k]), k
+
+
+def test_stream_staged_blocking_below_sort(ctx, tmp_path):
+    """unique (carry) below sort (spill): staged materialization."""
+    data = _table(2000, seed=13)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=300)
+    got = (stream.scan_dataset(man, ctx, batch_rows=256)
+           .unique(("k",)).sort_values("k").collect().to_numpy())
+    ref = DDF.from_numpy(data, ctx).unique(("k",))[0] \
+        .sort_values("k")[0].to_numpy()
+    assert np.array_equal(ref["k"], got["k"])
+
+
+def test_to_batches_matches_collect(ctx, tmp_path):
+    data = _table(3000, seed=14)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=500)
+    lz = stream.scan_dataset(man, ctx, batch_rows=400).select(
+        lambda c: c["v"] > 500, name="gt")
+    parts = list(lz.to_batches())
+    assert len(parts) == 8
+    cat = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+    ref = DDF.from_numpy(data, ctx).select(lambda c: c["v"] > 500).to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], cat[k]), k
+
+
+def test_stream_prefetch_off_identical(ctx, tmp_path):
+    data = _table(2000, seed=15)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=300)
+    lz = stream.scan_dataset(man, ctx, batch_rows=256).groupby(
+        ("k",), {"v": ("sum",)})
+    a = lz.collect_stream(prefetch=True).to_numpy()
+    b = lz.collect_stream(prefetch=False).to_numpy()
+    for k in a:
+        assert np.array_equal(a[k], b[k]), k
+
+
+def test_scan_pushdown_project_keeps_pred_columns(ctx, tmp_path):
+    """Regression: projecting away a column a pushed-down scan predicate
+    reads must not narrow the decode set (KeyError at stream time)."""
+    data = _table(1000, seed=21)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=300)
+    lz = (stream.scan_dataset(man, ctx, batch_rows=256)
+          .select(lambda c: c["v"] > 300, name="gt")
+          .project(["k"]))
+    got = lz.collect().to_numpy()
+    ref = (DDF.from_numpy(data, ctx)
+           .select(lambda c: c["v"] > 300).project(["k"])).to_numpy()
+    assert np.array_equal(ref["k"], got["k"])
+
+
+def test_stream_carry_overflow_raises(ctx, tmp_path):
+    """Regression: carry-state truncation must trip strict_overflow, not
+    silently drop groups."""
+    data = _table(1000, nkeys=200, seed=22)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=300)
+    lz = stream.scan_dataset(man, ctx, batch_rows=256).groupby(
+        ("k",), {"v": ("sum",)})
+    with pytest.raises(RuntimeError, match="overflow"):
+        lz.collect_stream(carry_capacity=10)
+    # and the same plan with room succeeds
+    out = lz.collect_stream(carry_capacity=1000)
+    ref = DDF.from_numpy(data, ctx).groupby(("k",), {"v": ("sum",)})[0]
+    got, expect = out.to_numpy(), ref.to_numpy()
+    for k in expect:
+        assert np.array_equal(expect[k], got[k]), k
+
+
+def test_to_batches_overflow_raises_before_yield(ctx, tmp_path):
+    """Regression: strict_overflow must fire on the FIRST truncated batch,
+    not after the whole stream was consumed (or never, on early abandon)."""
+    n = 1000
+    data = {"k": np.zeros(n, np.int32), "v": np.arange(n, dtype=np.int32)}
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=200)
+    right = DDF.from_numpy({"k": np.zeros(600, np.int32),
+                            "w": np.arange(600, dtype=np.int32)}, ctx)
+    gen = (stream.scan_dataset(man, ctx, batch_rows=200)
+           .join(right.lazy(), on=("k",), capacity=64)
+           .to_batches())
+    with pytest.raises(RuntimeError, match="overflow"):
+        next(gen)
+
+
+def test_read_csv_dist_zero_byte_file(ctx, tmp_path):
+    """Regression: a zero-byte shard is an empty partition, not an error."""
+    data = _table(60, seed=24)
+    ddf = DDF.from_numpy(data, ctx)
+    paths = write_csv_dist(ddf, str(tmp_path / "out"))
+    empty = str(tmp_path / "out" / "part-empty.csv")
+    open(empty, "w").close()
+    schema = {"junk": np.int32, "k": np.int32, "v": np.int32}
+    back = read_csv_dist(paths + [empty], schema, ctx)
+    assert back.num_rows() == 60
+
+
+def test_to_batches_early_abandon(ctx, tmp_path):
+    """Breaking out of a streamed iterator must not deadlock or error."""
+    data = _table(2000, seed=23)
+    man = write_dataset(data, str(tmp_path / "ds"), chunk_rows=200)
+    gen = stream.scan_dataset(man, ctx, batch_rows=200).to_batches()
+    first = next(gen)
+    assert len(first["k"]) == 200
+    gen.close()  # abandon: prefetch thread must unblock and exit
+
+
+def test_stream_empty_and_tiny_datasets(ctx, tmp_path):
+    empty = {"k": np.zeros((0,), np.int32), "v": np.zeros((0,), np.int32)}
+    man = write_dataset(empty, str(tmp_path / "e"))
+    out = stream.scan_dataset(man, ctx, batch_rows=128).groupby(
+        ("k",), {"v": ("sum",)}).collect()
+    assert out.num_rows() == 0
+    tiny = {"k": np.arange(3, dtype=np.int32), "v": np.ones(3, np.int32)}
+    man2 = write_dataset(tiny, str(tmp_path / "t"))
+    got = stream.scan_dataset(man2, ctx, batch_rows=128).collect().to_numpy()
+    for k in tiny:
+        assert np.array_equal(got[k], tiny[k])
+
+
+def test_token_pipeline_epoch_streams(ctx):
+    from repro.data.pipeline import TokenPipeline
+
+    pipe = TokenPipeline(ctx, n_docs=300, vocab=512, seq_len=16, batch=4,
+                         seed=3, quality_threshold=0.2)
+    batches = list(pipe.epoch())
+    assert len(batches) >= 1
+    for b in batches:
+        assert b["tokens"].shape == (4, 16)
+        assert b["tokens"].max() < 512
+    # epoch covers the processed docs (minus the < batch leftover)
+    n_batched = sum(b["tokens"].shape[0] for b in batches)
+    assert pipe.n_docs - 4 < n_batched <= pipe.n_docs
+
+
+# -- distributed I/O round-trips (satellite) ------------------------------------
+
+def test_write_read_csv_roundtrip_bit_exact(ctx, tmp_path):
+    data = _table(500, seed=16)
+    ddf = DDF.from_numpy(data, ctx)
+    paths = write_csv_dist(ddf, str(tmp_path / "out"))
+    assert len(paths) == ctx.nworkers
+    schema = {"junk": np.int32, "k": np.int32, "v": np.int32}
+    back = read_csv_dist(paths, schema, ctx,
+                         mapping={w: [paths[w]] for w in range(ctx.nworkers)})
+    got, ref = back.to_numpy(), ddf.to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_scan_csv_roundtrip_bit_exact(ctx, tmp_path):
+    data = _table(600, seed=17)
+    ddf = DDF.from_numpy(data, ctx)
+    paths = write_csv_dist(ddf, str(tmp_path / "out"))
+    schema = {"junk": np.int32, "k": np.int32, "v": np.int32}
+    lz = stream.scan_csv(paths, schema, ctx,
+                         directory=str(tmp_path / "ds"),
+                         chunk_rows=128, batch_rows=200)
+    got = lz.collect().to_numpy()
+    ref = ddf.to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+    assert lz.last_info["batches"] == 3
+
+
+def test_read_csv_dist_empty_workers_and_uneven_mapping(ctx, tmp_path):
+    data = _table(120, seed=18)
+    ddf = DDF.from_numpy(data, ctx)
+    paths = write_csv_dist(ddf, str(tmp_path / "out"))
+    schema = {"junk": np.int32, "k": np.int32, "v": np.int32}
+    # all files on worker 0; every other worker gets an empty partition
+    back = read_csv_dist(paths, schema, ctx, mapping={0: paths})
+    counts = np.asarray(back.counts)
+    assert counts[0] == 120
+    assert (counts[1:] == 0).all()
+    got = back.to_numpy()
+    ref = ddf.to_numpy()
+    for k in ref:
+        assert np.array_equal(np.sort(ref[k]), np.sort(got[k]))
+
+
+def test_read_csv_dist_capacity_overflow_raises(ctx, tmp_path):
+    """Regression: rows beyond capacity used to be silently dropped."""
+    data = _table(100, seed=19)
+    ddf = DDF.from_numpy(data, ctx)
+    paths = write_csv_dist(ddf, str(tmp_path / "out"))
+    schema = {"junk": np.int32, "k": np.int32, "v": np.int32}
+    with pytest.raises(ValueError, match="silently drop"):
+        read_csv_dist(paths, schema, ctx, capacity=3, mapping={0: paths})
+    # auto-sizing (capacity omitted) still loads everything
+    back = read_csv_dist(paths, schema, ctx, mapping={0: paths})
+    assert back.num_rows() == 100
+
+
+def test_read_csv_dist_schema_mismatch(ctx, tmp_path):
+    data = _table(50, seed=20)
+    ddf = DDF.from_numpy(data, ctx)
+    paths = write_csv_dist(ddf, str(tmp_path / "out"))
+    with pytest.raises(ValueError, match="schema mismatch"):
+        read_csv_dist(paths, {"absent": np.int32}, ctx)
