@@ -12,6 +12,8 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
   ISSUE 2  -> bench_pipeline_fusion (eager per-op vs lazy-optimized pipeline)
   ISSUE 3  -> bench_stream         (out-of-core streaming: overlap vs serial
                                     decode vs monolithic-when-it-fits)
+  ISSUE 4  -> bench_expr           (expression-compiled select/derive vs the
+                                    legacy callable path, eager + lazy)
 """
 
 import os
@@ -27,6 +29,7 @@ BENCHES = [
     "benchmarks.bench_pipeline",
     "benchmarks.bench_pipeline_fusion",
     "benchmarks.bench_stream",
+    "benchmarks.bench_expr",
 ]
 
 

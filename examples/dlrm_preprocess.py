@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import DDF, DDFContext
 from repro.core.patterns import sampled_cardinality
+from repro.expr import col
 
 
 def main():
@@ -55,7 +56,7 @@ def main():
     print(f"groupby (C-hat={C:.3f}, pre_combine={C < 0.5}) -> {agg.num_rows()} users")
 
     # 3. embarrassingly-parallel filter + 4. rebalance (partitioned I/O)
-    active = agg.select(lambda c: c["dwell_ms_count"] >= 20, name="active")
+    active = agg.select(col("dwell_ms_count") >= 20, name="active")
     balanced, _ = active.rebalance()
     counts = np.asarray(balanced.counts)
     print(f"filter -> {active.num_rows()} active users; "

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import DDF, DDFContext
 from repro.data.synthetic import uniform_table
+from repro.expr import col
 
 
 def main():
@@ -46,11 +47,14 @@ def main():
     g, _ = df1.groupby(("c0",), {"c1": ("mean", "count")})
     print(f"groups: {g.num_rows()}, global mean(c1) = {float(df1.agg('c1', 'mean')):.1f}")
 
-    # the same join->groupby as ONE lazy plan: the optimizer sees the whole
-    # pipeline, elides the groupby shuffle (co-partition reuse) and compiles
-    # a single shard_map program (docs/LAZY_PLANS.md)
-    lz = (df1.lazy().join(df2.lazy(), on=("c0",), strategy="shuffle")
-          .groupby(("c0",), {"c1": ("count",)}))
+    # the same filter->join->groupby as ONE lazy plan over expression
+    # operators (docs/EXPRESSIONS.md): the optimizer sees the whole
+    # pipeline, pushes the predicate below the join shuffle, elides the
+    # groupby shuffle (co-partition reuse) and compiles a single shard_map
+    # program (docs/LAZY_PLANS.md)
+    lz = (df1.lazy().select(col("c1") > 0.25)
+          .join(df2.lazy(), on=("c0",), strategy="shuffle")
+          .groupby(("c0",), [col("c1").count()]))
     print("lazy plan:")
     print(lz.explain())
     print(f"lazy groups: {lz.collect().num_rows()}")

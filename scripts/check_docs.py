@@ -1,17 +1,21 @@
-"""Documentation lint (ISSUE 1 + ISSUE 2 + ISSUE 3 satellite CI check).
+"""Documentation lint (ISSUE 1-4 satellite CI check).
 
 Fails (exit 1) if:
   1. any symbol exported via ``__all__`` from a module under
      ``repro.core`` (including ``repro.core.comm``), the lazy-plan
-     package ``repro.plan``, the streaming engine ``repro.stream``, or
-     the chunked dataset layer ``repro.data.dataset`` lacks a docstring, or
+     package ``repro.plan``, the streaming engine ``repro.stream``, the
+     chunked dataset layer ``repro.data.dataset``, or the expression API
+     ``repro.expr`` lacks a docstring, or
   2. ``docs/PATTERNS.md`` / ``docs/ARCHITECTURE.md`` is missing, or does not
      mention every pattern key in ``repro.core.patterns.PATTERNS``, or
   3. ``docs/LAZY_PLANS.md`` is missing, or does not mention every logical
      node type and rewrite pass exported by ``repro.plan``, or
   4. ``docs/STREAMING.md`` is missing, or does not mention every
      ``repro.stream`` export (plus the batch-sizing entry point
-     ``choose_batch_rows``).
+     ``choose_batch_rows``), or
+  5. ``docs/EXPRESSIONS.md`` is missing, or does not mention every
+     ``repro.expr`` export (plus the entry points ``with_column`` and
+     ``alias``).
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -46,6 +50,10 @@ CORE_MODULES = [
     "repro.stream.scan",
     "repro.stream.runner",
     "repro.data.dataset",
+    # columnar expression API (ISSUE 4)
+    "repro.expr",
+    "repro.expr.tree",
+    "repro.expr.aggs",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -85,40 +93,45 @@ def missing_pattern_docs() -> list:
     return problems
 
 
+def missing_doc_mentions(doc: str, symbols) -> list:
+    """Generic coverage check: every symbol must appear in the doc file."""
+    path = os.path.join(REPO_ROOT, doc)
+    if not os.path.exists(path):
+        return [f"{doc} is missing"]
+    text = open(path).read()
+    return [f"{doc} does not mention '{sym}'" for sym in symbols
+            if sym not in text]
+
+
 def missing_lazy_plan_docs() -> list:
     """Return problems with docs/LAZY_PLANS.md coverage of the plan layer."""
     from repro.plan import logical, optimizer
 
-    path = os.path.join(REPO_ROOT, "docs/LAZY_PLANS.md")
-    if not os.path.exists(path):
-        return ["docs/LAZY_PLANS.md is missing"]
-    text = open(path).read()
-    problems = []
     node_types = [s for s in logical.__all__
                   if inspect.isclass(getattr(logical, s, None))
                   and issubclass(getattr(logical, s), logical.Node)]
     passes = [s for s in optimizer.__all__ if s.startswith(("pushdown", "plan_",
                                                             "elide", "fuse"))]
-    for sym in node_types + passes:
-        if sym not in text:
-            problems.append(f"docs/LAZY_PLANS.md does not mention '{sym}'")
-    return problems
+    return missing_doc_mentions("docs/LAZY_PLANS.md", node_types + passes)
 
 
 def missing_streaming_docs() -> list:
     """Return problems with docs/STREAMING.md coverage of repro.stream."""
     import repro.stream as stream_pkg
 
-    path = os.path.join(REPO_ROOT, "docs/STREAMING.md")
-    if not os.path.exists(path):
-        return ["docs/STREAMING.md is missing"]
-    text = open(path).read()
-    problems = []
-    for sym in list(stream_pkg.__all__) + ["choose_batch_rows",
-                                           "to_batches", "collect_stream"]:
-        if sym not in text:
-            problems.append(f"docs/STREAMING.md does not mention '{sym}'")
-    return problems
+    return missing_doc_mentions(
+        "docs/STREAMING.md",
+        list(stream_pkg.__all__) + ["choose_batch_rows", "to_batches",
+                                    "collect_stream"])
+
+
+def missing_expression_docs() -> list:
+    """Return problems with docs/EXPRESSIONS.md coverage of repro.expr."""
+    import repro.expr as expr_pkg
+
+    return missing_doc_mentions(
+        "docs/EXPRESSIONS.md",
+        list(expr_pkg.__all__) + ["with_column", "alias"])
 
 
 def main() -> int:
@@ -142,11 +155,17 @@ def main() -> int:
         print("Streaming documentation problems:")
         for f in stream_failures:
             print(f"  - {f}")
-    if failures or doc_failures or lazy_failures or stream_failures:
+    expr_failures = missing_expression_docs()
+    if expr_failures:
+        print("Expression documentation problems:")
+        for f in expr_failures:
+            print(f"  - {f}")
+    if failures or doc_failures or lazy_failures or stream_failures \
+            or expr_failures:
         return 1
-    print("check_docs: all exported core+plan+stream symbols documented; "
-          "docs cover every pattern, node type, rewrite pass and streaming "
-          "export")
+    print("check_docs: all exported core+plan+stream+expr symbols "
+          "documented; docs cover every pattern, node type, rewrite pass, "
+          "streaming and expression export")
     return 0
 
 

@@ -222,6 +222,23 @@ def main():
     assert all(int(np.asarray(v).sum()) == 0 for v in lz.last_info.values())
     print("lazy plan OK (pushdown+elision, bit-exact vs eager)")
 
+    # --- expression API (ISSUE 4): expr forms == callable forms, bit-exact ---
+    from repro.expr import col
+    XSel = L.select(col("v") > 500)
+    assert np.array_equal(XSel.to_numpy()["v"], SEL.to_numpy()["v"])
+    XW = L.with_column("d", col("v") * 2 + col("k"))
+    host = L.to_numpy()
+    assert np.array_equal(XW.to_numpy()["d"], host["v"] * 2 + host["k"])
+    xlz = (L.lazy().select(col("v") > 500, name="vbig")
+           .join(R.lazy(), on=("k",), strategy="shuffle", capacity=16 * n)
+           .groupby(("k",), [col("v").sum(), col("v").count()]))
+    xex = xlz.explain()
+    assert "SELECT" in xex or "select[(v > 500)]" in xex, xex
+    xout = xlz.to_numpy()
+    for name in eout:
+        assert np.array_equal(eout[name], xout[name]), f"expr mismatch: {name}"
+    print("expression API OK (select/with_column/agg specs, bit-exact)")
+
     print("ALL DDF SMOKE TESTS PASSED")
 
 

@@ -28,10 +28,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import cost_model, operators, patterns
+from .. import expr as _expr
 from ..compat import shard_map
 from .comm.communicator import Communicator, make_communicator
 from .dataframe import Table
 from .local_ops import select as local_select
+from .local_ops import with_column as local_with_column
 from .partition import default_quota
 
 __all__ = ["DDFContext", "DDF"]
@@ -290,8 +292,33 @@ class DDF:
 
     # -- embarrassingly parallel (paper §5.3.1) ----------------------------------
     def select(self, pred, name: str = "pred") -> "DDF":
+        """Filter rows by a boolean expression: ``select(col("a") > 3)``.
+
+        Expressions (``repro.expr``) are validated against the schema at
+        call time (unknown columns raise ``KeyError`` listing the schema),
+        constant-folded, compiled to a pure jax function, and cache-keyed
+        by their structural hash. Passing a Python callable over the column
+        dict is deprecated (one-shot ``DeprecationWarning``) but keeps
+        bit-identical behavior through the legacy fingerprint path."""
+        if isinstance(pred, (_expr.Expr, bool)) or _expr.is_when_builder(pred):
+            pred = _expr.prepare_row_expr(pred, self.columns, "select")
+            fn = _expr.to_jax_fn(pred)
+            return self._run(("select", name, pred),
+                             lambda comm, t: local_select(t, fn))
+        _expr.warn_callable_deprecated("select")
         return self._run(("select", name, callable_signature(pred)),
                          lambda comm, t: local_select(t, pred))
+
+    def with_column(self, name: str, value) -> "DDF":
+        """Add (or overwrite) column ``name`` from an expression:
+        ``with_column("c", col("a") + col("b"))``. Scalars are coerced to
+        literals; all other columns pass through unchanged. The expression
+        is validated against the schema (``KeyError`` listing the schema on
+        unknown references) and compiled to a pure jax function."""
+        e = _expr.prepare_row_expr(value, self.columns, "with_column")
+        fn = _expr.to_jax_fn(e)
+        return self._run(("with_column", name, e),
+                         lambda comm, t: local_with_column(t, name, fn))
 
     def _check_columns(self, names: Sequence[str], op: str) -> None:
         missing = [n for n in names if n not in self.columns]
@@ -327,6 +354,12 @@ class DDF:
                    self.counts, self.ctx)
 
     def map_columns(self, fn, name: str = "map") -> "DDF":
+        """Legacy column-wise map over the raw column dict (deprecated —
+        one-shot ``DeprecationWarning``; use expression-based
+        :meth:`with_column` / :meth:`project` instead, which the optimizer
+        can analyze). Behavior is unchanged: bit-identical results through
+        the callable-fingerprint cache path."""
+        _expr.warn_callable_deprecated("map_columns")
         return self._run(("map", name, callable_signature(fn)),
                          lambda comm, t: Table(dict(fn(t.columns)), t.nvalid))
 
@@ -362,18 +395,25 @@ class DDF:
                              comm, l, r, on, quota, capacity, num_chunks=num_chunks),
                          other)
 
-    def groupby(self, by: Sequence[str], aggs: Mapping[str, Sequence[str]],
+    def groupby(self, by: Sequence[str], aggs,
                 pre_combine: bool | None = None, cardinality_hint: float | None = None,
                 quota: int | None = None, capacity: int | None = None,
                 num_chunks: int | None = None):
-        """GroupBy-aggregate. With ``pre_combine=None`` the planner picks
-        combine-shuffle-reduce vs plain shuffle (from ``cardinality_hint``)
-        and the shuffle pipeline depth from table sizes. A pinned
-        ``pre_combine`` skips planning entirely (no device->host row-count
-        sync) and defaults to the monolithic shuffle — pass ``num_chunks``
-        explicitly to pipeline on that path."""
+        """GroupBy-aggregate. ``aggs`` is either the canonical mapping
+        ``{value_col: (op, ...)}`` or a sequence of aggregation expressions
+        (``[col("v").sum(), col("v").mean().alias("avg")]`` — aliases apply
+        as a zero-copy rename on the result). With ``pre_combine=None`` the
+        planner picks combine-shuffle-reduce vs plain shuffle (from
+        ``cardinality_hint``) and the shuffle pipeline depth from table
+        sizes. A pinned ``pre_combine`` skips planning entirely (no
+        device->host row-count sync) and defaults to the monolithic shuffle
+        — pass ``num_chunks`` explicitly to pipeline on that path."""
         by = tuple(by)
+        renames: tuple = ()
+        if not isinstance(aggs, Mapping):
+            aggs, renames = _expr.parse_agg_specs(aggs)
         aggs = {k: tuple(v) for k, v in aggs.items()}
+        self._check_columns(sorted(aggs), "groupby(aggs)")
         nw = self.ctx.nworkers
         if pre_combine is None:
             # planning reads row counts (a blocking device->host sync), so it
@@ -390,8 +430,11 @@ class DDF:
         capacity = capacity or self.capacity
         key = ("groupby", by, tuple(sorted(aggs.items())), pre_combine, quota,
                capacity, num_chunks)
-        return self._run(key, lambda comm, t: operators.dist_groupby(
+        res = self._run(key, lambda comm, t: operators.dist_groupby(
             comm, t, by, aggs, quota, capacity, pre_combine, num_chunks=num_chunks))
+        if renames:
+            res = (res[0].rename(dict(renames)),) + tuple(res[1:])
+        return res
 
     def unique(self, subset: Sequence[str], quota: int | None = None, capacity: int | None = None,
                num_chunks: int = 1):

@@ -33,6 +33,7 @@ __all__ = [
     "local_anti_join",
     "select",
     "project",
+    "with_column",
     "row_aggregate",
     "column_aggregate_local",
 ]
@@ -62,6 +63,18 @@ def select(table: Table, pred) -> Table:
 def project(table: Table, names: Sequence[str]) -> Table:
     """Column projection. O(c) — zero-copy column selection."""
     return table.select_columns(names)
+
+
+def with_column(table: Table, name: str, fn) -> Table:
+    """Add (or overwrite) one column computed by ``fn`` over the column
+    dict; all other columns pass through. A scalar result (literal-only
+    expression) broadcasts to the table capacity. Shared by the eager
+    ``DDF.with_column`` body and the plan executor's ``WithColumn`` step so
+    the two layers cannot diverge."""
+    v = jnp.asarray(fn(table.columns))
+    if v.ndim == 0:
+        v = jnp.full((table.capacity,), v)
+    return Table({**table.columns, name: v}, table.nvalid)
 
 
 def row_aggregate(table: Table, names: Sequence[str], out: str, op: str = "sum") -> Table:

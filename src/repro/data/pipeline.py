@@ -6,8 +6,10 @@ Stages (each one of the paper's patterns):
                           dataset, opened through ``repro.stream.scan_dataset``
   2. dedup              — Combine-Shuffle-Reduce ``unique`` on content hash
                           (streamed with cross-batch carry state)
-  3. quality filter     — Embarrassingly-Parallel ``select`` (pushed into
-                          the scan where the planner can)
+  3. quality filter     — Embarrassingly-Parallel ``select`` with a
+                          ``repro.expr`` predicate (pushed into the scan
+                          where the planner can — evaluated host-side,
+                          no callable probe)
   4. length bucketing   — Sample-Shuffle-Compute ``sort_values`` by length
                           (host-side spill + merge when streamed)
   5. rebalance          — Partitioned-I/O repartition (straggler guard)
@@ -31,6 +33,7 @@ import tempfile
 import numpy as np
 
 from ..core import DDFContext
+from ..expr import col
 from .dataset import write_dataset
 from .synthetic import synthetic_token_corpus
 
@@ -78,11 +81,11 @@ class TokenPipeline:
         rebalance."""
         from ..stream import scan_dataset  # local import: stream dep is lazy
 
-        thr = self._quality_threshold
         return (scan_dataset(self._manifest, self.ctx,
                              batch_rows=self._batch_rows)
                 .unique(("content_hash",))
-                .select(lambda c: c["quality"] > thr, name="quality")
+                .select(col("quality") > self._quality_threshold,
+                        name="quality")
                 .sort_values("length")
                 .rebalance())
 

@@ -1,0 +1,88 @@
+"""First-class columnar expression API (ISSUE 4 tentpole).
+
+The public operator-input surface for the dataframe engine: build typed
+expression trees with :func:`col` / :func:`lit` / :func:`when` and Python
+operators, pass them to ``DDF.select`` / ``DDF.with_column`` / groupby
+aggregation specs (eager, lazy and streaming layers all accept them).
+Expressions replace the old opaque-callable forms — which remain as a
+deprecated shim — giving the optimizer exact referenced-column sets,
+structural plan-cache keys, host-compilable SCAN predicates and
+device-compilable bodies. See ``docs/EXPRESSIONS.md``.
+"""
+
+import warnings
+
+from .aggs import parse_agg_specs  # noqa: F401
+from .tree import (  # noqa: F401
+    Agg,
+    Alias,
+    BinOp,
+    Cast,
+    Col,
+    Cond,
+    Expr,
+    Lit,
+    UnaryOp,
+    col,
+    ensure_columns,
+    ensure_row_expr,
+    fold_constants,
+    host_portable,
+    infer_schema_entry,
+    is_when_builder,
+    lit,
+    prepare_row_expr,
+    referenced_columns,
+    split_conjuncts,
+    to_jax_fn,
+    to_numpy_fn,
+    when,
+)
+
+__all__ = [
+    "Expr",
+    "Col",
+    "Lit",
+    "BinOp",
+    "UnaryOp",
+    "Cond",
+    "Cast",
+    "Agg",
+    "Alias",
+    "col",
+    "lit",
+    "when",
+    "referenced_columns",
+    "fold_constants",
+    "split_conjuncts",
+    "to_jax_fn",
+    "to_numpy_fn",
+    "infer_schema_entry",
+    "ensure_columns",
+    "ensure_row_expr",
+    "is_when_builder",
+    "prepare_row_expr",
+    "host_portable",
+    "parse_agg_specs",
+    "warn_callable_deprecated",
+]
+
+# one warning per op name per process: enough signal to migrate without
+# drowning a loop that calls the legacy form per batch
+_WARNED: set = set()
+
+
+def warn_callable_deprecated(op: str) -> None:
+    """Emit the one-shot ``DeprecationWarning`` for a legacy callable-taking
+    operator form (``select``/``map_columns`` with a Python function).
+    Behavior of the legacy path is unchanged — bit-identical results through
+    the probe-based pipeline — but expressions are the supported surface."""
+    if op in _WARNED:
+        return
+    _WARNED.add(op)
+    warnings.warn(
+        f"{op} with a Python callable is deprecated; pass a repro.expr "
+        "expression instead (e.g. select(col('a') > 3)). The callable form "
+        "keeps bit-identical behavior but hides column references from the "
+        "optimizer. See docs/EXPRESSIONS.md for the migration guide.",
+        DeprecationWarning, stacklevel=3)

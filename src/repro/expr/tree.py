@@ -1,0 +1,779 @@
+"""Typed columnar expression tree — the analyzable operator-input surface.
+
+An :class:`Expr` describes a per-row computation over a table's columns as an
+immutable tree of frozen dataclass nodes: ``col("a") + lit(3)``,
+``(col("a") > 3) & (col("b") < 7)``, ``when(cond).then(x).otherwise(y)``,
+``col("x").sum()``. Unlike the opaque Python callables the API used to take
+(bytecode-fingerprinted and numpy-probed to *guess* which columns they
+touch), an expression is a value the engine can inspect exactly:
+
+- :func:`referenced_columns` — the exact column set, for projection pushdown
+  and build-time schema validation;
+- structural equality/hashing — frozen dataclasses compare and hash by
+  shape, so two independently-built identical expressions key the same
+  compiled-plan cache entry while different literals never alias;
+- dual compilation — :func:`to_jax_fn` lowers to a pure jax function for
+  in-shard_map device execution, :func:`to_numpy_fn` to a numpy function for
+  host-side SCAN pre-admission filtering (no probe needed: an expression is
+  known to evaluate on either backend);
+- rewrites — :func:`fold_constants` and :func:`split_conjuncts` normalize
+  predicates before pushdown.
+
+Equality note: ``==``/``!=`` on :class:`Expr` are *structural* (dataclass
+semantics) so plan nodes and caches stay sound; build elementwise comparison
+predicates with :meth:`Expr.eq` / :meth:`Expr.ne`. Using an expression in a
+boolean context (``if expr:``) raises ``TypeError`` — combine predicates
+with ``&``, ``|``, ``~``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import operator
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Expr",
+    "Col",
+    "Lit",
+    "BinOp",
+    "UnaryOp",
+    "Cond",
+    "Cast",
+    "Agg",
+    "Alias",
+    "col",
+    "lit",
+    "when",
+    "referenced_columns",
+    "fold_constants",
+    "split_conjuncts",
+    "to_jax_fn",
+    "to_numpy_fn",
+    "infer_schema_entry",
+    "ensure_columns",
+    "ensure_row_expr",
+    "is_when_builder",
+    "prepare_row_expr",
+    "host_portable",
+]
+
+# op key -> (render symbol, python/array implementation)
+_BIN_OPS = {
+    "add": ("+", operator.add),
+    "sub": ("-", operator.sub),
+    "mul": ("*", operator.mul),
+    "truediv": ("/", operator.truediv),
+    "floordiv": ("//", operator.floordiv),
+    "mod": ("%", operator.mod),
+    "pow": ("**", operator.pow),
+    "gt": (">", operator.gt),
+    "ge": (">=", operator.ge),
+    "lt": ("<", operator.lt),
+    "le": ("<=", operator.le),
+    "eq": ("==", operator.eq),
+    "ne": ("!=", operator.ne),
+    "and": ("&", operator.and_),
+    "or": ("|", operator.or_),
+    "xor": ("^", operator.xor),
+}
+
+_UNARY_OPS = {
+    "neg": operator.neg,
+    "invert": operator.invert,
+    "abs": operator.abs,
+}
+
+_AGG_OPS = ("sum", "count", "min", "max", "mean")
+
+
+def _to_expr(v) -> "Expr":
+    if isinstance(v, Expr):
+        return v
+    if isinstance(v, (_When, _WhenThen)):
+        raise TypeError(
+            "incomplete when(...) expression: finish the builder with "
+            ".then(value).otherwise(value)")
+    return lit(v)
+
+
+def _reject_bare_bool(value, op: str) -> None:
+    """Catch the ``col("a") == 3`` mistake: ``==``/``!=`` on expressions
+    compare *structure* and return a Python bool, which would otherwise
+    coerce to a constant literal and silently produce all-True/all-False
+    results. Predicate positions reject raw bools with guidance."""
+    if isinstance(value, bool):
+        raise TypeError(
+            f"{op}: got a plain Python bool — `==`/`!=` on expressions "
+            "compare structure, not values; use .eq()/.ne() for "
+            f"elementwise equality (or lit({value}) for an explicit "
+            "constant)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Expr:
+    """Base class for expression nodes (immutable, structurally hashable).
+
+    Subclass instances are built via :func:`col` / :func:`lit` /
+    :func:`when` and the overloaded operators; users never instantiate node
+    classes directly. Arithmetic (``+ - * / // % **``), comparisons
+    (``> >= < <=`` plus :meth:`eq`/:meth:`ne`), boolean combinators
+    (``& | ^ ~``), ``-``/``abs``, :meth:`cast`, aggregation methods
+    (:meth:`sum` ...) and :meth:`alias` all return new trees.
+    """
+
+    # -- arithmetic -----------------------------------------------------------
+    def __add__(self, o):
+        return BinOp("add", self, _to_expr(o))
+
+    def __radd__(self, o):
+        return BinOp("add", _to_expr(o), self)
+
+    def __sub__(self, o):
+        return BinOp("sub", self, _to_expr(o))
+
+    def __rsub__(self, o):
+        return BinOp("sub", _to_expr(o), self)
+
+    def __mul__(self, o):
+        return BinOp("mul", self, _to_expr(o))
+
+    def __rmul__(self, o):
+        return BinOp("mul", _to_expr(o), self)
+
+    def __truediv__(self, o):
+        return BinOp("truediv", self, _to_expr(o))
+
+    def __rtruediv__(self, o):
+        return BinOp("truediv", _to_expr(o), self)
+
+    def __floordiv__(self, o):
+        return BinOp("floordiv", self, _to_expr(o))
+
+    def __rfloordiv__(self, o):
+        return BinOp("floordiv", _to_expr(o), self)
+
+    def __mod__(self, o):
+        return BinOp("mod", self, _to_expr(o))
+
+    def __rmod__(self, o):
+        return BinOp("mod", _to_expr(o), self)
+
+    def __pow__(self, o):
+        return BinOp("pow", self, _to_expr(o))
+
+    def __rpow__(self, o):
+        return BinOp("pow", _to_expr(o), self)
+
+    # -- comparisons ----------------------------------------------------------
+    # NOTE: == / != keep dataclass *structural* semantics (plan equality and
+    # cache keys depend on them); elementwise equality is .eq() / .ne().
+    def __gt__(self, o):
+        return BinOp("gt", self, _to_expr(o))
+
+    def __ge__(self, o):
+        return BinOp("ge", self, _to_expr(o))
+
+    def __lt__(self, o):
+        return BinOp("lt", self, _to_expr(o))
+
+    def __le__(self, o):
+        return BinOp("le", self, _to_expr(o))
+
+    def eq(self, o) -> "Expr":
+        """Elementwise equality predicate (``==`` is structural equality)."""
+        return BinOp("eq", self, _to_expr(o))
+
+    def ne(self, o) -> "Expr":
+        """Elementwise inequality predicate (``!=`` is structural)."""
+        return BinOp("ne", self, _to_expr(o))
+
+    # -- boolean / bitwise ----------------------------------------------------
+    # A bare Python bool operand here is almost always the `col(x) == v`
+    # mistake (structural equality returns a bool); reject it instead of
+    # silently folding the predicate to a constant — lit(True) stays
+    # available for an intentional constant.
+    def __and__(self, o):
+        _reject_bare_bool(o, "&")
+        return BinOp("and", self, _to_expr(o))
+
+    def __rand__(self, o):
+        _reject_bare_bool(o, "&")
+        return BinOp("and", _to_expr(o), self)
+
+    def __or__(self, o):
+        _reject_bare_bool(o, "|")
+        return BinOp("or", self, _to_expr(o))
+
+    def __ror__(self, o):
+        _reject_bare_bool(o, "|")
+        return BinOp("or", _to_expr(o), self)
+
+    def __xor__(self, o):
+        _reject_bare_bool(o, "^")
+        return BinOp("xor", self, _to_expr(o))
+
+    def __invert__(self):
+        return UnaryOp("invert", self)
+
+    def __neg__(self):
+        return UnaryOp("neg", self)
+
+    def __abs__(self):
+        return UnaryOp("abs", self)
+
+    def __bool__(self):
+        raise TypeError(
+            "an expression has no truth value; combine predicates with "
+            "& | ~ (not `and`/`or`/`not`) and compare with .eq()/.ne()")
+
+    # -- conversions / naming -------------------------------------------------
+    def cast(self, dtype) -> "Expr":
+        """Elementwise dtype cast (``astype`` on both backends)."""
+        return Cast(self, str(np.dtype(dtype)))
+
+    def alias(self, name: str) -> "Expr":
+        """Name this expression's output (groupby aggregation specs)."""
+        return Alias(self, str(name))
+
+    # -- aggregations (groupby specs) ----------------------------------------
+    def sum(self) -> "Expr":
+        """Aggregation spec: per-group sum of this column."""
+        return Agg("sum", self)
+
+    def count(self) -> "Expr":
+        """Aggregation spec: per-group row count."""
+        return Agg("count", self)
+
+    def min(self) -> "Expr":
+        """Aggregation spec: per-group minimum."""
+        return Agg("min", self)
+
+    def max(self) -> "Expr":
+        """Aggregation spec: per-group maximum."""
+        return Agg("max", self)
+
+    def mean(self) -> "Expr":
+        """Aggregation spec: per-group mean (float32)."""
+        return Agg("mean", self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Col(Expr):
+    """Reference to a column by name (``col("a")``)."""
+
+    name: str
+
+    def __str__(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class Lit(Expr):
+    """Scalar literal. ``kind`` (bool/int/float) is derived from the value so
+    ``lit(3)`` and ``lit(3.0)`` never alias structurally (Python's
+    ``3 == 3.0`` would otherwise make them cache-equal); ``dtype`` pins a
+    concrete dtype (else the literal stays weakly typed, letting the column
+    dtype drive promotion exactly like a Python scalar in jax)."""
+
+    value: object
+    dtype: str | None = None
+    kind: str = dataclasses.field(default="", init=False)
+
+    def __post_init__(self):
+        v = self.value
+        if isinstance(v, (np.generic,)):
+            v = v.item()
+            object.__setattr__(self, "value", v)
+        if isinstance(v, bool):
+            k = "bool"
+        elif isinstance(v, int):
+            k = "int"
+        elif isinstance(v, float):
+            k = "float"
+        else:
+            raise TypeError(
+                f"lit() takes a Python/numpy scalar (bool/int/float), got "
+                f"{type(v).__name__}")
+        object.__setattr__(self, "kind", k)
+
+    def __str__(self):
+        return repr(self.value) if self.dtype is None else \
+            f"lit({self.value!r}, {self.dtype})"
+
+
+@dataclasses.dataclass(frozen=True)
+class BinOp(Expr):
+    """Binary operation node; ``op`` is a key of the operator table
+    (arithmetic / comparison / boolean)."""
+
+    op: str
+    left: Expr
+    right: Expr
+
+    def __str__(self):
+        sym = _BIN_OPS[self.op][0]
+        return f"({self.left} {sym} {self.right})"
+
+
+@dataclasses.dataclass(frozen=True)
+class UnaryOp(Expr):
+    """Unary operation node: ``neg`` (-x), ``invert`` (~x), ``abs``."""
+
+    op: str
+    child: Expr
+
+    def __str__(self):
+        if self.op == "neg":
+            return f"(-{self.child})"
+        if self.op == "invert":
+            return f"(~{self.child})"
+        return f"{self.op}({self.child})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Cond(Expr):
+    """Conditional select: ``when(pred).then(t).otherwise(f)`` — elementwise
+    ``where(pred, t, f)`` on both backends."""
+
+    pred: Expr
+    if_true: Expr
+    if_false: Expr
+
+    def __str__(self):
+        return f"when({self.pred}, {self.if_true}, {self.if_false})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Cast(Expr):
+    """Elementwise dtype cast node."""
+
+    child: Expr
+    dtype: str
+
+    def __str__(self):
+        return f"{self.child}.cast({self.dtype})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Agg(Expr):
+    """Aggregation spec node (``col("x").sum()``) — only meaningful as a
+    groupby aggregation spec, never inside a row-level expression."""
+
+    op: str
+    child: Expr
+
+    def __post_init__(self):
+        if self.op not in _AGG_OPS:
+            raise ValueError(f"unknown aggregation op {self.op!r}; "
+                             f"supported: {_AGG_OPS}")
+
+    def __str__(self):
+        return f"{self.child}.{self.op}()"
+
+
+@dataclasses.dataclass(frozen=True)
+class Alias(Expr):
+    """Output-name wrapper (``.alias("total")``) for aggregation specs."""
+
+    child: Expr
+    name: str
+
+    def __str__(self):
+        return f"{self.child} as {self.name!r}"
+
+
+# -- builders -----------------------------------------------------------------
+
+def col(name: str) -> Col:
+    """Reference a column by name: ``col("a") > 3`` builds a predicate."""
+    return Col(str(name))
+
+
+def lit(value, dtype=None) -> Lit:
+    """Scalar literal. Weakly typed unless ``dtype`` pins one, mirroring how
+    a bare Python scalar promotes against column dtypes in jax."""
+    return Lit(value, None if dtype is None else str(np.dtype(dtype)))
+
+
+class _When:
+    """Builder state after ``when(pred)``; call ``.then(value)`` next."""
+
+    def __init__(self, pred):
+        self._pred = _to_expr(pred)
+
+    def then(self, value) -> "_WhenThen":
+        """Value when the predicate holds; finish with ``.otherwise()``."""
+        return _WhenThen(self._pred, _to_expr(value))
+
+    def __repr__(self):
+        return f"when({self._pred}).then(...)"
+
+
+class _WhenThen:
+    """Builder state after ``.then(v)``; call ``.otherwise(value)`` to get
+    the :class:`Cond` expression."""
+
+    def __init__(self, pred, if_true):
+        self._pred = pred
+        self._if_true = if_true
+
+    def otherwise(self, value) -> Cond:
+        """Value when the predicate does not hold; returns the expression."""
+        return Cond(self._pred, self._if_true, _to_expr(value))
+
+    def __repr__(self):
+        return f"when({self._pred}).then({self._if_true}).otherwise(...)"
+
+
+def when(pred) -> _When:
+    """Start a conditional: ``when(col("a") > 0).then(1).otherwise(-1)``."""
+    _reject_bare_bool(pred, "when")
+    return _When(pred)
+
+
+# -- analysis -----------------------------------------------------------------
+
+def _children(e: Expr) -> tuple:
+    if isinstance(e, BinOp):
+        return (e.left, e.right)
+    if isinstance(e, (UnaryOp, Cast, Agg, Alias)):
+        return (e.child,)
+    if isinstance(e, Cond):
+        return (e.pred, e.if_true, e.if_false)
+    return ()
+
+
+def referenced_columns(e: Expr) -> frozenset:
+    """Exact set of column names the expression reads — the introspection
+    callables never gave us (``probe_columns`` guesses from a trial run;
+    this is definitional)."""
+    out: set = set()
+
+    def rec(x: Expr):
+        if isinstance(x, Col):
+            out.add(x.name)
+        for c in _children(x):
+            rec(c)
+
+    rec(e)
+    return frozenset(out)
+
+
+def _contains_agg(e: Expr) -> bool:
+    if isinstance(e, (Agg, Alias)):
+        return True
+    return any(_contains_agg(c) for c in _children(e))
+
+
+def ensure_row_expr(e: Expr, op: str) -> None:
+    """Reject aggregation/alias nodes inside row-level expressions
+    (select predicates, with_column values) with a actionable error."""
+    if _contains_agg(e):
+        raise TypeError(
+            f"{op}: aggregation expressions (.sum()/.alias()/...) are only "
+            "valid as groupby aggregation specs, not in row-level "
+            "expressions; compute derived inputs with with_column and "
+            "aggregate the result")
+
+
+def ensure_columns(e: Expr, available, op: str) -> None:
+    """Validate referenced columns against a schema, raising ``KeyError``
+    with the same wording as the eager path's column checks."""
+    have = set(available)
+    missing = sorted(n for n in referenced_columns(e) if n not in have)
+    if missing:
+        raise KeyError(
+            f"{op}: unknown column(s) {missing}; "
+            f"available schema: {sorted(have)}")
+
+
+def is_when_builder(value) -> bool:
+    """True for an unfinished ``when(...)``/``when(...).then(...)`` builder
+    — callers route these to the guidance error instead of the legacy
+    callable or literal fallbacks."""
+    return isinstance(value, (_When, _WhenThen))
+
+
+def prepare_row_expr(value, available, op: str) -> "Expr":
+    """The shared normalize-and-validate entry for row-level expression
+    inputs (``select`` predicates, ``with_column`` values, scan
+    predicates): coerce scalars to literals, reject unfinished ``when``
+    builders and aggregation nodes with guidance, constant-fold, and
+    validate referenced columns against ``available`` (``KeyError`` with
+    the eager wording). Every layer calls this one helper so eager, lazy
+    and scan behavior cannot drift apart."""
+    if is_when_builder(value):
+        raise TypeError(
+            f"{op}: incomplete when(...) expression: finish the builder "
+            "with .then(value).otherwise(value)")
+    _reject_bare_bool(value, op)
+    e = value if isinstance(value, Expr) else lit(value)
+    e = fold_constants(e)
+    ensure_row_expr(e, op)
+    ensure_columns(e, available, op)
+    return e
+
+
+def host_portable(e: Expr, schema) -> bool:
+    """True when host (numpy) and device (jax) evaluation of a predicate
+    provably agree, so the optimizer may absorb it into a SCAN's host-side
+    filter without changing which rows pass.
+
+    Portable: all-integer comparisons (operands are signed-integer/bool
+    columns, integer literals, or integer-only computations — unsigned
+    columns are excluded, see ``intlike``), float comparisons
+    anchored on device-exact float columns/literals, and boolean
+    combinations of such; boolean columns/literals. Rejected: float
+    *arithmetic* and mixed int-column vs float comparisons (numpy promotes
+    through float64 where jax stays float32 — results can flip above
+    2^24), ``truediv``/``pow``, float casts, and 64-bit columns/dtype pins
+    (jax with x64 disabled truncates them to 32 bits on device, so the
+    host sees different values than the device SELECT being replaced
+    would). A rejected predicate simply stays a device SELECT."""
+    dts = {n: np.dtype(d) for n, d, _ in schema}
+
+    def exact(d) -> bool:
+        # the dtype survives device admission unchanged (jax x64 disabled
+        # truncates 64-bit ints/floats to 32 bits)
+        d = np.dtype(d)
+        return d.itemsize < 8 or d.kind not in ("i", "u", "f")
+
+    def intlike(x: Expr) -> bool:
+        # the subtree computes exclusively in signed-integer/bool space.
+        # Unsigned columns are excluded outright: numpy compares them
+        # against out-of-range (e.g. negative) weak literals exactly,
+        # while jax wraps the literal into the unsigned dtype — provable
+        # agreement would need per-literal range analysis.
+        if isinstance(x, Col):
+            d = dts.get(x.name)
+            return d is not None and d.kind in ("i", "b") and exact(d)
+        if isinstance(x, Lit):
+            return x.kind in ("bool", "int") and (
+                x.dtype is None or (np.dtype(x.dtype).kind in ("i", "b")
+                                    and exact(x.dtype)))
+        if isinstance(x, BinOp):
+            return x.op in ("add", "sub", "mul", "floordiv", "mod",
+                            "and", "or", "xor") \
+                and intlike(x.left) and intlike(x.right)
+        if isinstance(x, UnaryOp):
+            return intlike(x.child)
+        if isinstance(x, Cast):
+            return np.dtype(x.dtype).kind in ("i", "b") \
+                and exact(x.dtype) and intlike(x.child)
+        if isinstance(x, Cond):
+            return pred_ok(x.pred) and intlike(x.if_true) \
+                and intlike(x.if_false)
+        return False
+
+    def float_atom(x: Expr) -> bool:
+        # one side of a float-space comparison: a device-exact float
+        # column, a weak literal (promotes to the column dtype on BOTH
+        # backends under NEP 50 / jax weak typing), or a device-exact
+        # float-pinned literal
+        if isinstance(x, Col):
+            d = dts.get(x.name)
+            return d is not None and d.kind == "f" and exact(d)
+        if isinstance(x, Lit):
+            return x.dtype is None or (np.dtype(x.dtype).kind == "f"
+                                       and exact(x.dtype))
+        return False
+
+    def compare_ok(left: Expr, right: Expr) -> bool:
+        # both sides must promote identically on numpy and jax: either an
+        # all-integer comparison, or a float comparison anchored on float
+        # columns/literals. A mixed int-column vs float comparison is
+        # float64 on numpy but float32 on jax (flips above 2^24), so it
+        # is rejected.
+        if intlike(left) and intlike(right):
+            return True
+        return float_atom(left) and float_atom(right)
+
+    def pred_ok(x: Expr) -> bool:
+        if isinstance(x, BinOp):
+            if x.op in ("gt", "ge", "lt", "le", "eq", "ne"):
+                return compare_ok(x.left, x.right)
+            if x.op in ("and", "or", "xor"):
+                return pred_ok(x.left) and pred_ok(x.right)
+            return False
+        if isinstance(x, UnaryOp) and x.op == "invert":
+            return pred_ok(x.child)
+        if isinstance(x, Col):
+            d = dts.get(x.name)
+            return d is not None and d.kind == "b"
+        if isinstance(x, Lit):
+            return x.kind == "bool"
+        return False
+
+    return pred_ok(e)
+
+
+# -- rewrites -----------------------------------------------------------------
+
+def _surely_bool(e: Expr) -> bool:
+    """True when the expression produces booleans for *any* input schema
+    (comparisons, boolean combinations of such) — the schema-free soundness
+    test the fold identities need (``&``/``|`` double as integer bitwise
+    ops, where ``x & True`` is ``x & 1``, not ``x``)."""
+    if isinstance(e, BinOp):
+        if e.op in ("gt", "ge", "lt", "le", "eq", "ne"):
+            return True
+        if e.op in ("and", "or", "xor"):
+            return _surely_bool(e.left) and _surely_bool(e.right)
+        return False
+    if isinstance(e, UnaryOp) and e.op == "invert":
+        return _surely_bool(e.child)
+    if isinstance(e, Cond):
+        return _surely_bool(e.if_true) and _surely_bool(e.if_false)
+    if isinstance(e, Lit):
+        return e.kind == "bool"
+    return False
+
+
+def fold_constants(e: Expr) -> Expr:
+    """Evaluate literal-only subtrees down to literals and apply boolean
+    identities (``x & True -> x``, ``x | False -> x``, literal-predicate
+    ``when`` branch selection). Runs at build time so equivalent spellings
+    (``col("a") > lit(1) + lit(2)`` vs ``col("a") > 3``) produce the same
+    structural hash, and again in the optimizer's predicate normalization.
+
+    Folding is semantics-preserving by construction: dtype-pinned literals
+    are never collapsed (the pin drives promotion of the unfolded tree),
+    and the boolean identities only apply when the kept side provably
+    produces booleans on any schema (``x & True`` over an integer ``x`` is
+    bitwise ``x & 1``, not ``x``)."""
+    if isinstance(e, BinOp):
+        left, right = fold_constants(e.left), fold_constants(e.right)
+        if isinstance(left, Lit) and isinstance(right, Lit) \
+                and left.dtype is None and right.dtype is None:
+            try:
+                return lit(_BIN_OPS[e.op][1](left.value, right.value))
+            except Exception:
+                pass
+        if e.op == "and":
+            if isinstance(left, Lit) and left.value is True \
+                    and _surely_bool(right):
+                return right
+            if isinstance(right, Lit) and right.value is True \
+                    and _surely_bool(left):
+                return left
+        if e.op == "or":
+            if isinstance(left, Lit) and left.value is False \
+                    and _surely_bool(right):
+                return right
+            if isinstance(right, Lit) and right.value is False \
+                    and _surely_bool(left):
+                return left
+        if left is e.left and right is e.right:
+            return e
+        return BinOp(e.op, left, right)
+    if isinstance(e, UnaryOp):
+        child = fold_constants(e.child)
+        if isinstance(child, Lit) and child.dtype is None:
+            try:
+                return lit(_UNARY_OPS[e.op](child.value))
+            except Exception:
+                pass
+        return e if child is e.child else UnaryOp(e.op, child)
+    if isinstance(e, Cond):
+        pred = fold_constants(e.pred)
+        t, f = fold_constants(e.if_true), fold_constants(e.if_false)
+        if isinstance(pred, Lit) and pred.kind == "bool":
+            return t if pred.value else f
+        if pred is e.pred and t is e.if_true and f is e.if_false:
+            return e
+        return Cond(pred, t, f)
+    if isinstance(e, Cast):
+        child = fold_constants(e.child)
+        return e if child is e.child else Cast(child, e.dtype)
+    if isinstance(e, (Agg, Alias)):
+        child = fold_constants(e.child)
+        if child is e.child:
+            return e
+        return dataclasses.replace(e, child=child)
+    return e
+
+
+def infer_schema_entry(e: Expr, schema) -> tuple:
+    """Output ``(dtype string, trailing shape)`` of a row-level expression
+    over ``schema`` (((name, dtype, tail), ...)), by evaluating it with jax
+    on a tiny ones-valued table — jax's own promotion rules, so the
+    propagated schema matches what device execution will produce."""
+    cols = {n: jnp.ones((2,) + tuple(tail), jnp.dtype(dt))
+            for n, dt, tail in schema}
+    out = jnp.asarray(_eval(e, cols, jnp))
+    return str(out.dtype), tuple(out.shape[1:]) if out.ndim else ()
+
+
+def _is_bool_expr(e: Expr, schema) -> bool:
+    if _surely_bool(e):  # static fast path: no jax dispatch for the
+        return True      # common comparison-built predicates
+    refs = referenced_columns(e)
+    sub = tuple(x for x in schema if x[0] in refs)
+    try:
+        dt, _ = infer_schema_entry(e, sub)
+    except Exception:
+        return False
+    return dt == "bool"
+
+
+def split_conjuncts(e: Expr, schema) -> tuple:
+    """Split a predicate into its top-level AND conjuncts, so each can push
+    down independently (e.g. to different join sides, or into a SCAN).
+    ``&`` is also integer bitwise-AND, so a conjunct split only happens when
+    both sides infer to boolean dtype over ``schema``; otherwise the
+    expression is returned whole."""
+    if isinstance(e, BinOp) and e.op == "and" \
+            and _is_bool_expr(e.left, schema) and _is_bool_expr(e.right, schema):
+        return split_conjuncts(e.left, schema) + split_conjuncts(e.right, schema)
+    return (e,)
+
+
+# -- compilation --------------------------------------------------------------
+
+def _eval(e: Expr, cols: Mapping, xp):
+    if isinstance(e, Col):
+        return cols[e.name]
+    if isinstance(e, Lit):
+        if e.dtype is not None:
+            return xp.asarray(e.value, dtype=xp.dtype(e.dtype))
+        return e.value  # weakly typed scalar: column dtype drives promotion
+    if isinstance(e, BinOp):
+        return _BIN_OPS[e.op][1](_eval(e.left, cols, xp),
+                                 _eval(e.right, cols, xp))
+    if isinstance(e, UnaryOp):
+        return _UNARY_OPS[e.op](_eval(e.child, cols, xp))
+    if isinstance(e, Cond):
+        return xp.where(_eval(e.pred, cols, xp),
+                        _eval(e.if_true, cols, xp),
+                        _eval(e.if_false, cols, xp))
+    if isinstance(e, Cast):
+        return xp.asarray(_eval(e.child, cols, xp)).astype(xp.dtype(e.dtype))
+    if isinstance(e, (Agg, Alias)):
+        raise TypeError(f"aggregation expression {e} cannot be evaluated "
+                        "row-wise; it is a groupby aggregation spec")
+    raise TypeError(e)
+
+
+def to_jax_fn(e: Expr):
+    """Compile to a pure jax function ``cols dict -> jax.Array`` for
+    in-shard_map device execution (select masks, with_column values)."""
+
+    def fn(cols):
+        return _eval(e, cols, jnp)
+
+    return fn
+
+
+def to_numpy_fn(e: Expr):
+    """Compile to a numpy function ``cols dict -> np.ndarray`` for
+    host-side SCAN pre-admission filtering. Expressions always lower to
+    numpy — unlike user callables, no trial probe is needed."""
+
+    def fn(cols):
+        return np.asarray(_eval(e, cols, np))
+
+    return fn

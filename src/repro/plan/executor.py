@@ -38,6 +38,7 @@ from ..core.local_ops import (
     local_unique,
 )
 from ..core.local_ops import select as local_select
+from ..core.local_ops import with_column as local_with_column
 from . import optimizer
 from .logical import (
     Difference,
@@ -55,6 +56,7 @@ from .logical import (
     Source,
     Union,
     Unique,
+    WithColumn,
     walk,
 )
 
@@ -124,6 +126,8 @@ def _apply_ep(step: Node, t: Table) -> Table:
         return Table({m.get(k, k): v for k, v in t.columns.items()}, t.nvalid)
     if isinstance(step, MapColumns):
         return Table(dict(step.fn(t.columns)), t.nvalid)
+    if isinstance(step, WithColumn):
+        return local_with_column(t, step.name, step.fn)
     raise TypeError(step)
 
 
@@ -152,7 +156,8 @@ def _make_plan_fn(root: Node, ordered_sids: tuple):
                 out = lower(node.child)
                 for step in node.steps:
                     out = _apply_ep(step, out)
-            elif isinstance(node, (Select, Project, Rename, MapColumns)):
+            elif isinstance(node, (Select, Project, Rename, MapColumns,
+                                   WithColumn)):
                 out = _apply_ep(node, lower(node.child))
             elif isinstance(node, Join):
                 l, r = lower(node.left), lower(node.right)

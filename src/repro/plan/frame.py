@@ -21,6 +21,7 @@ from __future__ import annotations
 import itertools
 from typing import Callable, Mapping, Sequence
 
+from .. import expr as _expr
 from ..core.api import DDF, DDFContext, callable_signature
 from . import executor
 from .logical import (
@@ -37,6 +38,7 @@ from .logical import (
     Source,
     Union,
     Unique,
+    WithColumn,
     format_plan,
     probe_columns,
     schema_names,
@@ -121,19 +123,40 @@ class LazyDDF:
                            f"schema: {sorted(self.column_names)}") from e
 
     # -- embarrassingly parallel -------------------------------------------------
-    def select(self, pred: Callable, name: str = "pred") -> "LazyDDF":
-        """Filter rows by a predicate over the column dict. The predicate is
-        probed host-side to learn which columns it reads (pushdown);
-        references to unknown columns raise ``KeyError`` at build time.
+    def select(self, pred, name: str = "pred") -> "LazyDDF":
+        """Filter rows by a boolean expression: ``select(col("a") > 3)``.
 
-        Contract: the predicate must access a *data-independent* set of
-        columns — branching on column values to decide which columns to
-        read can make projection pushdown drop a column the real run needs
-        (dict iteration / ``in``-membership tests are detected and disable
-        pushdown; value-dependent branches cannot be)."""
+        The expression's exact referenced-column set drives predicate and
+        projection pushdown (and absorption into SCAN leaves, where it is
+        evaluated host-side before rows are admitted); unknown column
+        references raise ``KeyError`` at build time; the constant-folded
+        tree itself is the node's structural identity, so equal pipelines
+        hit the plan and compile caches.
+
+        Passing a Python callable over the column dict is deprecated
+        (one-shot ``DeprecationWarning``) but bit-identical: the callable
+        is probed host-side to learn which columns it reads, under the
+        legacy contract that its column-access pattern is data-independent
+        (dict iteration / ``in``-membership disable pushdown)."""
+        if isinstance(pred, (_expr.Expr, bool)) or _expr.is_when_builder(pred):
+            pred = _expr.prepare_row_expr(pred, self.column_names, "select")
+            return self._derive(Select(
+                self._root, _expr.to_jax_fn(pred), name,
+                tuple(sorted(_expr.referenced_columns(pred))), expr=pred))
+        _expr.warn_callable_deprecated("select")
         used, _ = self._probe(pred, f"select '{name}'")
         return self._derive(Select(self._root, pred, name, used,
                                    fn_sig=callable_signature(pred)))
+
+    def with_column(self, name: str, value) -> "LazyDDF":
+        """Add (or overwrite) column ``name`` from an expression:
+        ``with_column("c", col("a") + col("b"))``. Scalars coerce to
+        literals. The output dtype/shape is inferred from the tree (jax
+        promotion rules) for schema propagation; unknown column references
+        raise ``KeyError`` at build time."""
+        e = _expr.prepare_row_expr(value, self.column_names, "with_column")
+        return self._derive(WithColumn(self._root, str(name), e,
+                                       fn=_expr.to_jax_fn(e)))
 
     def project(self, names: Sequence[str]) -> "LazyDDF":
         """Keep only ``names`` (validated against the propagated schema)."""
@@ -159,7 +182,10 @@ class LazyDDF:
         return self._derive(Rename(self._root, tuple(sorted(mapping.items()))))
 
     def map_columns(self, fn: Callable, name: str = "map") -> "LazyDDF":
-        """Column-wise map; output schema is probed host-side at build time."""
+        """Legacy column-wise map over the raw column dict (deprecated —
+        use expression-based :meth:`with_column` / :meth:`project`); output
+        schema is probed host-side at build time."""
+        _expr.warn_callable_deprecated("map_columns")
         used, out_schema = self._probe(fn, f"map_columns '{name}'")
         if out_schema is None:
             raise TypeError(
@@ -181,19 +207,27 @@ class LazyDDF:
         return self._derive(Join(self._root, other._root, on, strategy,
                                  quota, capacity, num_chunks), other)
 
-    def groupby(self, by: Sequence[str], aggs: Mapping[str, Sequence[str]],
+    def groupby(self, by: Sequence[str], aggs,
                 pre_combine: bool | None = None,
                 cardinality_hint: float | None = None,
                 quota: int | None = None, capacity: int | None = None,
                 num_chunks: int | None = None) -> "LazyDDF":
         """GroupBy-aggregate; strategy/pipelining planned from DAG estimates
-        (and elided entirely when the input is already co-partitioned)."""
+        (and elided entirely when the input is already co-partitioned).
+        ``aggs`` is either the canonical ``{value_col: (op, ...)}`` mapping
+        or a sequence of aggregation expressions (``[col("v").sum(),
+        col("v").mean().alias("avg")]``); aliases become a RENAME node on
+        top of the GROUPBY."""
         by = tuple(by)
+        renames: tuple = ()
+        if not isinstance(aggs, Mapping):
+            aggs, renames = _expr.parse_agg_specs(aggs)
         self._check(by, "groupby")
         self._check(tuple(aggs), "groupby(aggs)")
         aggs_t = tuple(sorted((k, tuple(v)) for k, v in aggs.items()))
-        return self._derive(GroupBy(self._root, by, aggs_t, pre_combine,
-                                    cardinality_hint, quota, capacity, num_chunks))
+        out = self._derive(GroupBy(self._root, by, aggs_t, pre_combine,
+                                   cardinality_hint, quota, capacity, num_chunks))
+        return out.rename(dict(renames)) if renames else out
 
     def unique(self, subset: Sequence[str], quota: int | None = None,
                capacity: int | None = None,

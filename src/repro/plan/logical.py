@@ -20,7 +20,12 @@ the optimizer relies on:
 - :func:`estimate_rows` — global row-count estimates propagated from source
   counts, feeding the cost model's strategy/chunk-depth selection.
 
-Callable-carrying nodes (``Select``/``MapColumns``) compare by their
+Operator bodies arrive in two forms. The first-class form is a
+``repro.expr`` expression tree stored *on the node* (``Select.expr``,
+``WithColumn.expr``, ``Scan.pred_sigs`` entries): immutable, structurally
+hashable, with exact referenced-column sets — plan equality and the compile
+caches key on the tree itself. The legacy form is an opaque callable
+(``Select``/``MapColumns`` with ``expr=None``) compared by its
 user-supplied ``name`` plus a callable fingerprint
 (``repro.core.api.callable_signature``: code location, bytecode, hashable
 closure/default values) rather than the function object itself, so
@@ -36,6 +41,8 @@ from typing import Callable, ClassVar, Mapping, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from .. import expr as _expr
+
 __all__ = [
     "Node",
     "Source",
@@ -44,6 +51,7 @@ __all__ = [
     "Project",
     "Rename",
     "MapColumns",
+    "WithColumn",
     "Join",
     "GroupBy",
     "Unique",
@@ -108,10 +116,14 @@ class Scan(Node):
     projection pushed into the scan (None = all — only these ``.npz``
     members are decompressed per batch). ``pred_names``/``pred_sigs``
     identify predicates pushed into the scan for plan equality and compile
-    caching (the callables themselves, ``pred_fns``, are compare-excluded,
-    mirroring :class:`Select`); the runner applies them host-side per batch
-    *before* rows are admitted to the device. ``capacity`` is the
-    per-worker batch capacity the runner slices the manifest into."""
+    caching: a ``pred_sigs`` entry is the predicate's *expression tree*
+    when it came from the expression API (structural identity, and the
+    runner may decode extra referenced columns beyond ``columns`` for it)
+    or a callable fingerprint for the legacy probed form. The host
+    evaluators themselves, ``pred_fns``, are compare-excluded, mirroring
+    :class:`Select`; the runner applies them host-side per batch *before*
+    rows are admitted to the device. ``capacity`` is the per-worker batch
+    capacity the runner slices the manifest into."""
 
     sid: int
     schema: Schema
@@ -125,15 +137,19 @@ class Scan(Node):
 @dataclasses.dataclass(frozen=True)
 class Select(Node):
     """Row filter (embarrassingly parallel). ``used`` lists the columns the
-    predicate reads (probed at build time); None means unknown/all.
-    ``fn_sig`` is the callable fingerprint (``api.callable_signature``) that
-    keeps structurally-equal nodes with different predicates distinct."""
+    predicate reads — exact when ``expr`` carries the predicate's
+    expression tree (the first-class form; ``fn`` is then its compiled jax
+    body and node identity comes from the tree itself), probed at build
+    time for legacy callables (None means unknown/all, and ``fn_sig`` — the
+    ``api.callable_signature`` fingerprint — keeps structurally-equal nodes
+    with different predicates distinct)."""
 
     child: Node
     fn: Callable = dataclasses.field(compare=False)
     name: str = "pred"
     used: tuple | None = None
     fn_sig: tuple = ()
+    expr: object | None = None
 
     _CHILD_FIELDS: ClassVar[tuple] = ("child",)
 
@@ -171,6 +187,23 @@ class MapColumns(Node):
     used: tuple | None = None
     out_schema: Schema | None = None
     fn_sig: tuple = ()
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
+class WithColumn(Node):
+    """Add (or overwrite) one column from an expression (embarrassingly
+    parallel): all child columns pass through, plus ``name`` computed by
+    ``expr``. ``expr`` is compare-included — node identity and cache keys
+    are the expression's structural hash; ``fn`` is its compiled jax body
+    (compare-excluded). The output dtype/shape is derived from the tree via
+    ``repro.expr.infer_schema_entry``, never probed."""
+
+    child: Node
+    name: str
+    expr: object = None
+    fn: Callable = dataclasses.field(compare=False, default=None)
 
     _CHILD_FIELDS: ClassVar[tuple] = ("child",)
 
@@ -449,6 +482,11 @@ def schema_of(node: Node, memo: dict | None = None) -> Schema:
             raise ValueError(f"map '{node.name}': output schema unknown "
                              "(probe failed); cannot plan")
         s = node.out_schema
+    elif isinstance(node, WithColumn):
+        child_s = schema_of(node.child, memo)
+        dt, tail = _expr.infer_schema_entry(node.expr, child_s)
+        s = tuple(sorted([x for x in child_s if x[0] != node.name]
+                         + [(node.name, dt, tail)]))
     elif isinstance(node, Join):
         s = _join_schema(schema_of(node.left, memo), schema_of(node.right, memo), node.on)
     elif isinstance(node, GroupBy):
@@ -476,7 +514,7 @@ def capacity_of(node: Node, nworkers: int) -> int:
     """Static per-partition output capacity, mirroring the eager defaults."""
     if isinstance(node, (Source, Scan)):
         return node.capacity
-    if isinstance(node, (Select, Project, Rename, MapColumns, Fused)):
+    if isinstance(node, (Select, Project, Rename, MapColumns, WithColumn, Fused)):
         return capacity_of(node.child, nworkers)
     if isinstance(node, Join):
         return node.capacity if node.capacity else 2 * capacity_of(node.left, nworkers)
@@ -513,6 +551,11 @@ def partitioning_of(node: Node) -> tuple | None:
         return tuple(m.get(c, c) for c in p) if p else None
     if isinstance(node, MapColumns):
         return None  # conservatively: the map may rewrite key columns
+    if isinstance(node, WithColumn):
+        p = partitioning_of(node.child)
+        # overwriting a partition-key column breaks co-partitioning; a new
+        # column leaves the child's hash placement intact
+        return None if p and node.name in p else p
     if isinstance(node, Join):
         if node.strategy in ("shuffle",):
             return node.on
@@ -543,6 +586,8 @@ def partitioning_of(node: Node) -> tuple | None:
             elif isinstance(step, Rename):
                 m = dict(step.mapping)
                 p = tuple(m.get(c, c) for c in p)
+            elif isinstance(step, WithColumn):
+                p = None if step.name in p else p
             else:  # MapColumns
                 p = None
         return p
@@ -568,7 +613,8 @@ def estimate_rows(node: Node, src_rows: Mapping, memo: dict | None = None) -> fl
              * SELECT_SELECTIVITY ** len(node.pred_sigs))
     elif isinstance(node, Select):
         r = SELECT_SELECTIVITY * estimate_rows(node.child, src_rows, memo)
-    elif isinstance(node, (Project, Rename, MapColumns, Sort, Rebalance)):
+    elif isinstance(node, (Project, Rename, MapColumns, WithColumn, Sort,
+                           Rebalance)):
         r = estimate_rows(node.child, src_rows, memo)
     elif isinstance(node, Join):
         r = max(estimate_rows(node.left, src_rows, memo),
@@ -645,10 +691,17 @@ def _describe(node: Node) -> str:
                 f"capacity={node.capacity}")
     if isinstance(node, Scan):
         cols = node.columns if node.columns is not None else schema_names(node.schema)
-        preds = f" preds={node.pred_names}" if node.pred_names else ""
+        preds = ""
+        if node.pred_names:
+            shown = tuple(
+                str(sig) if isinstance(sig, _expr.Expr) else name
+                for name, sig in zip(node.pred_names, node.pred_sigs))
+            preds = f" absorbed preds=[{', '.join(shown)}]"
         return (f"SCAN#{node.sid} cols={tuple(cols)} "
                 f"batch_capacity={node.capacity}{preds}")
     if isinstance(node, Select):
+        if node.expr is not None:
+            return f"SELECT[{node.expr}]"
         return f"SELECT {node.name} used={node.used}"
     if isinstance(node, Project):
         star = "*" if node.synthetic else ""
@@ -657,6 +710,8 @@ def _describe(node: Node) -> str:
         return f"RENAME {dict(node.mapping)}"
     if isinstance(node, MapColumns):
         return f"MAP {node.name}"
+    if isinstance(node, WithColumn):
+        return f"WITH_COLUMN {node.name} = {node.expr}"
     if isinstance(node, Join):
         return f"JOIN on={node.on} strategy={node.strategy}{planned(node)}"
     if isinstance(node, GroupBy):
@@ -687,11 +742,14 @@ def _describe(node: Node) -> str:
         inner = []
         for s in node.steps:
             if isinstance(s, Select):
-                inner.append(f"select:{s.name}")
+                inner.append(f"select[{s.expr}]" if s.expr is not None
+                             else f"select:{s.name}")
             elif isinstance(s, Project):
                 inner.append(f"project{'*' if s.synthetic else ''}{s.names}")
             elif isinstance(s, Rename):
                 inner.append(f"rename{dict(s.mapping)}")
+            elif isinstance(s, WithColumn):
+                inner.append(f"with_column:{s.name}={s.expr}")
             else:
                 inner.append(f"map:{s.name}")
         return "EP[" + " -> ".join(inner) + "]"

@@ -2,6 +2,9 @@
 
 ``optimize`` runs, in order:
 
+0. :func:`normalize_predicates` — constant-fold expression predicates and
+   AND-split boolean conjunctions into separate ``SELECT`` nodes, so each
+   conjunct can sink independently (different join sides, into a SCAN).
 1. :func:`pushdown_predicates` — sink ``SELECT`` below projections, sorts and
    (side-resolvable) joins so filters run before shuffles shrink payloads.
 2. :func:`pushdown_projections` — thread the set of columns each ancestor
@@ -30,6 +33,7 @@ from typing import Mapping
 
 import numpy as np
 
+from .. import expr as _expr
 from ..core import cost_model, patterns
 from ..core.partition import default_quota
 from .logical import (
@@ -48,6 +52,7 @@ from .logical import (
     Sort,
     Union,
     Unique,
+    WithColumn,
     capacity_of,
     estimate_rows,
     partitioning_of,
@@ -58,6 +63,7 @@ from .logical import (
 
 __all__ = [
     "optimize",
+    "normalize_predicates",
     "pushdown_predicates",
     "pushdown_projections",
     "pushdown_scans",
@@ -66,7 +72,7 @@ __all__ = [
     "fuse_elementwise",
 ]
 
-_EP = (Select, Project, Rename, MapColumns)
+_EP = (Select, Project, Rename, MapColumns, WithColumn)
 
 
 def _rewrite_up(root: Node, fn) -> Node:
@@ -87,6 +93,43 @@ def _rewrite_up(root: Node, fn) -> Node:
     return rec(root)
 
 
+# -- pass 0: expression-predicate normalization --------------------------------
+
+def _expr_select(child: Node, e, name: str) -> Select:
+    """Build a SELECT from an expression tree (compiled body, exact used
+    set, identity = the tree itself)."""
+    return Select(child, _expr.to_jax_fn(e), name,
+                  tuple(sorted(_expr.referenced_columns(e))), expr=e)
+
+
+def normalize_predicates(root: Node) -> Node:
+    """Constant-fold expression predicates and split boolean conjunctions.
+
+    ``SELECT[(a > 3) & (b < 7)]`` becomes two stacked SELECTs so each
+    conjunct pushes down independently (one can sink to a join's left
+    input, the other to its right, or into a SCAN). The split preserves
+    bit-exact semantics: filtering twice keeps the same surviving rows in
+    the same order, and ``&`` is only split when both sides are boolean
+    over the child schema (it is also integer bitwise-AND). Legacy callable
+    predicates pass through untouched — their structure is opaque.
+    """
+
+    def norm(node: Node) -> Node:
+        if not (isinstance(node, Select) and node.expr is not None):
+            return node
+        e = _expr.fold_constants(node.expr)
+        parts = _expr.split_conjuncts(e, schema_of(node.child))
+        if len(parts) == 1 and parts[0] == node.expr:
+            return node
+        out = node.child
+        for i, p in enumerate(parts):
+            nm = node.name if len(parts) == 1 else f"{node.name}.{i}"
+            out = _expr_select(out, p, nm)
+        return out
+
+    return _rewrite_up(root, norm)
+
+
 # -- pass 1: predicate pushdown ----------------------------------------------
 
 def _sink_select_once(sel: Select) -> Node:
@@ -97,6 +140,11 @@ def _sink_select_once(sel: Select) -> Node:
         return sel
     used = set(sel.used)
     if isinstance(child, Project) and used <= set(child.names):
+        return dataclasses.replace(
+            child, child=dataclasses.replace(sel, child=child.child))
+    if isinstance(child, WithColumn) and child.name not in used:
+        # the filter does not read the computed column: filter first, so
+        # fewer rows pay the expression (and the SELECT keeps sinking)
         return dataclasses.replace(
             child, child=dataclasses.replace(sel, child=child.child))
     if isinstance(child, Sort):
@@ -167,6 +215,15 @@ def pushdown_projections(root: Node) -> Node:
             used = set(node.used) if node.used is not None else child_names
             child = prune(node.child, frozenset(used))
             return dataclasses.replace(node, child=_maybe_project(child, frozenset(used)))
+        if isinstance(node, WithColumn):
+            if node.name not in needed:
+                # dead computed column: nobody above reads it, drop the node
+                return prune(node.child, needed)
+            refs = _expr.referenced_columns(node.expr)
+            child_needed = frozenset((needed - {node.name}) | refs)
+            child = prune(node.child, child_needed)
+            return dataclasses.replace(
+                node, child=_maybe_project(child, child_needed))
         if isinstance(node, Join):
             lnames = set(schema_names(schema_of(node.left)))
             on = set(node.on)
@@ -245,28 +302,43 @@ def pushdown_scans(root: Node) -> Node:
     - ``PROJECT(SCAN)`` -> ``SCAN[columns]`` — only the referenced ``.npz``
       members are decompressed per batch;
     - ``SELECT(SCAN)`` -> ``SCAN[+pred]`` — the predicate runs host-side on
-      the decoded chunk *before* rows are admitted to the device (probed on
-      a tiny numpy table first; predicates that cannot run on numpy stay as
-      device SELECTs);
+      the decoded chunk *before* rows are admitted to the device.
+      Expression predicates absorb when host-portable
+      (``repro.expr.host_portable``: numpy and jax provably agree — float
+      *arithmetic* promotes differently and keeps the SELECT on device),
+      compiling straight to numpy (``repro.expr.to_numpy_fn``) with no
+      trial probe; the tree becomes the scan's structural signature.
+      Legacy callables are probed on a tiny numpy table first; ones that
+      cannot run on numpy stay as device SELECTs;
     - ``PROJECT(SELECT(x))`` -> ``SELECT(PROJECT(x))`` when the predicate's
       accessed columns survive the projection, so projections keep sinking
       toward the scan.
     """
 
+    def preds_survive_narrow(sc: Scan, restricted) -> bool:
+        # expression preds always survive: the runner decodes their exact
+        # referenced columns on top of the projected set; callables must
+        # re-probe against the restricted schema
+        return all(isinstance(sig, _expr.Expr) or _host_pred_ok(fn, restricted)
+                   for sig, fn in zip(sc.pred_sigs, sc.pred_fns))
+
     def absorb(node: Node) -> Node:
         if isinstance(node, Project) and isinstance(node.child, Scan):
             sc = node.child
             narrowed = dataclasses.replace(sc, columns=tuple(sorted(node.names)))
-            if sc.pred_fns:
-                # predicates already absorbed into the scan run on the
-                # decoded batch: only narrow the decode set if every pred
-                # still evaluates on the projected schema (re-probe)
-                restricted = schema_of(narrowed)
-                if not all(_host_pred_ok(fn, restricted) for fn in sc.pred_fns):
-                    return node
+            if sc.pred_fns and not preds_survive_narrow(sc, schema_of(narrowed)):
+                return node
             return narrowed
         if isinstance(node, Select) and isinstance(node.child, Scan):
             sc = node.child
+            if node.expr is not None:
+                if _expr.host_portable(node.expr, schema_of(sc)):
+                    return dataclasses.replace(
+                        sc,
+                        pred_names=sc.pred_names + (node.name,),
+                        pred_sigs=sc.pred_sigs + (node.expr,),
+                        pred_fns=sc.pred_fns + (_expr.to_numpy_fn(node.expr),))
+                return node  # float-arith predicate: stays a device SELECT
             if node.fn_sig and _host_pred_ok(node.fn, schema_of(sc)):
                 return dataclasses.replace(
                     sc,
@@ -449,6 +521,7 @@ def fuse_elementwise(root: Node) -> Node:
 def optimize(root: Node, nworkers: int, src_rows: Mapping,
              params: cost_model.CostParams | None = None) -> Node:
     """Run all rewrite passes and return the optimized, fully-planned root."""
+    root = normalize_predicates(root)
     root = pushdown_predicates(root)
     root = pushdown_projections(root)
     root = pushdown_scans(root)

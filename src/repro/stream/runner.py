@@ -45,6 +45,7 @@ from typing import Iterator, Mapping
 import jax.numpy as jnp
 import numpy as np
 
+from .. import expr as _expr
 from ..core import cost_model
 from ..core.api import DDF, DDFContext
 from ..core.dataframe import Table, concat
@@ -66,13 +67,14 @@ from ..plan.logical import (
     Sort,
     Source,
     Unique,
+    WithColumn,
     schema_of,
     walk,
 )
 
 __all__ = ["collect", "to_batches"]
 
-_EPLIKE = (Select, Project, Rename, MapColumns, Fused, Rebalance)
+_EPLIKE = (Select, Project, Rename, MapColumns, WithColumn, Fused, Rebalance)
 _SIDS = itertools.count(1 << 20)  # runner-created Source ids, disjoint range
 
 _M1 = np.uint32(0x7FEB352D)
@@ -289,14 +291,29 @@ class _Runner:
     def _host_batches(self, man: DatasetManifest, scan: Scan,
                       batch_rows: int) -> Iterator[dict]:
         cols = scan.columns
+        # expression predicates may reference columns outside the scan's
+        # projected output (the optimizer narrows the decode set past them
+        # because the reference set is exact): decode the superset, filter,
+        # then drop the pred-only columns before admission
+        read_cols = cols
+        if cols is not None:
+            extra = set()
+            for sig in scan.pred_sigs:
+                if isinstance(sig, _expr.Expr):
+                    extra |= _expr.referenced_columns(sig)
+            extra -= set(cols)
+            if extra:
+                read_cols = tuple(sorted(set(cols) | extra))
         total = man.num_rows
         nb = max(-(-total // batch_rows), 1)
         for k in range(nb):
             lo, hi = k * batch_rows, min((k + 1) * batch_rows, total)
-            data = read_rows(man, lo, hi, columns=cols)
+            data = read_rows(man, lo, hi, columns=read_cols)
             for fn in scan.pred_fns:
                 mask = np.asarray(fn(data)).astype(bool)
                 data = {n: v[mask] for n, v in data.items()}
+            if read_cols is not cols:
+                data = {n: data[n] for n in cols}
             yield data
 
     def _iter_batches(self, root: Node, prep=None):

@@ -13,6 +13,7 @@ from __future__ import annotations
 import tempfile
 from typing import Iterable, Mapping
 
+from .. import expr as _expr
 from ..core import cost_model
 from ..core.api import DDFContext
 from ..data.dataset import (
@@ -22,7 +23,7 @@ from ..data.dataset import (
     open_dataset,
 )
 from ..plan import frame as _frame
-from ..plan.logical import Scan
+from ..plan.logical import Scan, Select, schema_names
 
 __all__ = ["scan_dataset", "scan_csv"]
 
@@ -43,7 +44,9 @@ def _batch_capacity(manifest: DatasetManifest, ctx: DDFContext,
 
 
 def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
-                 memory_budget_bytes: float | None = None) -> "_frame.LazyDDF":
+                 memory_budget_bytes: float | None = None,
+                 columns: Iterable[str] | None = None,
+                 predicate=None) -> "_frame.LazyDDF":
     """Open a chunked dataset as a lazy out-of-core pipeline source.
 
     Args:
@@ -54,6 +57,17 @@ def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
         dispatch-overhead amortization).
       memory_budget_bytes: per-device batch working-set budget forwarded to
         the batch-sizing model when ``batch_rows`` is not pinned.
+      columns: projection pushed straight into the scan — only these
+        ``.npz`` members are decoded per batch (same effect as a
+        ``.project()`` the optimizer would absorb).
+      predicate: a ``repro.expr`` boolean expression — exactly equivalent
+        to chaining ``.select(predicate)``. Host-portable predicates
+        (``repro.expr.host_portable``) are absorbed into the scan and
+        evaluated host-side on each decoded chunk *before* rows are
+        admitted to the device (referenced columns outside ``columns`` are
+        decoded transiently and dropped after filtering); non-portable
+        ones (float arithmetic, 64-bit columns) become a device SELECT
+        above the scan so results never diverge from the eager path.
 
     Returns:
       A ``LazyDDF`` whose plan root is a ``SCAN`` leaf. Terminal calls
@@ -63,7 +77,45 @@ def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
         else open_dataset(str(dataset))
     cap = _batch_capacity(manifest, ctx, batch_rows, memory_budget_bytes)
     sid = next(_frame._SIDS)
-    root = Scan(sid=sid, schema=manifest.schema, capacity=cap)
+    have = schema_names(manifest.schema)
+    cols = None
+    if columns is not None:
+        cols = tuple(sorted(str(c) for c in columns))
+        missing = [c for c in cols if c not in have]
+        if missing:
+            raise KeyError(f"scan: unknown column(s) {missing}; "
+                           f"available schema: {sorted(have)}")
+    preds = ((), (), ())
+    device_pred = None
+    if predicate is not None:
+        if not (isinstance(predicate, _expr.Expr)
+                or _expr.is_when_builder(predicate)):
+            raise TypeError(
+                "scan predicate must be a repro.expr expression (e.g. "
+                "col('v') > 3); for legacy callables chain .select() and "
+                "let the optimizer probe it")
+        e = _expr.prepare_row_expr(predicate, have, "scan")
+        if _expr.host_portable(e, manifest.schema):
+            preds = (("pred",), (e,), (_expr.to_numpy_fn(e),))
+        else:
+            # host numpy would evaluate this differently than the device
+            # (float promotion / 64-bit truncation): keep it as a device
+            # SELECT so predicate= stays exactly equivalent to .select()
+            refs = _expr.referenced_columns(e)
+            if cols is not None and not refs <= set(cols):
+                raise ValueError(
+                    f"scan: predicate {e} is not host-portable (it must "
+                    "run on device) but references column(s) "
+                    f"{sorted(refs - set(cols))} outside columns={cols}; "
+                    "include them in columns= or use a host-portable "
+                    "(integer/comparison) predicate")
+            device_pred = e
+    root = Scan(sid=sid, schema=manifest.schema, capacity=cap, columns=cols,
+                pred_names=preds[0], pred_sigs=preds[1], pred_fns=preds[2])
+    if device_pred is not None:
+        root = Select(root, _expr.to_jax_fn(device_pred), "pred",
+                      tuple(sorted(_expr.referenced_columns(device_pred))),
+                      expr=device_pred)
     return _frame.LazyDDF(root, ctx, {}, scans={sid: manifest})
 
 
@@ -71,7 +123,9 @@ def scan_csv(files: Iterable[str], schema: Mapping, ctx: DDFContext,
              directory: str | None = None,
              chunk_rows: int = DEFAULT_CHUNK_ROWS,
              batch_rows: int | None = None,
-             memory_budget_bytes: float | None = None) -> "_frame.LazyDDF":
+             memory_budget_bytes: float | None = None,
+             columns: Iterable[str] | None = None,
+             predicate=None) -> "_frame.LazyDDF":
     """Scan CSV files out-of-core: chunked ingestion + ``scan_dataset``.
 
     Files are converted once into a chunked dataset under ``directory``
@@ -85,4 +139,5 @@ def scan_csv(files: Iterable[str], schema: Mapping, ctx: DDFContext,
         directory = tempfile.mkdtemp(prefix="repro-scan-csv-")
     manifest = csv_to_dataset(files, schema, directory, chunk_rows=chunk_rows)
     return scan_dataset(manifest, ctx, batch_rows=batch_rows,
-                        memory_budget_bytes=memory_budget_bytes)
+                        memory_budget_bytes=memory_budget_bytes,
+                        columns=columns, predicate=predicate)

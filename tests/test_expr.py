@@ -1,0 +1,595 @@
+"""Columnar expression API (ISSUE 4): unit + equivalence tests.
+
+Covers the tree itself (folding, AND-split, structural-hash non-aliasing,
+rendering), the eager/lazy/streaming integration (bit-identical to the
+equivalent callable pipelines), scan absorption without the numpy probe
+path, the deprecation shim, and KeyError wording parity. A property test
+drives random expr-vs-callable pipelines through eager and lazy execution.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+import repro.expr as ex
+import repro.plan.optimizer as optimizer
+from repro.core import DDF, DDFContext
+from repro.expr import col, lit, when
+from repro.plan.logical import Scan, Select, WithColumn, walk
+
+N = 96
+CAP = 4 * N
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    return DDFContext(mesh=mesh, axes=("data",))
+
+
+@pytest.fixture(scope="module")
+def base(ctx):
+    rng = np.random.default_rng(7)
+    L = {"k": rng.integers(0, 24, N).astype(np.int32),
+         "v": rng.integers(0, 1000, N).astype(np.int32),
+         "junk": rng.integers(0, 5, N).astype(np.int32)}
+    R = {"k": rng.integers(0, 24, N).astype(np.int32),
+         "w": rng.integers(0, 1000, N).astype(np.int32)}
+    return (DDF.from_numpy(L, ctx, capacity=CAP),
+            DDF.from_numpy(R, ctx, capacity=CAP))
+
+
+SCHEMA = (("a", "int32", ()), ("b", "int32", ()), ("f", "float32", ()))
+
+
+# -- tree unit tests -----------------------------------------------------------
+
+def test_rendering():
+    assert str((col("a") > 3) & (col("b") < lit(7))) == "((a > 3) & (b < 7))"
+    assert str(col("a") + col("b")) == "(a + b)"
+    assert str((col("a") % 2).eq(0)) == "((a % 2) == 0)"
+    assert str(when(col("a") > 0).then(1).otherwise(-1)) == \
+        "when((a > 0), 1, -1)"
+    assert str(col("v").mean().alias("avg")) == "v.mean() as 'avg'"
+
+
+def test_referenced_columns_exact():
+    e = when(col("a") > 0).then(col("b")).otherwise(col("f") * 2)
+    assert ex.referenced_columns(e) == frozenset({"a", "b", "f"})
+    assert ex.referenced_columns(lit(3)) == frozenset()
+
+
+def test_fold_constants():
+    assert ex.fold_constants(col("a") > lit(1) + lit(2)) == (col("a") > 3)
+    assert ex.fold_constants((col("a") > 3) & lit(True)) == (col("a") > 3)
+    assert ex.fold_constants((col("a") > 3) | lit(False)) == (col("a") > 3)
+    sel = when(lit(True)).then(col("a")).otherwise(col("b"))
+    assert ex.fold_constants(sel) == col("a")
+    # no literal subtree: unchanged (and identical object where possible)
+    e = col("a") + col("b")
+    assert ex.fold_constants(e) == e
+
+
+def test_fold_constants_is_semantics_preserving():
+    # `x & True` is bitwise `x & 1` when x is an integer column: the
+    # boolean identity must NOT fire unless x provably produces booleans
+    e = col("v") & lit(True)
+    assert ex.fold_constants(e) == e
+    assert ex.fold_constants(col("v") | lit(False)) == (col("v") | lit(False))
+    cols = {"v": np.array([5, 4, 7], np.int32)}
+    assert np.array_equal(ex.to_numpy_fn(ex.fold_constants(e))(cols),
+                          np.array([1, 0, 1]))
+    # dtype-pinned literals drive promotion of the unfolded tree and are
+    # never collapsed into a dtype-less weak literal
+    pinned = lit(1, "float64") + lit(2, "float64")
+    assert ex.fold_constants(pinned) == pinned
+    assert ex.fold_constants(-lit(3, "int64")) == -lit(3, "int64")
+
+
+def test_split_conjuncts_boolean_only():
+    parts = ex.split_conjuncts((col("a") > 3) & (col("b") < 7), SCHEMA)
+    assert parts == (col("a") > 3, col("b") < 7)
+    # nested conjunction flattens
+    e3 = (col("a") > 1) & (col("b") > 2) & (col("f") > 0.5)
+    assert len(ex.split_conjuncts(e3, SCHEMA)) == 3
+    # int & int is bitwise, never split
+    assert ex.split_conjuncts(col("a") & col("b"), SCHEMA) == \
+        (col("a") & col("b"),)
+
+
+def test_structural_hash_non_aliasing():
+    assert (col("a") > 3) == (col("a") > lit(3))
+    assert hash(col("a") > 3) == hash(col("a") > lit(3))
+    # different literal values never alias, even hash-equal (-1/-2) or
+    # numerically-equal-but-differently-typed (3 vs 3.0) ones
+    assert (col("a") > -1) != (col("a") > -2)
+    assert (col("a") > 3) != (col("a") > 3.0)
+    assert (col("a") > 3) != (col("b") > 3)
+    assert lit(3) != lit(3, dtype="int32")
+
+
+def test_expr_guardrails():
+    with pytest.raises(TypeError):
+        bool(col("a") > 3)
+    with pytest.raises(TypeError):
+        ex.ensure_row_expr(col("a").sum(), "select")
+    with pytest.raises(KeyError, match="available schema"):
+        ex.ensure_columns(col("zz") > 1, ("a", "b"), "select")
+    with pytest.raises(TypeError):
+        ex.to_jax_fn(col("a").sum())({"a": np.ones(2)})
+
+
+def test_incomplete_when_builder_guidance(base):
+    """An unfinished when(...).then(...) gets the guidance TypeError from
+    every public entry point, never the legacy-callable fallback."""
+    dl, _ = base
+    half = when(col("v") > 1).then(1)
+    for call in (lambda: dl.select(half),
+                 lambda: dl.with_column("c", half),
+                 lambda: dl.lazy().select(half),
+                 lambda: dl.lazy().with_column("c", half)):
+        with pytest.raises(TypeError, match="incomplete when"):
+            with warnings.catch_warnings():
+                warnings.simplefilter("error", DeprecationWarning)
+                call()
+
+
+def test_host_portable():
+    schema = (("a", "int32", ()), ("f", "float32", ()), ("z", "bool", ()))
+    assert ex.host_portable((col("a") % 2).eq(0), schema)
+    assert ex.host_portable((col("a") > 3) & (col("f") < 0.5), schema)
+    assert ex.host_portable(col("f") > 0.05, schema)  # raw-col comparison
+    assert ex.host_portable(~col("z"), schema)
+    # float arithmetic promotes differently on numpy (float64) vs jax
+    # (float32): not portable, must stay a device SELECT
+    assert not ex.host_portable((col("a") / 2) <= 16777216.0, schema)
+    assert not ex.host_portable(col("f") * 2 > 1.0, schema)
+    assert not ex.host_portable(col("a") > 3.0 * col("f"), schema)
+    # 64-bit columns are truncated to 32 bits on device (x64 disabled):
+    # host-side evaluation would see different values
+    wide = (("d", "float64", ()), ("i", "int64", ()))
+    assert not ex.host_portable(col("d") > 0.1, wide)
+    assert not ex.host_portable((col("i") % 2).eq(0), wide)
+    assert not ex.host_portable(col("a").eq(lit(3, "int64")), schema)
+    # mixed int-column vs float comparisons promote through float64 on
+    # numpy but float32 on jax (flip above 2^24): rejected
+    assert not ex.host_portable(col("a") > 16777216.5, schema)
+    assert not ex.host_portable(col("f") < col("a"), schema)
+    assert not ex.host_portable(col("a").eq(lit(1.0, "float32")), schema)
+    # unsigned columns: numpy compares out-of-range literals exactly
+    # (uint32 > -1 is all-True) while jax wraps them (all-False)
+    assert not ex.host_portable(col("u") > -1, (("u", "uint32", ()),))
+    assert not ex.host_portable((col("u") % 2).eq(0), (("u", "uint16", ()),))
+
+
+def test_bare_bool_predicate_rejected(base):
+    """`col("a") == 3` is structural equality returning a Python bool;
+    predicate positions reject it with .eq() guidance instead of silently
+    folding to a constant."""
+    dl, _ = base
+    mistake = col("v") == 3  # structural: a plain bool
+    assert mistake is False
+    for call in (lambda: dl.select(mistake),
+                 lambda: dl.lazy().select(mistake),
+                 lambda: dl.with_column("flag", mistake),
+                 lambda: dl.lazy().with_column("flag", mistake),
+                 lambda: when(mistake),
+                 # compound-operand variants: the bool hides inside &/|
+                 lambda: (col("v") > 0) & mistake,
+                 lambda: mistake & (col("v") > 0),
+                 lambda: (col("v") > 0) | mistake,
+                 lambda: (col("v") > 0) ^ mistake):
+        with pytest.raises(TypeError, match=r"\.eq\(\)"):
+            call()
+    # an intentional boolean constant stays expressible
+    assert ((col("v") > 0) & lit(True)) is not None
+    # explicit literals remain available
+    assert np.array_equal(dl.with_column("t", lit(True)).to_numpy()["t"],
+                          np.ones(N, bool))
+
+
+def test_jax_numpy_parity():
+    e = ((col("a") * 3 - col("b")) % 5).eq(0) & (col("f") > 0.25)
+    rng = np.random.default_rng(0)
+    cols = {"a": rng.integers(0, 100, 64).astype(np.int32),
+            "b": rng.integers(0, 100, 64).astype(np.int32),
+            "f": rng.random(64).astype(np.float32)}
+    host = ex.to_numpy_fn(e)(cols)
+    dev = np.asarray(ex.to_jax_fn(e)({k: np.asarray(v) for k, v in cols.items()}))
+    assert host.dtype == np.dtype(bool)
+    assert np.array_equal(host, dev)
+
+
+def test_infer_schema_entry():
+    assert ex.infer_schema_entry(col("a") + col("b"), SCHEMA) == ("int32", ())
+    assert ex.infer_schema_entry(col("a") > 3, SCHEMA) == ("bool", ())
+    assert ex.infer_schema_entry(col("a").cast("float32") / 2, SCHEMA) == \
+        ("float32", ())
+
+
+def test_parse_agg_specs():
+    aggs, renames = ex.parse_agg_specs(
+        [col("v").sum(), col("v").mean().alias("avg"), col("w").count()])
+    assert aggs == {"v": ("sum", "mean"), "w": ("count",)}
+    assert renames == (("v_mean", "avg"),)
+    with pytest.raises(TypeError):
+        ex.parse_agg_specs([col("v")])
+    with pytest.raises(TypeError):
+        ex.parse_agg_specs([(col("a") + col("b")).sum()])
+    with pytest.raises(ValueError):
+        ex.parse_agg_specs([col("v").sum().alias("x"),
+                            col("v").sum().alias("y")])
+    with pytest.raises(ValueError, match="duplicate output"):
+        ex.parse_agg_specs([col("v").sum().alias("x"),
+                            col("w").sum().alias("x")])
+    with pytest.raises(ValueError, match="duplicate output"):
+        ex.parse_agg_specs([col("v").sum(), col("w").count().alias("v_sum")])
+    with pytest.raises(ValueError):
+        ex.parse_agg_specs([])
+
+
+# -- eager integration ---------------------------------------------------------
+
+def test_eager_select_expr_matches_callable(base):
+    dl, _ = base
+    ref = dl.select(lambda c: (c["v"] % 3 == 0) & (c["k"] > 5)).to_numpy()
+    got = dl.select((col("v") % 3).eq(0) & (col("k") > 5)).to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_eager_with_column(base):
+    dl, _ = base
+    got = dl.with_column("c", col("v") * 2 + col("k")).to_numpy()
+    host = dl.to_numpy()
+    assert np.array_equal(got["c"], host["v"] * 2 + host["k"])
+    # overwrite keeps schema, literal broadcast fills rows
+    lit7 = dl.with_column("v", lit(7)).to_numpy()
+    assert np.array_equal(lit7["v"], np.full(N, 7))
+    cond = dl.with_column("s", when(col("v") > 500).then(1).otherwise(-1))
+    assert np.array_equal(cond.to_numpy()["s"],
+                          np.where(host["v"] > 500, 1, -1))
+
+
+def test_eager_groupby_agg_exprs(base):
+    dl, _ = base
+    ref, _ = dl.groupby(("k",), {"v": ("sum", "mean")})
+    ref = ref.rename({"v_mean": "avg"}).to_numpy()
+    got, _ = dl.groupby(("k",), [col("v").sum(), col("v").mean().alias("avg")])
+    got = got.to_numpy()
+    assert sorted(ref) == sorted(got)
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_unknown_column_wording_matches_eager(base):
+    dl, _ = base
+    with pytest.raises(KeyError) as e_eager:
+        dl.select(col("zz") > 1)
+    with pytest.raises(KeyError) as e_lazy:
+        dl.lazy().select(col("zz") > 1)
+    assert str(e_eager.value) == str(e_lazy.value)
+    assert "available schema" in str(e_eager.value)
+    with pytest.raises(KeyError, match="with_column"):
+        dl.with_column("c", col("zz") + 1)
+    with pytest.raises(KeyError, match="with_column"):
+        dl.lazy().with_column("c", col("zz") + 1)
+
+
+def test_callable_deprecation_warned_once(base):
+    dl, _ = base
+    ex._WARNED.discard("select")
+    ex._WARNED.discard("map_columns")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        dl.select(lambda c: c["v"] > 0)
+        dl.select(lambda c: c["v"] > 1)
+        dl.lazy().select(lambda c: c["v"] > 2)
+        dl.map_columns(lambda c: dict(c))
+        dl.lazy().map_columns(lambda c: dict(c))
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 2  # one for select, one for map_columns
+    # expressions never warn
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        dl.select(col("v") > 0)
+    assert not [x for x in w2 if issubclass(x.category, DeprecationWarning)]
+
+
+# -- lazy integration ----------------------------------------------------------
+
+def test_lazy_explain_renders_exprs(base):
+    dl, dr = base
+    lz = (dl.lazy()
+          .select((col("v") > 3) & (col("k") < 20))
+          .with_column("c", col("v") + col("k")))
+    raw = lz.explain(optimized=False)
+    assert "SELECT[((v > 3) & (k < 20))]" in raw
+    assert "WITH_COLUMN c = (v + k)" in raw
+    opt = lz.explain()
+    # AND-split: the conjuncts appear as separate fused select steps
+    assert "select[(v > 3)]" in opt and "select[(k < 20)]" in opt
+
+
+def test_lazy_and_split_pushes_to_both_join_sides(base):
+    dl, dr = base
+    lz = (dl.lazy().join(dr.lazy(), on=("k",), strategy="shuffle")
+          .select((col("v") > 100) & (col("w") > 100)))
+    opt = lz.explain()
+    join_at = opt.index("JOIN")
+    # both conjuncts sank below the join (each to its own side)
+    assert opt.index("(v > 100)") > join_at
+    assert opt.index("(w > 100)") > join_at
+    ref, _ = dl.join(dr, on=("k",), strategy="shuffle")
+    ref = ref.select(lambda c: (c["v"] > 100) & (c["w"] > 100)).to_numpy()
+    got = lz.to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_lazy_with_column_dead_column_eliminated(base):
+    dl, _ = base
+    lz = (dl.lazy()
+          .with_column("dead", col("v") * 1000)
+          .project(["k", "v"]))
+    plan = optimizer.optimize(lz.plan, 1, {0: N})
+    assert not any(isinstance(n, WithColumn) for n in walk(plan))
+    got = lz.to_numpy()
+    ref = dl.project(["k", "v"]).to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_lazy_select_sinks_below_with_column(base):
+    dl, _ = base
+    lz = (dl.lazy()
+          .with_column("c", col("v") + 1)
+          .select(col("k") > 5))
+    opt = lz.explain()
+    # the filter does not read c: it runs before the column is computed
+    assert opt.index("(k > 5)") < opt.index("with_column") \
+        or opt.index("select[(k > 5)]") < opt.index("with_column:c")
+    ref = dl.select(col("k") > 5).with_column("c", col("v") + 1).to_numpy()
+    got = lz.to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_plan_cache_structural_identity(base):
+    dl, _ = base
+    a = dl.lazy().select((col("v") > 3) & (col("k") < lit(1) + lit(19)))
+    b = dl.lazy().select((col("v") > 3) & (col("k") < 20))
+    assert a.plan == b.plan  # folded at build: same structural identity
+    c = dl.lazy().select((col("v") > 3) & (col("k") < 21))
+    assert a.plan != c.plan
+
+
+# -- streaming integration -----------------------------------------------------
+
+def _write_ds(tmp_path, n=640):
+    from repro.data.dataset import write_dataset
+    rng = np.random.default_rng(11)
+    data = {"k": rng.integers(0, 16, n).astype(np.int32),
+            "v": rng.integers(0, 1000, n).astype(np.int32),
+            "q": rng.integers(0, 7, n).astype(np.int32)}
+    return data, write_dataset(data, str(tmp_path / "ds"), chunk_rows=80)
+
+
+def test_scan_absorbs_expr_pred_without_probe(ctx, base, tmp_path,
+                                              monkeypatch):
+    from repro.stream import scan_dataset
+    data, man = _write_ds(tmp_path)
+
+    def boom(fn, schema):
+        raise AssertionError("numpy probe invoked for an expression pred")
+
+    monkeypatch.setattr(optimizer, "_host_pred_ok", boom)
+    lz = (scan_dataset(man, ctx, batch_rows=160)
+          .select((col("v") % 2).eq(0))
+          .project(["k", "v"])
+          .groupby(("k",), [col("v").sum()]))
+    opt = lz.explain()
+    assert "absorbed preds=[((v % 2) == 0)]" in opt
+    scan = next(n for n in walk(optimizer.optimize(
+        lz.plan, ctx.nworkers, {next(iter(lz._scans)): 640})) if isinstance(n, Scan))
+    assert scan.columns == ("k", "v")
+    got = lz.collect_stream().to_numpy()
+    assert lz.last_info["batches"] >= 4
+    dd = DDF.from_numpy(data, ctx)
+    ref, _ = dd.select((col("v") % 2).eq(0)).groupby(("k",), {"v": ("sum",)})
+    ref = ref.to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_scan_float_arith_pred_stays_on_device(ctx, tmp_path):
+    """A non-host-portable (float-arithmetic) expression predicate is NOT
+    absorbed into the SCAN; it runs as a device SELECT and the streamed
+    result still matches eager exactly."""
+    from repro.stream import scan_dataset
+    data, man = _write_ds(tmp_path)
+    pred = (col("v") / 2) <= 250.0
+    lz = scan_dataset(man, ctx, batch_rows=160).select(pred)
+    sid = next(iter(lz._scans))
+    plan = optimizer.optimize(lz.plan, ctx.nworkers, {sid: man.num_rows})
+    scan = next(n for n in walk(plan) if isinstance(n, Scan))
+    assert not scan.pred_sigs  # not absorbed
+    assert any(isinstance(n, Select) and n.expr == pred for n in walk(plan))
+    got = lz.collect_stream().to_numpy()
+    ref = DDF.from_numpy(data, ctx).select(pred).to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+
+
+def test_scan_pred_decode_superset(ctx, tmp_path):
+    """A scan predicate on a column outside the projected set decodes the
+    column transiently and drops it before admission."""
+    from repro.stream import scan_dataset
+    data, man = _write_ds(tmp_path)
+    lz = scan_dataset(man, ctx, batch_rows=160, columns=["k", "v"],
+                      predicate=col("q") > 3)
+    got = lz.collect_stream().to_numpy()
+    assert sorted(got) == ["k", "v"]
+    m = data["q"] > 3
+    assert np.array_equal(got["k"], data["k"][m])
+    assert np.array_equal(got["v"], data["v"][m])
+    with pytest.raises(KeyError, match="scan"):
+        scan_dataset(man, ctx, predicate=col("zz") > 1)
+    with pytest.raises(TypeError):
+        scan_dataset(man, ctx, predicate=lambda c: c["q"] > 3)
+
+
+def test_scan_predicate_param_non_portable_goes_to_device(ctx, tmp_path):
+    """scan_dataset(predicate=) stays exactly equivalent to .select():
+    a non-host-portable predicate becomes a device SELECT, never a
+    host-numpy filter with different float semantics."""
+    from repro.stream import scan_dataset
+    data, man = _write_ds(tmp_path)
+    pred = (col("v") / 2) <= 250.0
+    lz = scan_dataset(man, ctx, batch_rows=160, predicate=pred)
+    assert isinstance(lz.plan, Select) and lz.plan.expr == pred
+    assert not next(n for n in walk(lz.plan)
+                    if isinstance(n, Scan)).pred_sigs
+    got = lz.collect_stream().to_numpy()
+    ref = scan_dataset(man, ctx, batch_rows=160).select(pred) \
+        .collect_stream().to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+    # narrowed decode set cannot feed a device predicate on other columns
+    with pytest.raises(ValueError, match="not host-portable"):
+        scan_dataset(man, ctx, columns=["k"], predicate=(col("v") / 2) <= 1.0)
+
+
+def test_stream_expr_matches_callable_end_to_end(ctx, tmp_path):
+    from repro.stream import scan_dataset
+    data, man = _write_ds(tmp_path)
+
+    def build(lz, use_expr):
+        if use_expr:
+            return (lz.select((col("v") % 2).eq(0) & (col("q") < 5))
+                    .with_column("s", col("v") + col("q"))
+                    .groupby(("k",), [col("s").sum(), col("s").count()]))
+        return (lz.select(lambda c: (c["v"] % 2 == 0) & (c["q"] < 5))
+                .map_columns(lambda c: {**c, "s": c["v"] + c["q"]},
+                             name="add_s")
+                .groupby(("k",), {"s": ("sum", "count")}))
+
+    got = build(scan_dataset(man, ctx, batch_rows=160), True) \
+        .collect_stream().to_numpy()
+    ref = build(scan_dataset(man, ctx, batch_rows=160), False) \
+        .collect_stream().to_numpy()
+    eager = build(DDF.from_numpy(data, ctx).lazy(), True).collect().to_numpy()
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+        assert np.array_equal(eager[k], got[k]), k
+
+
+# -- property test: expr pipelines == callable pipelines -----------------------
+
+OP_KINDS = ("select", "with_column", "project", "join", "groupby", "sort",
+            "unique")
+
+
+def _value_col(names):
+    for c in ("v", "w", "v_sum", "w_sum", "c_sum", "v_count", "c"):
+        if c in names:
+            return c
+    return None
+
+
+def _apply(frame, right, op, use_expr, eager):
+    names = set(frame.column_names)
+    kind, p1, p2 = op
+    c = _value_col(names)
+    if kind == "select" and c is not None:
+        m = 2 + p1 % 5
+        if use_expr:
+            return frame.select((col(c) % m).ne(0), name=f"s{m}")
+        return frame.select(lambda cc: cc[c] % m != 0, name=f"s{m}")
+    if kind == "with_column" and c in ("v", "w"):
+        if use_expr:
+            return frame.with_column("c", col(c) * 2 + p1)
+        if eager:  # eager has no callable with_column; expr is the only form
+            return frame.with_column("c", col(c) * 2 + p1)
+        return frame.map_columns(
+            lambda cc, _c=c, _p=p1: {**cc, "c": cc[_c] * 2 + _p},
+            name=f"wc{p1}")
+    if kind == "project" and c is not None and "k" in names:
+        return frame.project(sorted({"k", c}))
+    if kind == "join" and "w" not in names and "k" in names:
+        out = frame.join(right, on=("k",), strategy="shuffle", capacity=CAP * 8)
+        return out[0] if eager else out
+    if kind == "groupby" and c is not None and "k" in names:
+        if use_expr:
+            specs = [col(c).sum()]
+            if p1 % 2:
+                specs.append(col(c).count().alias(f"{c}_n"))
+            out = frame.groupby(("k",), specs)
+            return out[0] if eager else out
+        aggs = {c: ("sum", "count") if p1 % 2 else ("sum",)}
+        out = frame.groupby(("k",), aggs)
+        out = out[0] if eager else out
+        if p1 % 2:
+            out = out.rename({f"{c}_count": f"{c}_n"})
+        return out
+    if kind == "sort" and c is not None:
+        out = frame.sort_values(c if p2 % 2 else ("k" if "k" in names else c),
+                                descending=bool(p1 % 2))
+        return out[0] if eager else out
+    if kind == "unique" and "k" in names:
+        out = frame.unique(("k",))
+        return out[0] if eager else out
+    return frame
+
+
+def _check(base, ops):
+    dl, dr = base
+    results = {}
+    for use_expr in (True, False):
+        e = dl
+        for op in ops:
+            e = _apply(e, dr, op, use_expr, eager=True)
+        lz = dl.lazy()
+        lzr = dr.lazy()
+        for op in ops:
+            lz = _apply(lz, lzr, op, use_expr, eager=False)
+        results[(use_expr, "eager")] = e.to_numpy()
+        results[(use_expr, "lazy")] = lz.to_numpy()
+    ref = results[(False, "eager")]
+    for key, got in results.items():
+        assert sorted(ref) == sorted(got), (key, ops)
+        for k in ref:
+            assert ref[k].dtype == got[k].dtype, (key, k, ops)
+            assert np.array_equal(ref[k], got[k]), (key, k, ops)
+
+
+def test_expr_pipelines_bit_identical_seeded(base):
+    """Random expr pipelines == their callable equivalents, eager and lazy
+    (deterministic variant; runs without hypothesis)."""
+    rng = np.random.default_rng(4040)
+    for _ in range(8):
+        n_ops = int(rng.integers(1, 5))
+        ops = [(OP_KINDS[int(rng.integers(len(OP_KINDS)))],
+                int(rng.integers(8)), int(rng.integers(8)))
+               for _ in range(n_ops)]
+        _check(base, ops)
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.tuples(st.sampled_from(OP_KINDS),
+                  st.integers(0, 7), st.integers(0, 7)),
+        min_size=1, max_size=4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(_ops)
+    def test_expr_pipelines_bit_identical(ctx, base, ops):
+        _check(base, ops)

@@ -136,7 +136,7 @@ def test_scan_pushdown_in_plan(ctx, tmp_path):
     plan = lz.explain()
     # projection narrowed into the scan, predicate absorbed host-side
     assert "SCAN" in plan and "cols=('k', 'v')" in plan
-    assert "preds=('gt',)" in plan
+    assert "absorbed preds=[gt]" in plan
     assert "SELECT" not in plan and "PROJECT" not in plan
 
 
