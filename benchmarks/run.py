@@ -14,6 +14,8 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
                                     decode vs monolithic-when-it-fits)
   ISSUE 4  -> bench_expr           (expression-compiled select/derive vs the
                                     legacy callable path, eager + lazy)
+  ISSUE 5  -> bench_kernels        (Pallas dataframe kernels vs jnp hot
+                                    paths: timings, parity, dispatch audit)
 """
 
 import os
@@ -30,6 +32,7 @@ BENCHES = [
     "benchmarks.bench_pipeline_fusion",
     "benchmarks.bench_stream",
     "benchmarks.bench_expr",
+    "benchmarks.bench_kernels",
 ]
 
 

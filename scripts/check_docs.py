@@ -15,7 +15,10 @@ Fails (exit 1) if:
      ``choose_batch_rows``), or
   5. ``docs/EXPRESSIONS.md`` is missing, or does not mention every
      ``repro.expr`` export (plus the entry points ``with_column`` and
-     ``alias``).
+     ``alias``), or
+  6. ``docs/KERNELS.md`` is missing, or does not mention every
+     ``repro.kernels`` export (plus the cost-model entry point
+     ``kernel_params`` and the env override ``REPRO_KERNEL_BACKEND``).
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -54,6 +57,11 @@ CORE_MODULES = [
     "repro.expr",
     "repro.expr.tree",
     "repro.expr.aggs",
+    # Pallas kernel layer + dispatch registry (ISSUE 5)
+    "repro.kernels",
+    "repro.kernels.ops",
+    "repro.kernels.ref",
+    "repro.kernels.registry",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -134,6 +142,17 @@ def missing_expression_docs() -> list:
         list(expr_pkg.__all__) + ["with_column", "alias"])
 
 
+def missing_kernel_docs() -> list:
+    """Return problems with docs/KERNELS.md coverage of repro.kernels."""
+    import repro.kernels as kernels_pkg
+
+    return missing_doc_mentions(
+        "docs/KERNELS.md",
+        list(kernels_pkg.__all__) + ["kernel_params", "KernelParams",
+                                     "REPRO_KERNEL_BACKEND",
+                                     "segment_reduce_partials"])
+
+
 def main() -> int:
     failures = missing_docstrings()
     if failures:
@@ -160,12 +179,17 @@ def main() -> int:
         print("Expression documentation problems:")
         for f in expr_failures:
             print(f"  - {f}")
+    kernel_failures = missing_kernel_docs()
+    if kernel_failures:
+        print("Kernel documentation problems:")
+        for f in kernel_failures:
+            print(f"  - {f}")
     if failures or doc_failures or lazy_failures or stream_failures \
-            or expr_failures:
+            or expr_failures or kernel_failures:
         return 1
-    print("check_docs: all exported core+plan+stream+expr symbols "
+    print("check_docs: all exported core+plan+stream+expr+kernel symbols "
           "documented; docs cover every pattern, node type, rewrite pass, "
-          "streaming and expression export")
+          "streaming, expression and kernel export")
     return 0
 
 

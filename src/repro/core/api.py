@@ -90,8 +90,14 @@ def cached_op(ctx: "DDFContext", key: tuple, fn: Callable, arg_schemas: tuple) -
 
     Shared by the eager ``DDF._run`` path and the lazy plan executor, so a
     lazy pipeline whose final stage matches an eager op reuses the same
-    compiled callable."""
-    cache_key = (mesh_signature(ctx.mesh), ctx.axes, key, arg_schemas)
+    compiled callable. The key includes the kernel-dispatch signature
+    (``repro.kernels.registry``): hot-path kernel routing is decided at
+    trace time, so a compiled program built under one backend override
+    must never serve another."""
+    from ..kernels import registry as _kernel_registry
+
+    cache_key = (mesh_signature(ctx.mesh), ctx.axes, key, arg_schemas,
+                 _kernel_registry.dispatch_signature())
     op = _OP_CACHE.get(cache_key)
     if op is None:
         op = _build_op(ctx, fn, arg_schemas)

@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
+from typing import Callable, Mapping
 
 from .comm.communicator import DCN, HOST, ICI, FabricProfile
 
 __all__ = [
     "CostParams",
+    "KernelParams",
+    "kernel_params",
     "params_for_fabric",
     "t_shuffle",
     "t_shuffle_pipelined",
@@ -66,6 +68,116 @@ class CostParams:
 
 
 _FABRIC_PROFILES = {"ici": ICI, "dcn": DCN, "host": HOST}
+
+
+# -- Pallas kernel dispatch parameters (ISSUE 5) ---------------------------------
+#
+# The paper's cost breakdown (T_core + T_aux + T_comm) puts the local kernels
+# — hash partitioning (the shuffle build side) and segment aggregation (the
+# groupby combine leg) — on the critical path once shuffles are pipelined.
+# ``kernel_params`` models when the Pallas implementations of those kernels
+# beat the plain jnp lowering: each ``pallas_call`` pays a fixed launch
+# overhead that only amortizes past a per-kernel row threshold, and the
+# kernels support a fixed dtype set (everything else stays on jnp).
+
+# Fixed per-launch overhead of a pallas_call (dispatch + VMEM staging), and
+# the fraction of the jnp per-row cost the Pallas path saves on TPU (the
+# one-hot-matmul kernels replace scatter-adds the TPU lowers to serialized
+# updates). Both are calibration constants in the same spirit as
+# ``CostParams.gamma_s_per_row``; ``benchmarks/bench_kernels.py`` reports
+# measured speedups next to the thresholds these produce.
+_KERNEL_LAUNCH_S = 2e-6
+_KERNEL_SAVING_FRACTION = 0.5
+
+# dtypes each kernel lowers for. hash_partition normalizes every engine
+# dtype (ints, floats, bools) to uint32 host-side before the kernel, so it
+# is unrestricted; segment_reduce computes in the value dtype (exact
+# integer sums, f32 floats) and only lowers the dtypes listed here.
+_KERNEL_DTYPES = {
+    "hash_partition": None,  # None = any dtype (normalized to uint32)
+    "segment_reduce": ("int32", "uint32", "float32"),
+}
+
+# per-kernel pallas block sizes: rows per grid step. segment_reduce uses a
+# smaller block because its exactness contract sizes the one-hot matmul as
+# (block x block) (dense contiguous segment ids span <= block per block).
+_KERNEL_BLOCKS = {"hash_partition": 1024, "segment_reduce": 256}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelParams:
+    """Dispatch inputs for the Pallas kernel layer (one per jax backend).
+
+    Attributes:
+      backend: jax default backend the parameters describe ("tpu", "cpu",
+        "gpu").
+      native: True when Pallas lowers natively on this backend (TPU). On
+        every other backend the Pallas path exists only as the
+        ``interpret=True`` correctness mode, which is never profitable —
+        ``auto`` dispatch then always picks jnp and ``interpret`` is
+        reserved for forced parity testing (``set_backend("pallas")``).
+      min_rows: kernel name -> row-count threshold above which the Pallas
+        launch overhead is amortized (``_KERNEL_LAUNCH_S`` against the
+        per-row saving over jnp).
+      supported_dtypes: kernel name -> tuple of dtype names the kernel
+        lowers for (``None`` = unrestricted).
+      block: kernel name -> pallas grid block size in rows.
+    """
+
+    backend: str
+    native: bool
+    min_rows: Mapping[str, int]
+    supported_dtypes: Mapping[str, tuple | None]
+    block: Mapping[str, int]
+
+    def dtype_supported(self, kernel: str, dtype) -> bool:
+        """True when ``kernel`` lowers for ``dtype`` (name, numpy/jnp dtype
+        or scalar type)."""
+        allowed = self.supported_dtypes.get(kernel)
+        if allowed is None:
+            return True
+        import numpy as np
+
+        try:
+            name = np.dtype(dtype).name
+        except TypeError:
+            name = str(dtype)
+        return name in allowed
+
+    def profitable(self, kernel: str, n_rows: int, dtype=None) -> bool:
+        """True when the native Pallas ``kernel`` beats jnp for ``n_rows``
+        rows of ``dtype`` on this backend (the ``auto`` dispatch test)."""
+        if not self.native:
+            return False
+        if dtype is not None and not self.dtype_supported(kernel, dtype):
+            return False
+        return n_rows >= self.min_rows.get(kernel, 0)
+
+
+def kernel_params(backend: str | None = None,
+                  p: CostParams = CostParams()) -> KernelParams:
+    """Kernel-dispatch parameters for a jax backend (default: the current
+    one).
+
+    The row thresholds come from amortizing the fixed pallas_call launch
+    overhead against the modeled per-row saving over the jnp lowering:
+    ``min_rows = launch_s / (gamma * saving_fraction)``. The registry
+    (``repro.kernels.registry``) consults this for every ``auto`` dispatch;
+    ``benchmarks/bench_kernels.py`` checks the decisions against measured
+    timings."""
+    if backend is None:
+        import jax  # deferred: cost_model is otherwise jax-free
+
+        backend = jax.default_backend()
+    saving = p.gamma_s_per_row * _KERNEL_SAVING_FRACTION
+    threshold = int(math.ceil(_KERNEL_LAUNCH_S / max(saving, 1e-30)))
+    return KernelParams(
+        backend=backend,
+        native=(backend == "tpu"),
+        min_rows={k: threshold for k in _KERNEL_BLOCKS},
+        supported_dtypes=dict(_KERNEL_DTYPES),
+        block=dict(_KERNEL_BLOCKS),
+    )
 
 
 def params_for_fabric(fabric: str) -> CostParams:

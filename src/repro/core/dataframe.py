@@ -27,8 +27,31 @@ __all__ = [
     "compact",
     "head",
     "valid_mask",
+    "max_sentinel",
+    "min_sentinel",
     "to_numpy",
 ]
+
+
+def max_sentinel(dtype) -> jax.Array:
+    """Largest representable value of ``dtype`` (+inf for floats).
+
+    The identity element for ``min`` reductions: masked/invalid/padding
+    rows carry it so they never win. The single definition here is shared
+    by the jnp operator paths (``local_ops``) and the Pallas kernel layer
+    (``kernels.segment_reduce``) — bit-parity between those backends
+    depends on both using the same sentinel."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+def min_sentinel(dtype) -> jax.Array:
+    """Smallest representable value of ``dtype`` (-inf for floats) — the
+    identity element for ``max`` reductions; see :func:`max_sentinel`."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -22,7 +22,7 @@ from typing import Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
-from .dataframe import Table, compact, valid_mask
+from .dataframe import Table, compact, max_sentinel, min_sentinel, valid_mask
 from .partition import hash_columns
 
 __all__ = [
@@ -40,17 +40,9 @@ __all__ = [
 
 _AGG_OPS = ("sum", "count", "min", "max", "mean")
 
-
-def _max_sentinel(dtype):
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.asarray(jnp.inf, dtype)
-    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
-
-
-def _min_sentinel(dtype):
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.asarray(-jnp.inf, dtype)
-    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+# canonical definitions live in dataframe.py (shared with the kernel layer)
+_max_sentinel = max_sentinel
+_min_sentinel = min_sentinel
 
 
 # -- embarrassingly-parallel primitives (paper §5.3.1) -------------------------
@@ -164,6 +156,20 @@ def local_unique(table: Table, key_columns: Sequence[str], capacity: int | None 
 
 # -- groupby (combine / reduce legs, paper §5.3.4) ------------------------------
 
+def _seg_reduce_dispatch(vals: jax.Array, seg: jax.Array, nseg: int, op: str) -> jax.Array:
+    """One segment reduction, routed to the Pallas kernel or jnp.
+
+    ``vals`` is (cap,) already masked/sentinel-filled by the caller; ``seg``
+    is non-decreasing dense ids with ``nseg-1`` as the invalid bucket.
+    ``kernels.segment_reduce`` resolves the backend per (row count, dtype);
+    both paths return the same (nseg,) result — bit-identical for integer
+    ops and min/max, and for float sums up to summation order
+    (docs/KERNELS.md)."""
+    from ..kernels import ops as kernel_ops
+
+    return kernel_ops.segment_reduce(vals[:, None], seg, nseg, op=op)[:, 0]
+
+
 def agg_schema(aggs: Mapping[str, Sequence[str]]) -> list[tuple[str, str, str]]:
     """[(value_col, op, out_col)] with mean decomposed into sum+count."""
     out = []
@@ -210,15 +216,18 @@ def local_groupby(
         out_cols[name] = st.columns[name][first_idx]
 
     def seg_reduce(vals, op):
-        if op == "sum":
-            return jax.ops.segment_sum(vals, seg, num_segments=nseg)[:cap]
+        # combine leg of Combine-Shuffle-Reduce: dispatched to the Pallas
+        # segment_reduce kernel when profitable (registry + cost model).
+        # seg is dense, contiguous and non-decreasing (cumsum of is_new;
+        # invalid rows -> the cap bucket at the tail), which is exactly the
+        # kernel path's exactness contract (max_segments = block).
         if op == "min":
             vals = jnp.where(m, vals, _max_sentinel(vals.dtype))
-            return jax.ops.segment_min(vals, seg, num_segments=nseg)[:cap]
-        if op == "max":
+        elif op == "max":
             vals = jnp.where(m, vals, _min_sentinel(vals.dtype))
-            return jax.ops.segment_max(vals, seg, num_segments=nseg)[:cap]
-        raise ValueError(op)
+        elif op != "sum":
+            raise ValueError(op)
+        return _seg_reduce_dispatch(vals, seg, nseg, op)[:cap]
 
     needed: dict[str, tuple[str, str]] = {}  # out partial name -> (src col partial, merge op)
     for col, op, out_name in spec:
@@ -235,13 +244,12 @@ def local_groupby(
         if op == "count":
             if merge:
                 vals = st.columns[src]
+                vals = jnp.where(m, vals, jnp.zeros_like(vals))
                 out_cols[out_name] = seg_reduce(vals, "sum")
             else:
-                out_cols[out_name] = jax.ops.segment_sum(ones, seg, num_segments=nseg)[:cap]
+                out_cols[out_name] = _seg_reduce_dispatch(ones, seg, nseg, "sum")[:cap]
         else:
             base = st.columns[src]
-            if op == "sum" and not jnp.issubdtype(base.dtype, jnp.floating):
-                base = base  # keep integer sums exact
             vals = jnp.where(m, base, jnp.zeros_like(base)) if op == "sum" else base
             out_cols[out_name] = seg_reduce(vals, op)
 

@@ -13,6 +13,12 @@ shuffle groupby) with the cost model, mirroring paper §5.4.
 Static-shape contract: callers pass ``quota`` (per-destination shuffle slots)
 and output ``capacity``; operators return overflow counters that are zero for
 well-sized quotas (benchmarks assert this).
+
+Hot-kernel dispatch: the shuffle build side of every operator here
+(``hash_partition_ids``) and the segment reductions inside
+``local_groupby`` route through the Pallas kernel layer
+(``repro.kernels``) when the dispatch registry + cost model select it —
+bit-identical to the jnp paths either way (docs/KERNELS.md).
 """
 
 from __future__ import annotations
@@ -66,6 +72,9 @@ def dist_join_shuffle(
 ) -> tuple[Table, dict]:
     """Hash-shuffle join: co-partition both relations by key hash, then join
     locally. T = O(n) part + O(P) + O((P-1)/P * n) comm + T_core (paper §5.3.2).
+
+    The build side (destination ids for both relations) dispatches to the
+    Pallas ``kernels.hash_partition`` when profitable (docs/KERNELS.md).
 
     Args:
       comm: communicator bound to the row-partition axis (inside shard_map).
@@ -129,6 +138,11 @@ def dist_groupby(
     """GroupBy-aggregate. pre_combine=True is the Combine-Shuffle-Reduce
     pattern (efficient at low cardinality C); False degenerates to plain
     Shuffle-Compute (better when C ~ 1, paper §5.4.1).
+
+    Both hot kernels inside dispatch to the Pallas layer when profitable:
+    the build side via ``kernels.hash_partition`` and the combine/reduce
+    legs' segment reductions via ``kernels.segment_reduce``
+    (docs/KERNELS.md).
 
     Args:
       comm: communicator bound to the row-partition axis.

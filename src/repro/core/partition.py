@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from .dataframe import Table, valid_mask
 
 __all__ = [
+    "u32_normalize",
     "hash32",
     "hash_columns",
     "hash_partition_ids",
@@ -33,22 +34,30 @@ _M1 = jnp.uint32(0x7FEB352D)
 _M2 = jnp.uint32(0x846CA68B)
 
 
-def hash32(x: jax.Array) -> jax.Array:
-    """lowbias32 integer hash (Prospecting-for-hash-functions constants).
+def u32_normalize(x: jax.Array) -> jax.Array:
+    """Canonical uint32 view of any column dtype, pre-hash.
 
-    Works on any integer dtype; 64-bit inputs are folded hi^lo first so the
-    engine is independent of ``jax_enable_x64``.
+    64-bit ints fold hi^lo (so the engine is independent of
+    ``jax_enable_x64``), bools widen, floats bitcast (equal floats hash
+    equal). Shared by the jnp hash chain below and the Pallas
+    ``kernels.hash_partition`` build side, so both hash bit-identically.
     """
     if x.dtype in (jnp.int64, jnp.uint64):
         u = x.astype(jnp.uint64)
-        x = (u ^ (u >> jnp.uint64(32))).astype(jnp.uint32)
-    elif x.dtype == jnp.bool_:
-        x = x.astype(jnp.uint32)
-    elif jnp.issubdtype(x.dtype, jnp.floating):
-        # bitcast: equal floats hash equal; fine for hashing purposes.
-        x = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
-    else:
-        x = x.astype(jnp.uint32)
+        return (u ^ (u >> jnp.uint64(32))).astype(jnp.uint32)
+    if x.dtype == jnp.bool_:
+        return x.astype(jnp.uint32)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return x.astype(jnp.uint32)
+
+
+def hash32(x: jax.Array) -> jax.Array:
+    """lowbias32 integer hash (Prospecting-for-hash-functions constants).
+
+    Works on any dtype via :func:`u32_normalize`.
+    """
+    x = u32_normalize(x)
     x = x ^ (x >> 16)
     x = x * _M1
     x = x ^ (x >> 15)
@@ -69,10 +78,36 @@ def hash_columns(table: Table, key_columns: Sequence[str]) -> jax.Array:
 
 def hash_partition_ids(table: Table, key_columns: Sequence[str], num_partitions: int) -> jax.Array:
     """Destination partition per row; invalid rows get ``num_partitions``
-    (a drop bucket)."""
-    h = hash_columns(table, key_columns)
-    dest = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+    (a drop bucket).
+
+    This is the shuffle build side for every shuffle-based operator
+    (join/groupby/unique/set ops). It routes through the Pallas
+    ``kernels.hash_partition`` kernel when the dispatch registry says so
+    (TPU + profitable row count, or a forced ``set_backend("pallas")``);
+    the jnp hash chain below is the fallback. Both paths share
+    :func:`u32_normalize` and the same lowbias32 mixing, so destinations
+    are bit-identical across backends.
+    """
+    mode = _registry().resolve("hash_partition", table.capacity)
+    if mode != "jnp":
+        from .. import kernels
+
+        ku = jnp.stack([u32_normalize(table.columns[n]) for n in key_columns],
+                       axis=1)
+        dest, _ = kernels.hash_partition(ku, num_partitions, force=mode,
+                                         with_hist=False)
+    else:
+        h = hash_columns(table, key_columns)
+        dest = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
     return jnp.where(valid_mask(table), dest, num_partitions)
+
+
+def _registry():
+    # deferred: repro.kernels.registry imports repro.core.cost_model, so a
+    # module-level import here would cycle during package init
+    from ..kernels import registry
+
+    return registry
 
 
 def range_partition_ids(

@@ -1,1 +1,45 @@
-from . import ops, ref  # noqa: F401
+"""Pallas kernel layer: hand-written TPU kernels behind cost-model dispatch.
+
+Two kernel families live here:
+
+- **dataframe kernels** — ``hash_partition`` (the shuffle build side) and
+  ``segment_reduce`` / ``segment_reduce_partials`` (the groupby combine
+  leg). The engine hot paths (``core.partition.hash_partition_ids``,
+  ``core.local_ops.local_groupby``) route through them via the dispatch
+  :mod:`~repro.kernels.registry`: native Pallas on TPU when
+  ``cost_model.kernel_params`` says it is profitable, ``interpret=True``
+  as the bit-identical CPU correctness mode, plain jnp otherwise. Override
+  process-wide with :func:`set_backend` (``"pallas" | "jnp" | "auto"``) or
+  the ``REPRO_KERNEL_BACKEND`` environment variable. See docs/KERNELS.md.
+- **model kernels** — ``flash_attention`` and ``ssd_scan`` for the LM
+  workloads sharing the mesh (dispatching on TPU presence only).
+
+``ops`` holds the dispatching wrappers, ``ref`` the pure-jnp fallbacks /
+oracles, ``registry`` the backend override + decision logic.
+"""
+
+from . import ops, ref, registry  # noqa: F401
+from .ops import hash_partition, segment_reduce, segment_reduce_partials  # noqa: F401
+from .registry import (  # noqa: F401
+    dispatch_signature,
+    explain,
+    get_backend,
+    resolve,
+    set_backend,
+    use_backend,
+)
+
+__all__ = [
+    "ops",
+    "ref",
+    "registry",
+    "hash_partition",
+    "segment_reduce",
+    "segment_reduce_partials",
+    "set_backend",
+    "get_backend",
+    "use_backend",
+    "resolve",
+    "explain",
+    "dispatch_signature",
+]

@@ -9,6 +9,12 @@ TPU-native shape: rows are processed in (block x 1) lanes; the histogram
 uses a one-hot (block x P) matmul against ones — an MXU-friendly reduction
 instead of the GPU-style atomic-increment histogram (which has no TPU
 analogue; DESIGN.md §2).
+
+This is the raw kernel (N must be a block multiple, keys already uint32);
+the engine calls it through ``ops.hash_partition`` (padding + histogram
+correction + registry dispatch) from ``partition.hash_partition_ids``,
+with ``partition.u32_normalize`` pre-normalizing key dtypes so the hash
+equals the jnp chain bit-for-bit (docs/KERNELS.md).
 """
 
 from __future__ import annotations
@@ -26,8 +32,7 @@ _M2 = 0x846CA68B
 _GOLDEN = 0x9E3779B9
 
 
-def _kernel(keys_ref, dest_ref, hist_ref, *, num_partitions, block, n_cols):
-    keys = keys_ref[...]                      # (block, n_cols) uint32
+def _mix(keys, *, num_partitions, block, n_cols):
     h = jnp.zeros((block,), jnp.uint32)
     for c in range(n_cols):
         x = keys[:, c]
@@ -37,12 +42,23 @@ def _kernel(keys_ref, dest_ref, hist_ref, *, num_partitions, block, n_cols):
         x = x * jnp.uint32(_M2)
         x = x ^ (x >> 16)
         h = h ^ (x + jnp.uint32(_GOLDEN) + (h << 6) + (h >> 2))
-    dest = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+    return (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+
+
+def _kernel(keys_ref, dest_ref, hist_ref, *, num_partitions, block, n_cols):
+    keys = keys_ref[...]                      # (block, n_cols) uint32
+    dest = _mix(keys, num_partitions=num_partitions, block=block, n_cols=n_cols)
     dest_ref[...] = dest[:, None]
     # one-hot histogram via compare + sum (VPU/MXU friendly)
     pid = jax.lax.broadcasted_iota(jnp.int32, (block, num_partitions), 1)
     onehot = (dest[:, None] == pid).astype(jnp.float32)
     hist_ref[...] = jnp.sum(onehot, axis=0, keepdims=True).astype(jnp.int32)
+
+
+def _kernel_dest_only(keys_ref, dest_ref, *, num_partitions, block, n_cols):
+    keys = keys_ref[...]
+    dest = _mix(keys, num_partitions=num_partitions, block=block, n_cols=n_cols)
+    dest_ref[...] = dest[:, None]
 
 
 def hash_partition(
@@ -51,19 +67,34 @@ def hash_partition(
     *,
     block: int = 1024,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:
-    """Returns (dest (N,) int32, hist (num_blocks, P) int32)."""
+    with_hist: bool = True,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Returns (dest (N,) int32, hist (num_blocks, P) int32).
+
+    ``with_hist=False`` skips the (block x P) one-hot histogram reduction
+    entirely (hist comes back ``None``) — the shape the shuffle build side
+    wants, since ``hash_partition_ids`` only consumes the destinations."""
     if keys.ndim == 1:
         keys = keys[:, None]
     N, n_cols = keys.shape
     assert N % block == 0, (N, block)
     nb = N // block
     ku = keys.astype(jnp.uint32)
+    opts = dict(num_partitions=num_partitions, block=block, n_cols=n_cols)
 
-    kernel = functools.partial(_kernel, num_partitions=num_partitions,
-                               block=block, n_cols=n_cols)
+    if not with_hist:
+        dest = pl.pallas_call(
+            functools.partial(_kernel_dest_only, **opts),
+            grid=(nb,),
+            in_specs=[pl.BlockSpec((block, n_cols), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
+            interpret=interpret,
+        )(ku)
+        return dest[:, 0], None
+
     dest, hist = pl.pallas_call(
-        kernel,
+        functools.partial(_kernel, **opts),
         grid=(nb,),
         in_specs=[pl.BlockSpec((block, n_cols), lambda i: (i, 0))],
         out_specs=[

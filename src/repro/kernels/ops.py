@@ -1,35 +1,47 @@
-"""jit'd wrappers + platform dispatch for the Pallas kernels.
+"""jit'd wrappers + dispatch for the Pallas kernels.
 
-On TPU the Pallas path runs natively; everywhere else (this CPU container)
-``interpret=True`` executes the kernel body in Python for correctness, and
-the model layers default to their XLA implementations. ``force``
-overrides are for tests/benches.
+Every wrapper resolves an execution mode — native ``pallas`` (TPU),
+``interpret`` (the kernel body run by the Pallas interpreter: bit-identical
+on any backend, the CPU correctness fallback), or the plain ``jnp``/``xla``
+reference — through :mod:`repro.kernels.registry`, which consults
+``cost_model.kernel_params`` (row thresholds, dtype support, native-lowering
+flag) and the process-wide ``set_backend`` override. ``force`` pins a mode
+for tests and benchmarks.
+
+The dataframe wrappers (:func:`hash_partition`, :func:`segment_reduce`)
+additionally handle the static-shape plumbing the hot paths need: padding
+arbitrary row counts up to a block multiple (with exact histogram
+correction) and merging block-local partials into per-segment outputs that
+match the jnp path bit-for-bit on every associative case.
 """
 
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import hash_partition as _hp
+from . import registry
 from . import segment_reduce as _sr
 from . import ssd_scan as _ssd
 from . import ref
 
 __all__ = ["on_tpu", "flash_attention", "ssd_scan", "hash_partition",
-           "segment_reduce", "ref"]
+           "segment_reduce", "segment_reduce_partials", "ref"]
 
 
 def on_tpu() -> bool:
+    """True when the default jax backend is TPU (native Pallas lowering)."""
     return jax.default_backend() == "tpu"
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     scale=None, q_block=128, kv_block=128, force: str | None = None):
-    """(B,S,H,hd) x (B,S,KV,hd)^2 -> (B,S,H,hd)."""
+    """(B,S,H,hd) x (B,S,KV,hd)^2 -> (B,S,H,hd) attention (model layer).
+
+    Mode: native Pallas on TPU, XLA reference elsewhere; ``force`` pins
+    "pallas" | "interpret" | "xla" for tests."""
     mode = force or ("pallas" if on_tpu() else "xla")
     if mode == "pallas":
         return _fa.flash_attention(q, k, v, causal=causal, window=window,
@@ -45,6 +57,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
 
 
 def ssd_scan(x, dt, A, B, C, D, *, chunk=128, force: str | None = None):
+    """Mamba-2 SSD chunked scan (model layer); mode selection as
+    :func:`flash_attention`."""
     mode = force or ("pallas" if on_tpu() else "xla")
     if mode == "pallas":
         return _ssd.ssd_scan(x, dt, A, B, C, D, chunk=chunk)
@@ -53,30 +67,125 @@ def ssd_scan(x, dt, A, B, C, D, *, chunk=128, force: str | None = None):
     return ref.ssd_scan_ref(x, dt, A, B, C, D, chunk=chunk)
 
 
-def hash_partition(keys, num_partitions, *, block=1024, force: str | None = None):
-    """Returns (dest (N,), hist (P,)) — per-block partials summed."""
-    mode = force or ("pallas" if on_tpu() else "xla")
-    if mode in ("pallas", "interpret"):
-        dest, hist = _hp.hash_partition(keys, num_partitions, block=block,
-                                        interpret=(mode == "interpret"))
-        return dest, jnp.sum(hist, axis=0)
-    return ref.hash_partition_ref(keys, num_partitions)
+def hash_partition(keys, num_partitions, *, block: int | None = None,
+                   force: str | None = None, with_hist: bool = True):
+    """Destination partition ids + histogram for the shuffle build side.
+
+    Args:
+      keys: (N,) or (N, n_cols) integer/uint arrays (bitcast to uint32;
+        the dataframe path pre-normalizes other dtypes via
+        ``partition.u32_normalize`` so the kernel hash equals
+        ``partition.hash_columns`` bit-for-bit).
+      num_partitions: P.
+      block: pallas grid block rows (default from
+        ``cost_model.kernel_params``). N is padded up to a block multiple
+        internally; the histogram is corrected for the pad rows, so any N
+        is accepted.
+      force: pin "pallas" | "interpret" | "jnp"/"xla" (default: registry
+        dispatch).
+      with_hist: False skips the (block x P) one-hot histogram work in
+        the kernel and returns ``hist=None`` — what
+        ``partition.hash_partition_ids`` uses, since destinations are all
+        the shuffle build needs.
+
+    Returns:
+      (dest (N,) int32, hist (P,) int32 | None) — bit-identical across
+      modes.
+    """
+    if keys.ndim == 1:
+        keys = keys[:, None]
+    N = keys.shape[0]
+    mode = force or registry.resolve("hash_partition", N)
+    if mode in ("jnp", "xla") or N == 0:
+        dest, hist = ref.hash_partition_ref(keys, num_partitions)
+        return dest, (hist if with_hist else None)
+    if block is None:
+        block = registry.current_params().block["hash_partition"]
+    blk = min(block, N)
+    pad = (-N) % blk
+    ku = keys.astype(jnp.uint32)
+    if pad:
+        ku = jnp.concatenate([ku, jnp.zeros((pad, ku.shape[1]), ku.dtype)])
+    dest, hist = _hp.hash_partition(ku, num_partitions, block=blk,
+                                    interpret=(mode == "interpret"),
+                                    with_hist=with_hist)
+    if with_hist:
+        hist = jnp.sum(hist, axis=0)
+    if pad:
+        if with_hist:
+            # pad rows are all-zero keys: one deterministic destination
+            hist = hist.at[dest[N]].add(-pad)
+        dest = dest[:N]
+    return dest, hist
+
+
+def segment_reduce_partials(values, seg_ids, *, max_segments=128, block=1024,
+                            op="sum", interpret=False):
+    """Re-export of :func:`segment_reduce.segment_reduce_partials` (the raw
+    combine kernel) so hot paths and tests import one module."""
+    return _sr.segment_reduce_partials(values, seg_ids,
+                                       max_segments=max_segments, block=block,
+                                       op=op, interpret=interpret)
 
 
 def segment_reduce(values, seg_ids, num_segments, *, op="sum",
-                   max_segments=128, block=1024, force: str | None = None):
-    """Segment reduction over sorted seg_ids."""
-    mode = force or ("pallas" if on_tpu() else "xla")
-    if mode in ("pallas", "interpret"):
-        psum, pseg = _sr.segment_reduce_partials(
-            values, seg_ids, max_segments=max_segments, block=block, op=op,
-            interpret=(mode == "interpret"))
-        pseg = jnp.clip(pseg, 0, num_segments)  # ids past the end -> bucket
+                   max_segments: int | None = None, block: int | None = None,
+                   force: str | None = None):
+    """Segment reduction over sorted seg_ids: combine kernel + jnp merge.
+
+    The groupby hot path (``local_ops.local_groupby``) calls this with
+    *dense contiguous* segment ids, for which the default sizing
+    ``max_segments = block`` makes the kernel path exact for any input
+    (a block of ``block`` sorted dense ids spans at most ``block``
+    segments). Values are padded to a block multiple with op-identity
+    fill; partials merge via ``jax.ops.segment_{sum,min,max}`` in the
+    value dtype, so integer results are bit-identical to the direct
+    scatter-add path (float sums reassociate — docs/KERNELS.md).
+
+    Args:
+      values: (N, width) value rows, sorted by ``seg_ids``.
+      seg_ids: (N,) int32 non-decreasing segment ids.
+      num_segments: segments in the output; ids >= num_segments land in a
+        drop bucket (trimmed), matching the callers' overflow-bucket use.
+      op: "sum" | "max" | "min".
+      max_segments / block: kernel sizing (defaults:
+        ``cost_model.kernel_params`` block; max_segments = block).
+      force: pin a mode; default dispatches via the registry.
+
+    Returns:
+      (num_segments, width) array in the value dtype.
+    """
+    N, width = values.shape
+    mode = force or registry.resolve("segment_reduce", N, values.dtype)
+    if mode in ("jnp", "xla") or N == 0:
+        return ref.segment_reduce_ref(values, seg_ids, num_segments, op=op)
+    if block is None:
+        block = registry.current_params().block["segment_reduce"]
+    blk = min(block, N)
+    if max_segments is None:
+        max_segments = blk
+    pad = (-N) % blk
+    if pad:
         if op == "sum":
-            out = jax.ops.segment_sum(psum, pseg, num_segments=num_segments + 1)
-        elif op == "max":
-            out = jax.ops.segment_max(psum, pseg, num_segments=num_segments + 1)
+            fill = jnp.zeros((), values.dtype)
+        elif op == "min":
+            fill = _sr._hi_sentinel(values.dtype)
         else:
-            out = jax.ops.segment_min(psum, pseg, num_segments=num_segments + 1)
-        return out[:num_segments]
-    return ref.segment_reduce_ref(values, seg_ids, num_segments, op=op)
+            fill = _sr._lo_sentinel(values.dtype)
+        values = jnp.concatenate(
+            [values, jnp.full((pad, width), fill, values.dtype)])
+        # pad ids with num_segments: keeps the sort order and lands in the
+        # drop bucket below
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.full((pad,), num_segments, jnp.int32)])
+    psum, pseg = _sr.segment_reduce_partials(
+        values, seg_ids, max_segments=max_segments, block=blk, op=op,
+        interpret=(mode == "interpret"))
+    pseg = jnp.clip(pseg, 0, num_segments)  # ids past the end -> drop bucket
+    if op == "sum":
+        out = jax.ops.segment_sum(psum, pseg, num_segments=num_segments + 1)
+    elif op == "max":
+        out = jax.ops.segment_max(psum, pseg, num_segments=num_segments + 1)
+    else:
+        out = jax.ops.segment_min(psum, pseg, num_segments=num_segments + 1)
+    return out[:num_segments]

@@ -1,4 +1,11 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel.
+
+The model-layer kernels (flash attention, SSD scan) are compared against
+these with ``allclose``; the dataframe kernels (``hash_partition_ref``,
+``segment_reduce_ref``) are also the *dispatch fallbacks* — the registry's
+"jnp" mode — so they must be (and are property-tested to be) bit-identical
+to the Pallas path wherever the operation is associative (integer hashing
+and sums, min/max in every dtype)."""
 
 from __future__ import annotations
 
@@ -45,7 +52,11 @@ def ssd_scan_ref(x, dt, A, B, C, D, *, chunk=128):
 
 
 def hash_partition_ref(keys, num_partitions):
-    """Must match partition.hash32/hash_columns bit-for-bit."""
+    """Destination ids + histogram from the lowbias32 hash chain.
+
+    Must match ``partition.hash32``/``hash_columns`` bit-for-bit: callers
+    pass pre-normalized uint32 key columns (``partition.u32_normalize``
+    handles 64-bit folding / bool / float bitcasting)."""
     if keys.ndim == 1:
         keys = keys[:, None]
     h = jnp.zeros((keys.shape[0],), jnp.uint32)
@@ -63,11 +74,15 @@ def hash_partition_ref(keys, num_partitions):
 
 
 def segment_reduce_ref(values, seg_ids, num_segments, op="sum"):
-    v = values.astype(jnp.float32)
+    """Dtype-preserving direct segment reduction (scatter-add/min/max).
+
+    This is the "jnp" dispatch path of ``ops.segment_reduce`` and the
+    semantics the kernel path must reproduce: integer ops are exact (wrap
+    like the kernel's integer matmul), min/max exact in every dtype."""
     if op == "sum":
-        return jax.ops.segment_sum(v, seg_ids, num_segments=num_segments)
+        return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
     if op == "max":
-        return jax.ops.segment_max(v, seg_ids, num_segments=num_segments)
+        return jax.ops.segment_max(values, seg_ids, num_segments=num_segments)
     if op == "min":
-        return jax.ops.segment_min(v, seg_ids, num_segments=num_segments)
+        return jax.ops.segment_min(values, seg_ids, num_segments=num_segments)
     raise ValueError(op)

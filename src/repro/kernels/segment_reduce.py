@@ -8,9 +8,18 @@ Cross-block merging of partials (cheap: nb x max_segments rows) stays in
 jnp (ops.segment_sum), mirroring the paper's combine -> shuffle -> reduce
 split where the combine output is small (O(n*C)).
 
-Precondition: every block spans <= max_segments distinct segments (callers
-size max_segments from the sampled cardinality, paper §5.4.1; ops.py
-verifies and falls back to the jnp path otherwise).
+Partials are computed **in the value dtype**: integer sums use an integer
+one-hot matmul (exact, wraps like ``segment_sum``), floats accumulate in
+their own dtype. That makes the kernel path bit-identical to the jnp
+scatter-add path for every associative case (all integer ops, float
+min/max); float sums are subject to the usual reassociation caveat
+(docs/KERNELS.md).
+
+Precondition: every block spans <= max_segments distinct segments. The
+dataframe hot path (``local_ops.local_groupby``) passes *dense contiguous*
+group ids, which span <= block per block by construction, so it sizes
+``max_segments = block``; other callers size max_segments from the sampled
+cardinality (paper §5.4.1).
 """
 
 from __future__ import annotations
@@ -23,22 +32,31 @@ from jax.experimental import pallas as pl
 
 __all__ = ["segment_reduce_partials"]
 
+# the same identity sentinels the jnp operator paths mask with — one
+# definition (core.dataframe) so kernel/jnp bit-parity cannot drift
+from ..core.dataframe import max_sentinel as _hi_sentinel  # noqa: E402
+from ..core.dataframe import min_sentinel as _lo_sentinel  # noqa: E402
+
 
 def _kernel(vals_ref, segs_ref, psum_ref, pseg_ref, *, block, width, max_segments, op):
-    vals = vals_ref[...].astype(jnp.float32)   # (block, width)
+    vals = vals_ref[...]                       # (block, width), value dtype
     segs = segs_ref[...][:, 0]                 # (block,) int32, sorted
     base = segs[0]
     local = segs - base                        # block-local dense ids
     local = jnp.clip(local, 0, max_segments - 1)
     sid = jax.lax.broadcasted_iota(jnp.int32, (block, max_segments), 1)
-    onehot = (local[:, None] == sid).astype(jnp.float32)  # (block, maxseg)
+    onehot = local[:, None] == sid             # (block, maxseg) bool
     if op == "sum":
-        out = jax.lax.dot_general(onehot, vals, (((0,), (0,)), ((), ())))
+        out = jax.lax.dot_general(onehot.astype(vals.dtype), vals,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=vals.dtype)
     elif op == "max":
-        big = jnp.where(onehot[..., None] > 0, vals[:, None, :], -jnp.inf)
+        big = jnp.where(onehot[..., None], vals[:, None, :],
+                        _lo_sentinel(vals.dtype))
         out = jnp.max(big, axis=0)
     elif op == "min":
-        big = jnp.where(onehot[..., None] > 0, vals[:, None, :], jnp.inf)
+        big = jnp.where(onehot[..., None], vals[:, None, :],
+                        _hi_sentinel(vals.dtype))
         out = jnp.min(big, axis=0)
     else:
         raise ValueError(op)
@@ -55,10 +73,13 @@ def segment_reduce_partials(
     op: str = "sum",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (partials (nb*max_segments, width) f32,
+    """Block-local segment partials: the Pallas combine kernel.
+
+    Returns (partials (nb*max_segments, width) in the value dtype,
     partial_seg_ids (nb*max_segments,) int32). Partials for segment ids the
-    block does not contain are identity-valued and their ids may collide
-    with real ids only on identity values — safe for sum/max/min merging."""
+    block does not contain are identity-valued (0 for sum, +/-sentinel for
+    min/max) and their ids may collide with real ids only on identity
+    values — safe for sum/max/min merging."""
     N, width = values.shape
     assert N % block == 0, (N, block)
     nb = N // block
@@ -77,7 +98,7 @@ def segment_reduce_partials(
             pl.BlockSpec((max_segments, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nb * max_segments, width), jnp.float32),
+            jax.ShapeDtypeStruct((nb * max_segments, width), values.dtype),
             jax.ShapeDtypeStruct((nb * max_segments, 1), jnp.int32),
         ],
         interpret=interpret,

@@ -100,10 +100,16 @@ def optimized_plan(root: Node, ctx: DDFContext, src_rows: Mapping,
 
     ``level``: "all" runs every rewrite pass; "plan-only" runs just the
     cost-model shuffle planning (for A/B-ing the optimizer; execution always
-    needs concrete quotas/capacities).
+    needs concrete quotas/capacities). The cache key includes the kernel
+    dispatch signature (like ``cached_op``'s compiled-op keys) so plans —
+    and anything keyed off them downstream — never alias across
+    ``repro.kernels.set_backend`` flips.
     """
+    from ..kernels import registry as _kernel_registry
+
     key = (ctx.nworkers, ctx.axes, ctx.fabric, level, root,
-           tuple(sorted(src_rows.items())))
+           tuple(sorted(src_rows.items())),
+           _kernel_registry.dispatch_signature())
     plan = _PLAN_CACHE.get(key)
     if plan is None:
         params = cost_model.params_for_fabric(ctx.fabric)

@@ -247,7 +247,14 @@ class _Runner:
         self.root = root
         caps = [n.capacity for n in walk(root) if isinstance(n, Scan)]
         self.nominal_batch_rows = (max(caps) * self.P) if caps else None
-        self.info: dict = {"batches": 0}
+        # the kernel backend override threads through unchanged: every
+        # per-batch program goes through cached_op, whose keys carry the
+        # dispatch signature — recorded here so run info shows which
+        # backend the stream executed under.
+        from ..kernels import registry as _kernel_registry
+
+        self.info: dict = {"batches": 0,
+                           "kernel_backend": _kernel_registry.get_backend()}
 
     # -- info bookkeeping ------------------------------------------------------
     def _fold_aux(self, aux_list: list) -> None:
