@@ -16,6 +16,8 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
                                     legacy callable path, eager + lazy)
   ISSUE 5  -> bench_kernels        (Pallas dataframe kernels vs jnp hot
                                     paths: timings, parity, dispatch audit)
+  ISSUE 6  -> bench_recovery       (streaming checkpoint overhead at the
+                                    default cadence + kill/resume latency)
 """
 
 import os
@@ -33,6 +35,7 @@ BENCHES = [
     "benchmarks.bench_stream",
     "benchmarks.bench_expr",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_recovery",
 ]
 
 

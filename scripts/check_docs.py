@@ -18,7 +18,12 @@ Fails (exit 1) if:
      ``alias``), or
   6. ``docs/KERNELS.md`` is missing, or does not mention every
      ``repro.kernels`` export (plus the cost-model entry point
-     ``kernel_params`` and the env override ``REPRO_KERNEL_BACKEND``).
+     ``kernel_params`` and the env override ``REPRO_KERNEL_BACKEND``), or
+  7. ``docs/FAULT_TOLERANCE.md`` is missing, or does not mention every
+     ``repro.testing`` export, the stream checkpoint/recovery API
+     (``StreamCheckpoint``, ``RetryPolicy``, ``classify_error``, ...),
+     every registered fault site, and the runner's checkpoint knobs
+     (``checkpoint_dir`` / ``checkpoint_every`` / ``resume``).
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -53,6 +58,11 @@ CORE_MODULES = [
     "repro.stream.scan",
     "repro.stream.runner",
     "repro.data.dataset",
+    # fault tolerance: checkpoint/resume + retry + fault injection (ISSUE 6)
+    "repro.stream.checkpoint",
+    "repro.stream.recovery",
+    "repro.testing",
+    "repro.testing.faults",
     # columnar expression API (ISSUE 4)
     "repro.expr",
     "repro.expr.tree",
@@ -133,6 +143,23 @@ def missing_streaming_docs() -> list:
                                     "collect_stream"])
 
 
+def missing_fault_tolerance_docs() -> list:
+    """Return problems with docs/FAULT_TOLERANCE.md coverage of the
+    fault-tolerance surface: the testing harness exports, the stream
+    checkpoint/recovery API, every registered fault site, and the runner's
+    checkpoint knobs."""
+    import repro.testing as testing_pkg
+    from repro.testing.faults import FAULT_SITES
+
+    symbols = (list(testing_pkg.__all__)
+               + ["StreamCheckpoint", "RetryPolicy", "call_with_retry",
+                  "classify_error", "RETRYABLE_EXCEPTIONS",
+                  "checkpoint_dir", "checkpoint_every", "resume",
+                  "max_retries", "REPRO_CHAOS_SEED"]
+               + list(FAULT_SITES))
+    return missing_doc_mentions("docs/FAULT_TOLERANCE.md", symbols)
+
+
 def missing_expression_docs() -> list:
     """Return problems with docs/EXPRESSIONS.md coverage of repro.expr."""
     import repro.expr as expr_pkg
@@ -174,6 +201,11 @@ def main() -> int:
         print("Streaming documentation problems:")
         for f in stream_failures:
             print(f"  - {f}")
+    fault_failures = missing_fault_tolerance_docs()
+    if fault_failures:
+        print("Fault-tolerance documentation problems:")
+        for f in fault_failures:
+            print(f"  - {f}")
     expr_failures = missing_expression_docs()
     if expr_failures:
         print("Expression documentation problems:")
@@ -185,11 +217,11 @@ def main() -> int:
         for f in kernel_failures:
             print(f"  - {f}")
     if failures or doc_failures or lazy_failures or stream_failures \
-            or expr_failures or kernel_failures:
+            or fault_failures or expr_failures or kernel_failures:
         return 1
-    print("check_docs: all exported core+plan+stream+expr+kernel symbols "
-          "documented; docs cover every pattern, node type, rewrite pass, "
-          "streaming, expression and kernel export")
+    print("check_docs: all exported core+plan+stream+expr+kernel+testing "
+          "symbols documented; docs cover every pattern, node type, rewrite "
+          "pass, streaming, fault-tolerance, expression and kernel export")
     return 0
 
 

@@ -151,6 +151,38 @@ class DatasetWriter:
     def rows_written(self) -> int:
         return int(sum(r for _, r in self._chunks)) + self._buffered
 
+    def state(self) -> tuple[tuple, dict]:
+        """Crash-consistent snapshot: ``(flushed chunks, buffered rows)``.
+
+        The flushed chunks are already durable on disk; the buffered
+        remainder (always < ``chunk_rows`` — append flushes eagerly) is
+        returned as a column dict for the caller to persist. Together with
+        the directory/schema this is everything :meth:`resume` needs."""
+        if self._buffers:
+            buffered = {n: np.concatenate([b[n] for b in self._buffers])
+                        for n, _, _ in self._schema}
+        else:
+            buffered = {}
+        return tuple(self._chunks), buffered
+
+    @classmethod
+    def resume(cls, directory: str, schema, chunks,
+               buffered: Mapping[str, np.ndarray] | None = None,
+               chunk_rows: int = DEFAULT_CHUNK_ROWS,
+               compress: bool = True) -> "DatasetWriter":
+        """Rebuild a writer from a :meth:`state` snapshot.
+
+        ``chunks`` are trusted as-is (their files are on disk); chunk files
+        written *after* the snapshot are simply overwritten by index as the
+        resumed stream re-appends, and never referenced by the final
+        manifest — torn post-snapshot writes cannot corrupt the dataset."""
+        w = cls(directory, schema=schema, chunk_rows=chunk_rows,
+                compress=compress)
+        w._chunks = [(f, int(r)) for f, r in chunks]
+        if buffered and len(next(iter(buffered.values()))):
+            w.append(buffered)
+        return w
+
     def append(self, columns: Mapping[str, np.ndarray]) -> None:
         """Append a batch of rows (same-length arrays keyed by name)."""
         if self._closed:

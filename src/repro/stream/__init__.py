@@ -11,14 +11,39 @@ than aggregate device capacity:
   chunk decode of batch *k+1* with device execution of batch *k*
   (double-buffered prefetch), and finalizes non-EP tails via carry-state
   merges (groupby/unique) or host-side spill + merge (sort, scan x scan
-  joins).
+  joins);
+- ``checkpoint`` — ``StreamCheckpoint``, atomic snapshots of the runner's
+  whole per-query state (scan cursor, carry tables, spill manifests) so a
+  killed query resumes mid-stream bit-identically (ISSUE 6 tentpole);
+- ``recovery`` — retryable-vs-fatal error classification
+  (``classify_error``, ``RETRYABLE_EXCEPTIONS``) and the bounded-backoff
+  ``RetryPolicy`` / ``call_with_retry`` used at every runner fault site.
 
 Entry points: ``repro.stream.scan_csv(...)`` / ``scan_dataset(...)``
 returning a ``LazyDDF``; then ``.collect_stream()`` / ``.to_batches()``
 (plain ``.collect()`` on a scan-bearing plan routes here automatically).
+Fault tolerance is opt-in per run via ``checkpoint_dir=`` / ``resume=``;
+see docs/FAULT_TOLERANCE.md.
 """
 
+from .checkpoint import StreamCheckpoint  # noqa: F401
+from .recovery import (  # noqa: F401
+    RETRYABLE_EXCEPTIONS,
+    RetryPolicy,
+    call_with_retry,
+    classify_error,
+)
 from .runner import collect, to_batches  # noqa: F401
 from .scan import scan_csv, scan_dataset  # noqa: F401
 
-__all__ = ["scan_csv", "scan_dataset", "collect", "to_batches"]
+__all__ = [
+    "scan_csv",
+    "scan_dataset",
+    "collect",
+    "to_batches",
+    "StreamCheckpoint",
+    "RetryPolicy",
+    "RETRYABLE_EXCEPTIONS",
+    "call_with_retry",
+    "classify_error",
+]

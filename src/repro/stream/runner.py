@@ -30,18 +30,43 @@ joins) need cross-batch state:
 Plans mixing these compose by staged materialization: the deepest blocking
 node is finalized first, substituted back as an in-memory ``Source``, and
 the rewritten plan streams again until no scans remain.
+
+**Fault tolerance** (docs/FAULT_TOLERANCE.md). Every hot-path unit of work
+passes a named fault site (``repro.testing.faults``) and a bounded-backoff
+retry (``repro.stream.recovery``): ``chunk_decode`` around each batch's
+host decode, ``device_op`` around each compiled device execution,
+``spill_write`` around each spill append, ``checkpoint_publish`` inside
+snapshot publication, and ``prefetch`` in the producer thread (kill-only —
+a dead prefetch thread propagates its error instead of hanging the
+consumer). Retryable failures (injected faults, I/O errors, torn npz
+reads) re-execute in place; fatal errors (``strict_overflow``, schema
+mismatches) propagate immediately.
+
+With ``checkpoint_dir`` set, the runner snapshots its whole per-query
+state — scan cursor, device carry tables, spill-writer manifests,
+partially-joined bucket outputs, folded info counters — every
+``checkpoint_every`` morsels through :class:`~repro.stream.StreamCheckpoint`
+(atomic tmp-dir-rename publish). The execution is decomposed into
+deterministically numbered *stages* (one per blocking materialization /
+final concat), allocated in plan order, so a resumed run (``resume=True``)
+skips completed stages by restoring their materialized outputs, fast-
+forwards to the snapshotted cursor of the in-flight stage, and recomputes
+only the tail — producing output bit-identical to an uninterrupted run.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import queue
+import re
 import shutil
 import tempfile
 import threading
-from typing import Iterator, Mapping
+from typing import Callable, Iterator, Mapping
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,7 +76,12 @@ from ..core.api import DDF, DDFContext
 from ..core.dataframe import Table, concat
 from ..core.local_ops import finalize_groupby, local_groupby, local_unique
 from ..core.partition import default_quota
-from ..data.dataset import DatasetManifest, DatasetWriter, read_rows
+from ..data.dataset import (
+    DatasetManifest,
+    DatasetWriter,
+    normalize_schema,
+    read_rows,
+)
 from ..plan import executor, optimizer
 from ..plan.logical import (
     Fused,
@@ -68,9 +98,13 @@ from ..plan.logical import (
     Source,
     Unique,
     WithColumn,
+    format_plan,
     schema_of,
     walk,
 )
+from ..testing import faults as _faults
+from . import recovery as _recovery
+from .checkpoint import StreamCheckpoint
 
 __all__ = ["collect", "to_batches"]
 
@@ -182,21 +216,29 @@ def _np_hash_columns(host: Mapping[str, np.ndarray], cols) -> np.ndarray:
 
 # -- prefetch (double buffering) -----------------------------------------------
 
+_ITEM, _ERR, _DONE = "item", "err", "done"
+
+
 def _prefetched(gen: Iterator, depth: int = 2) -> Iterator:
     """Run ``gen`` on a background thread with a bounded queue, so host
     decode of the next batch overlaps device execution of the current one.
 
-    Abandoning the iterator early (consumer ``break``/``close``) sets a
-    stop flag the producer polls between puts, so the thread exits instead
-    of blocking forever on a full queue."""
+    Queue traffic is tagged ``(kind, payload)`` tuples, so a decoder
+    exception is an explicit ``_ERR`` item re-raised on the consumer thread
+    (never confused with data), and the ``prefetch`` fault site fires in
+    the producer. The consumer polls with a timeout and checks producer
+    liveness: a prefetch thread that dies without enqueueing anything
+    raises instead of blocking ``q.get()`` forever. Abandoning the
+    iterator early (consumer ``break``/``close``) sets a stop flag the
+    producer polls between puts, so the thread exits instead of blocking
+    forever on a full queue."""
     q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
-    done = object()
     stop = threading.Event()
 
-    def put(item) -> bool:
+    def put(kind, payload) -> bool:
         while not stop.is_set():
             try:
-                q.put(item, timeout=0.1)
+                q.put((kind, payload), timeout=0.1)
                 return True
             except queue.Full:
                 continue
@@ -205,24 +247,163 @@ def _prefetched(gen: Iterator, depth: int = 2) -> Iterator:
     def work():
         try:
             for item in gen:
-                if not put(item):
+                _faults.check("prefetch")
+                if not put(_ITEM, item):
                     return
-            put(done)
+            put(_DONE, None)
         except BaseException as e:  # surfaced on the consumer thread
-            put(e)
+            put(_ERR, e)
 
     t = threading.Thread(target=work, name="repro-stream-prefetch", daemon=True)
     t.start()
     try:
         while True:
-            item = q.get()
-            if item is done:
+            try:
+                kind, payload = q.get(timeout=1.0)
+            except queue.Empty:
+                if not t.is_alive():
+                    raise RuntimeError(
+                        "stream prefetch thread died without yielding a "
+                        "result or an error (see docs/FAULT_TOLERANCE.md)")
+                continue
+            if kind == _DONE:
                 return
-            if isinstance(item, BaseException):
-                raise item
-            yield item
+            if kind == _ERR:
+                raise payload
+            yield payload
     finally:
         stop.set()
+
+
+# -- checkpoint session --------------------------------------------------------
+
+class _CkptSession:
+    """Per-run view of a :class:`StreamCheckpoint` store.
+
+    Tracks completed-stage outputs (restored on resume instead of
+    recomputed), the in-flight stage's snapshot callback, and the periodic
+    publish cadence (every ``every`` morsel ticks). A snapshot is one
+    consistent view: every completed stage's arrays + the active stage's
+    cursor/state + the runner's folded info counters."""
+
+    def __init__(self, runner: "_Runner", store: StreamCheckpoint,
+                 every: int, resume: bool):
+        self.runner = runner
+        self.store = store
+        self.every = max(int(every), 1)
+        self.query_key = runner._query_key()
+        # stage -> {"meta": json-able, "stage_end": int, "arrays": {name: np}}
+        self.completed: dict[int, dict] = {}
+        self.active_stage: int | None = None
+        self.active_meta: dict | None = None
+        self.active_arrays: dict | None = None
+        self.resumed = False
+        self._ticks = 0
+        self._step = 0
+        self._cur_stage: int | None = None
+        self._snapshot_fn: Callable[[], tuple[dict, dict]] | None = None
+        if resume and self.store.latest() is not None:
+            self._restore()
+
+    def _restore(self) -> None:
+        manifest, arrays = self.store.load()
+        if manifest.get("query_key") != self.query_key:
+            raise ValueError(
+                "resume=True but the checkpoint under "
+                f"{self.store.directory!r} belongs to a different query "
+                "(plan / worker count / scanned dataset changed)")
+        self.resumed = True
+        self._step = int(manifest["step"]) + 1
+        self._ticks = int(manifest.get("ticks", 0))
+        for s, entry in manifest.get("completed", {}).items():
+            s = int(s)
+            pre = f"completed/{s}/"
+            self.completed[s] = {
+                "meta": entry["meta"],
+                "stage_end": int(entry["stage_end"]),
+                "arrays": {k[len(pre):]: v for k, v in arrays.items()
+                           if k.startswith(pre)},
+            }
+        if manifest.get("active_stage") is not None:
+            self.active_stage = int(manifest["active_stage"])
+            self.active_meta = manifest.get("active_meta") or {}
+            self.active_arrays = {k[len("active/"):]: v
+                                  for k, v in arrays.items()
+                                  if k.startswith("active/")}
+        self.runner._info_restore(
+            manifest.get("info", {}),
+            {k[len("info/"):]: v for k, v in arrays.items()
+             if k.startswith("info/")})
+
+    def take_active(self, stage: int):
+        """Consume the snapshot's in-flight state if it belongs to
+        ``stage`` (returns ``(meta, arrays)`` once, else None)."""
+        if self.active_stage == stage and self.active_meta is not None:
+            meta, arrays = self.active_meta, self.active_arrays or {}
+            self.active_stage = None
+            self.active_meta = None
+            self.active_arrays = None
+            return meta, arrays
+        return None
+
+    def set_active(self, stage: int, snapshot_fn) -> None:
+        """Register the in-flight stage's state provider:
+        ``snapshot_fn() -> (json-able meta, numpy arrays)``."""
+        self._cur_stage = stage
+        self._snapshot_fn = snapshot_fn
+
+    def complete(self, stage: int, meta: dict, arrays: dict) -> None:
+        """Record a finished stage's output; it rides along the next
+        periodic publish (resume recomputes any unpublished tail)."""
+        self.completed[stage] = {"meta": dict(meta),
+                                 "stage_end": int(self.runner._stage),
+                                 "arrays": dict(arrays)}
+        if self._cur_stage == stage:
+            self._cur_stage = None
+            self._snapshot_fn = None
+
+    def tick(self) -> None:
+        """One morsel of progress; publishes every ``every`` ticks."""
+        self._ticks += 1
+        if self._ticks % self.every == 0:
+            self.publish()
+
+    def publish(self) -> None:
+        meta, active_arrays = (self._snapshot_fn() if self._snapshot_fn
+                               else ({}, {}))
+        info_scalars, info_arrays = self.runner._info_state()
+        arrays: dict[str, np.ndarray] = {}
+        completed_meta = {}
+        for s, entry in self.completed.items():
+            completed_meta[str(s)] = {"meta": entry["meta"],
+                                      "stage_end": entry["stage_end"]}
+            for name, v in entry["arrays"].items():
+                arrays[f"completed/{s}/{name}"] = v
+        for name, v in active_arrays.items():
+            arrays[f"active/{name}"] = v
+        for name, v in info_arrays.items():
+            arrays[f"info/{name}"] = v
+        manifest = {
+            "query_key": self.query_key,
+            "ticks": self._ticks,
+            "completed": completed_meta,
+            "active_stage": self._cur_stage,
+            "active_meta": meta,
+            "info": info_scalars,
+        }
+        step = self._step
+        # the checkpoint_publish fault site fires inside store.save (between
+        # staging and the atomic rename), so the retry wraps save directly
+        self.runner._retry_call(
+            "checkpoint_publish",
+            lambda: self.store.save(step, manifest, arrays))
+        self._step += 1
+        self.runner.info["checkpoints"] = int(
+            self.runner.info.get("checkpoints", 0)) + 1
+
+    def finish(self) -> None:
+        """Query succeeded: snapshots and spill are crash artifacts only."""
+        self.store.clear()
 
 
 # -- the runner ---------------------------------------------------------------
@@ -230,7 +411,8 @@ def _prefetched(gen: Iterator, depth: int = 2) -> Iterator:
 class _Runner:
     def __init__(self, lazy, batch_rows=None, prefetch=True,
                  carry_capacity=None, spill_dir=None, spill_compress=False,
-                 strict_overflow=True):
+                 strict_overflow=True, checkpoint_dir=None, checkpoint_every=4,
+                 resume=False, max_retries=2, retry_backoff_s=0.05):
         self.ctx: DDFContext = lazy._ctx
         self.P = self.ctx.nworkers
         self.params = cost_model.params_for_fabric(self.ctx.fabric)
@@ -255,6 +437,36 @@ class _Runner:
 
         self.info: dict = {"batches": 0,
                            "kernel_backend": _kernel_registry.get_backend()}
+        self.retry = _recovery.RetryPolicy(max_retries=int(max_retries),
+                                           backoff_s=float(retry_backoff_s))
+        self._retry_lock = threading.Lock()
+        self._stage = 0
+        if resume and checkpoint_dir is None:
+            raise ValueError("resume=True requires checkpoint_dir")
+        self.session: _CkptSession | None = None
+        if checkpoint_dir is not None:
+            self.session = _CkptSession(self, StreamCheckpoint(checkpoint_dir),
+                                        checkpoint_every, resume)
+
+    # -- fault sites + retry ---------------------------------------------------
+    def _note_retry(self, site: str, attempt: int, exc: BaseException) -> None:
+        with self._retry_lock:
+            key = f"retries:{site}"
+            self.info[key] = int(self.info.get(key, 0)) + 1
+
+    def _retry_call(self, site: str, fn):
+        """Retry ``fn`` under the site's policy (fault check is inside fn)."""
+        return _recovery.call_with_retry(fn, self.retry, site,
+                                         on_retry=self._note_retry)
+
+    def _guarded(self, site: str, fn):
+        """One unit of work at a named fault site: the injected-fault check
+        fires before each (re-)execution, and retryable failures re-run
+        with bounded backoff."""
+        def unit():
+            _faults.check(site)
+            return fn()
+        return self._retry_call(site, unit)
 
     # -- info bookkeeping ------------------------------------------------------
     def _fold_aux(self, aux_list: list) -> None:
@@ -268,7 +480,8 @@ class _Runner:
                     self.info[k] = v
         if self.strict_overflow:
             bad = {k: int(np.sum(v)) for k, v in self.info.items()
-                   if "overflow" in k and np.sum(v) > 0}
+                   if isinstance(v, np.ndarray) and "overflow" in k
+                   and np.sum(v) > 0}
             if bad:
                 raise RuntimeError(
                     f"streaming run overflowed static buffers: {bad} rows "
@@ -276,6 +489,112 @@ class _Runner:
                     "execution. Pin larger quota/capacity on the offending "
                     "op, lower batch_rows, or pass strict_overflow=False to "
                     "accept eager-style truncation semantics.")
+
+    def _info_state(self) -> tuple[dict, dict]:
+        """Split the info dict into (JSON-able scalars, numpy arrays)."""
+        scalars, arrays = {}, {}
+        for k, v in self.info.items():
+            if isinstance(v, np.ndarray):
+                arrays[k] = v
+            elif isinstance(v, (np.integer, np.floating)):
+                scalars[k] = v.item()
+            else:
+                scalars[k] = v
+        return scalars, arrays
+
+    def _info_restore(self, scalars: dict, arrays: dict) -> None:
+        self.info.update(scalars)
+        self.info.update(arrays)
+
+    # -- checkpoint/stage machinery --------------------------------------------
+    def _query_key(self) -> str:
+        """Identity of the work a checkpoint belongs to: the (pre-optimizer)
+        plan shape, the worker count, and every scanned dataset's schema +
+        chunk list. Resuming under a different key is refused — the cursor
+        would index different data."""
+        # strip object addresses from the rendering (predicate closures
+        # print as `<function ... at 0x...>`) so the key is process-stable
+        text = re.sub(r"0x[0-9a-f]+", "0x", format_plan(self.root))
+        # source/scan ids are process-global counters: renumber them by
+        # first appearance so re-building the same pipeline (or restarting
+        # the process) yields the same key
+        seen: dict[str, int] = {}
+
+        def renum(m):
+            s = m.group(1)
+            if s not in seen:
+                seen[s] = len(seen)
+            return f"#{seen[s]}"
+
+        text = re.sub(r"#(\d+)", renum, text)
+        text = re.sub(r"sid=(\d+)", lambda m: "sid=" + renum(m)[1:], text)
+        h = hashlib.sha256()
+        h.update(text.encode())
+        h.update(f"P={self.P}".encode())
+        done = set()
+        for n in walk(self.root):
+            if isinstance(n, Scan) and n.sid not in done:
+                done.add(n.sid)
+                m = self.scans[n.sid]
+                # capacity: the cursor's meaning depends on the batch size
+                h.update(repr((len(done), int(n.capacity), m.schema,
+                               m.chunks)).encode())
+        return h.hexdigest()
+
+    def _stage_enter(self, kind: str):
+        """Allocate the next stage id (deterministic plan-order numbering).
+
+        Returns ``(stage, completed_entry, active_resume)``: all None when
+        no checkpoint session is active; ``completed_entry`` when this
+        stage already finished in the snapshot (the counter fast-forwards
+        past any child stages via the recorded ``stage_end``);
+        ``active_resume = (meta, arrays)`` when the snapshot died inside
+        this stage."""
+        if self.session is None:
+            return None, None, None
+        i = self._stage
+        self._stage += 1
+        entry = self.session.completed.get(i)
+        if entry is not None:
+            if entry["meta"].get("kind") != kind:
+                raise ValueError(
+                    f"checkpoint stage {i} is a {entry['meta'].get('kind')!r} "
+                    f"stage, expected {kind!r} — snapshot does not match "
+                    "this query")
+            self._stage = int(entry["stage_end"])
+            return i, entry, None
+        return i, None, self.session.take_active(i)
+
+    def _stage_done(self, stage, kind: str, meta: dict, arrays: dict) -> None:
+        if self.session is not None and stage is not None:
+            meta = dict(meta)
+            meta["kind"] = kind
+            self.session.complete(stage, meta, arrays)
+
+    def _tick(self) -> None:
+        if self.session is not None:
+            self.session.tick()
+
+    # -- DDF <-> checkpoint arrays ---------------------------------------------
+    def _ddf_arrays(self, ddf: DDF) -> tuple[dict, dict]:
+        """Faithful snapshot of a DDF: the padded global columns + the
+        per-worker counts, verbatim. (A to_numpy/from_numpy round-trip
+        would re-partition rows contiguously and break worker-local carry
+        merges — hash placement must survive the snapshot.)"""
+        arrays = {"counts": np.asarray(ddf.counts)}
+        for n, v in ddf.columns.items():
+            arrays[f"col/{n}"] = np.asarray(v)
+        return arrays, {"capacity": int(ddf.capacity)}
+
+    def _ddf_from_arrays(self, arrays: Mapping[str, np.ndarray]) -> DDF:
+        sh = self.ctx.sharding()
+        cols = {k[len("col/"):]: jax.device_put(v, sh)
+                for k, v in arrays.items() if k.startswith("col/")}
+        counts = jax.device_put(np.asarray(arrays["counts"], np.int32), sh)
+        return DDF(cols, counts, self.ctx)
+
+    def _restore_ddf(self, entry: dict) -> DDF:
+        return self._ddf_from_arrays(entry["arrays"])
 
     # -- batch iteration over one streamable subtree ---------------------------
     def _prep(self, root: Node):
@@ -296,7 +615,7 @@ class _Runner:
         return plan, scan_opt, man, batch_rows, srcs
 
     def _host_batches(self, man: DatasetManifest, scan: Scan,
-                      batch_rows: int) -> Iterator[dict]:
+                      batch_rows: int, start: int = 0) -> Iterator[tuple]:
         cols = scan.columns
         # expression predicates may reference columns outside the scan's
         # projected output (the optimizer narrows the decode set past them
@@ -313,39 +632,49 @@ class _Runner:
                 read_cols = tuple(sorted(set(cols) | extra))
         total = man.num_rows
         nb = max(-(-total // batch_rows), 1)
-        for k in range(nb):
+        for k in range(start, nb):
             lo, hi = k * batch_rows, min((k + 1) * batch_rows, total)
-            data = read_rows(man, lo, hi, columns=read_cols)
-            for fn in scan.pred_fns:
-                mask = np.asarray(fn(data)).astype(bool)
-                data = {n: v[mask] for n, v in data.items()}
-            if read_cols is not cols:
-                data = {n: data[n] for n in cols}
-            yield data
 
-    def _iter_batches(self, root: Node, prep=None):
-        """Yield (result DDF, aux) per streamed batch of a streamable subtree."""
+            def decode(lo=lo, hi=hi):
+                data = read_rows(man, lo, hi, columns=read_cols)
+                for fn in scan.pred_fns:
+                    mask = np.asarray(fn(data)).astype(bool)
+                    data = {n: v[mask] for n, v in data.items()}
+                if read_cols is not cols:
+                    data = {n: data[n] for n in cols}
+                return data
+
+            yield k, self._guarded("chunk_decode", decode)
+
+    def _iter_batches(self, root: Node, prep=None, start: int = 0):
+        """Yield ``(batch index, result DDF, aux)`` per streamed batch of a
+        streamable subtree (``start`` skips already-folded batches on
+        resume — the scan cursor)."""
         plan, scan_opt, man, batch_rows, srcs = prep or self._prep(root)
-        gen = self._host_batches(man, scan_opt, batch_rows)
+        gen = self._host_batches(man, scan_opt, batch_rows, start=start)
         if self.prefetch:
             gen = _prefetched(gen)
-        for data in gen:
-            bddf = DDF.from_numpy(data, self.ctx, capacity=scan_opt.capacity,
-                                  mode="eager")
-            out, aux = executor.run_planned(
-                plan, self.ctx, {**srcs, scan_opt.sid: bddf})
-            self.info["batches"] += 1
-            yield out, aux
+        for k, data in gen:
+            def run(data=data):
+                bddf = DDF.from_numpy(data, self.ctx,
+                                      capacity=scan_opt.capacity, mode="eager")
+                return executor.run_planned(
+                    plan, self.ctx, {**srcs, scan_opt.sid: bddf})
+
+            out, aux = self._guarded("device_op", run)
+            self.info["batches"] = int(self.info.get("batches", 0)) + 1
+            yield k, out, aux
 
     # -- streamable whole-plan paths -------------------------------------------
-    def _stream_host(self, root: Node) -> Iterator[dict]:
+    def _stream_host(self, root: Node, start: int = 0,
+                     prep=None) -> Iterator[tuple]:
         # aux folds per batch: a strict_overflow violation raises BEFORE the
         # truncated batch is handed out (and early iterator abandon cannot
         # skip the check). The per-batch device sync this implies is free
         # here — to_numpy() syncs on the same results anyway.
-        for out, aux in self._iter_batches(root):
+        for k, out, aux in self._iter_batches(root, prep=prep, start=start):
             self._fold_aux([aux])
-            yield out.to_numpy()
+            yield k, out.to_numpy()
 
     def _from_host(self, host: dict, schema: tuple) -> DDF:
         if not host:
@@ -356,11 +685,38 @@ class _Runner:
         return DDF.from_numpy(host, self.ctx, capacity=cap, mode="eager")
 
     def _stream_concat(self, root: Node) -> DDF:
-        outs = list(self._stream_host(root))
+        stage, entry, resume = self._stage_enter("concat")
+        if entry is not None:
+            return self._restore_ddf(entry)
         schema = schema_of(root)
+        outs: list[dict] = []
+        cursor = {"k": 0}
+        if resume is not None:
+            rmeta, rarr = resume
+            cursor["k"] = int(rmeta["k"])
+            acc = {n: rarr[f"acc/{n}"] for n, _, _ in schema
+                   if f"acc/{n}" in rarr}
+            if acc:
+                outs.append(acc)
+
+        def snap():
+            host = {n: np.concatenate([o[n] for o in outs])
+                    for n, _, _ in schema} if outs else {}
+            return ({"k": cursor["k"]},
+                    {f"acc/{n}": v for n, v in host.items()})
+
+        if stage is not None:
+            self.session.set_active(stage, snap)
+        for k, host in self._stream_host(root, start=cursor["k"]):
+            outs.append(host)
+            cursor["k"] = k + 1
+            self._tick()
         host = {n: np.concatenate([o[n] for o in outs])
                 for n, _, _ in schema} if outs else {}
-        return self._from_host(host, schema)
+        out = self._from_host(host, schema)
+        arrays, meta = self._ddf_arrays(out)
+        self._stage_done(stage, "concat", meta, arrays)
+        return out
 
     # -- carry-state tails ------------------------------------------------------
     def _carry_cap(self, node: Node, scan_total: int) -> int:
@@ -384,22 +740,46 @@ class _Runner:
         ov = jnp.maximum(full.nvalid - cap, 0)
         return Table(cols, jnp.minimum(full.nvalid, cap)), {"overflow_carry": ov}
 
-    def _run_carry(self, B: Node, batch_root: Node, merge_key: tuple, merge):
+    def _run_carry(self, B: Node, batch_root: Node, merge_key: tuple, merge,
+                   stage=None, resume=None):
         """Shared carry-state drive loop: stream batches through the
-        compiled per-batch plan, folding each result into the carry DDF."""
+        compiled per-batch plan, folding each result into the carry DDF.
+        The carry table (padded columns + per-worker counts) plus the scan
+        cursor *is* the whole cross-batch state, so it is exactly what the
+        checkpoint session snapshots."""
         prep = self._prep(batch_root)
         plan = prep[0]
         cap = self._carry_cap(B, prep[2].num_rows)
-        carry = self._empty_carry(schema_of(plan), cap)
-        aux_list = []
-        for out, aux in self._iter_batches(batch_root, prep=prep):
-            aux_list.append(aux)
-            carry, carry_ov = carry._run(merge_key + (cap,), merge(cap), out)
-            aux_list.append({"carry:overflow_carry": carry_ov["overflow_carry"]})
-        self._fold_aux(aux_list)
-        return carry, cap
+        state = {"k": 0, "carry": None}
+        if resume is not None:
+            rmeta, rarr = resume
+            state["k"] = int(rmeta["k"])
+            cap = int(rmeta["cap"])
+            state["carry"] = self._ddf_from_arrays(rarr)
+        else:
+            state["carry"] = self._empty_carry(schema_of(plan), cap)
+
+        def snap():
+            arrays, _ = self._ddf_arrays(state["carry"])
+            return {"k": state["k"], "cap": cap}, arrays
+
+        if stage is not None:
+            self.session.set_active(stage, snap)
+        for k, out, aux in self._iter_batches(batch_root, prep=prep,
+                                              start=state["k"]):
+            carry, carry_ov = state["carry"]._run(merge_key + (cap,),
+                                                  merge(cap), out)
+            state["carry"] = carry
+            self._fold_aux([aux, {"carry:overflow_carry":
+                                  carry_ov["overflow_carry"]}])
+            state["k"] = k + 1
+            self._tick()
+        return state["carry"], cap
 
     def _stream_groupby(self, B: GroupBy) -> DDF:
+        stage, entry, resume = self._stage_enter("groupby")
+        if entry is not None:
+            return self._restore_ddf(entry)
         aggs = {k: v for k, v in B.aggs}
         batch_root = dataclasses.replace(B, emit_partials=True, quota=None,
                                          capacity=None, num_chunks=None)
@@ -415,11 +795,18 @@ class _Runner:
             return fn
 
         carry, cap = self._run_carry(B, batch_root,
-                                     ("stream-gb-merge", by, aggs_t), merge)
-        return carry._run(("stream-gb-fin", aggs_t, cap),
-                          lambda comm, t: finalize_groupby(t, aggs))
+                                     ("stream-gb-merge", by, aggs_t), merge,
+                                     stage=stage, resume=resume)
+        out = carry._run(("stream-gb-fin", aggs_t, cap),
+                         lambda comm, t: finalize_groupby(t, aggs))
+        arrays, meta = self._ddf_arrays(out)
+        self._stage_done(stage, "groupby", meta, arrays)
+        return out
 
     def _stream_unique(self, B: Unique) -> DDF:
+        stage, entry, resume = self._stage_enter("unique")
+        if entry is not None:
+            return self._restore_ddf(entry)
         batch_root = dataclasses.replace(B, quota=None, capacity=None,
                                          num_chunks=None)
         subset = B.subset
@@ -433,16 +820,40 @@ class _Runner:
             return fn
 
         carry, _ = self._run_carry(B, batch_root,
-                                   ("stream-uq-merge", subset), merge)
+                                   ("stream-uq-merge", subset), merge,
+                                   stage=stage, resume=resume)
+        arrays, meta = self._ddf_arrays(carry)
+        self._stage_done(stage, "unique", meta, arrays)
         return carry
 
     # -- spill tails ------------------------------------------------------------
+    def _spill_chunk_rows(self) -> int:
+        return self.nominal_batch_rows or 65536
+
     def _spill_writer(self, schema: tuple) -> DatasetWriter:
         d = tempfile.mkdtemp(prefix="repro-spill-",
                              dir=self.spill_dir)
-        rows = self.nominal_batch_rows or 65536
-        return DatasetWriter(d, schema=schema, chunk_rows=rows,
+        return DatasetWriter(d, schema=schema, chunk_rows=self._spill_chunk_rows(),
                              compress=self.spill_compress)
+
+    def _stage_spill_writer(self, tag: str, schema: tuple,
+                            chunks=None, buffered=None) -> DatasetWriter:
+        """A spill writer whose files live under the checkpoint store's
+        persistent spill root (they must survive a crash); ``chunks`` +
+        ``buffered`` rebuild it from an active-stage snapshot — chunk files
+        written after the snapshot are overwritten by index as the resumed
+        stream re-appends."""
+        d = self.session.store.spill_dir(tag)
+        if chunks is None:
+            return DatasetWriter(d, schema=schema,
+                                 chunk_rows=self._spill_chunk_rows(),
+                                 compress=self.spill_compress)
+        return DatasetWriter.resume(d, schema, chunks, buffered=buffered,
+                                    chunk_rows=self._spill_chunk_rows(),
+                                    compress=self.spill_compress)
+
+    def _spill_append(self, writer: DatasetWriter, host: dict) -> None:
+        self._guarded("spill_write", lambda: writer.append(host))
 
     def _stream_sort(self, B: Sort) -> DDF:
         """Spill the sort's input to disk while streaming, then one stable
@@ -452,15 +863,46 @@ class _Runner:
         becomes a device DDF anyway, so that peak is unavoidable. A k-way
         merge of pre-sorted runs would only change the merge's working set,
         not the result materialization."""
+        stage, entry, resume = self._stage_enter("sort")
+        if entry is not None:
+            return self._restore_ddf(entry)
         prefix = B.child
-        writer = self._spill_writer(schema_of(prefix))
+        schema = schema_of(prefix)
+        cursor = {"k": 0}
+        if stage is not None:
+            if resume is not None:
+                rmeta, rarr = resume
+                cursor["k"] = int(rmeta["k"])
+                chunks = [(f, int(r)) for f, r in rmeta["chunks"]]
+                buffered = {k[len("buf/"):]: v for k, v in rarr.items()
+                            if k.startswith("buf/")}
+                writer = self._stage_spill_writer(f"stage{stage}", schema,
+                                                  chunks=chunks,
+                                                  buffered=buffered)
+            else:
+                writer = self._stage_spill_writer(f"stage{stage}", schema)
+            cleanup = False
+        else:
+            writer = self._spill_writer(schema)
+            cleanup = True
+
+        def snap():
+            chunks, buf = writer.state()
+            return ({"k": cursor["k"], "chunks": [[f, int(r)] for f, r in chunks]},
+                    {f"buf/{n}": v for n, v in buf.items()})
+
+        if stage is not None:
+            self.session.set_active(stage, snap)
         try:
-            for host in self._stream_host(prefix):
-                writer.append(host)
+            for k, host in self._stream_host(prefix, start=cursor["k"]):
+                self._spill_append(writer, host)
+                cursor["k"] = k + 1
+                self._tick()
             man = writer.close()
             host = read_rows(man, 0, man.num_rows)
         finally:
-            shutil.rmtree(writer.directory, ignore_errors=True)
+            if cleanup:
+                shutil.rmtree(writer.directory, ignore_errors=True)
         key = host[B.by]
         if B.descending:
             # the same order-reversing map local_sort uses: exact for ints,
@@ -470,24 +912,71 @@ class _Runner:
                 else np.bitwise_not(key)
         order = np.argsort(key, kind="stable")
         host = {k: v[order] for k, v in host.items()}
-        return self._from_host(host, schema_of(prefix))
+        out = self._from_host(host, schema)
+        arrays, meta = self._ddf_arrays(out)
+        self._stage_done(stage, "sort", meta, arrays)
+        return out
 
     def _spill_buckets(self, side: Node, on: tuple, nb: int):
         """Stream (or eagerly compute) one join side into key-hash buckets."""
         if not _has_scan(side):
             raise AssertionError(
                 "spill join is only reachable with scans on both sides")
+        stage, entry, resume = self._stage_enter("buckets")
         schema = schema_of(side)
-        writers = [self._spill_writer(schema) for _ in range(nb)]
-        for host in self._stream_host(side):
-            if not len(next(iter(host.values()))):
-                continue
-            h = _np_hash_columns(host, on) % np.uint32(nb)
-            for b in range(nb):
-                m = h == b
-                if m.any():
-                    writers[b].append({k: v[m] for k, v in host.items()})
-        return [w.close() for w in writers]
+        norm = normalize_schema(schema)
+        if entry is not None:
+            return [DatasetManifest(d, norm,
+                                    tuple((f, int(r)) for f, r in ch))
+                    for d, ch in zip(entry["meta"]["dirs"],
+                                     entry["meta"]["chunks"])]
+        cursor = {"k": 0}
+        if stage is not None:
+            chunks_by_b = [None] * nb
+            buf_by_b: list = [None] * nb
+            if resume is not None:
+                rmeta, rarr = resume
+                cursor["k"] = int(rmeta["k"])
+                for b in range(nb):
+                    chunks_by_b[b] = [(f, int(r)) for f, r in rmeta["chunks"][b]]
+                    pre = f"b{b}/"
+                    buf = {k[len(pre):]: v for k, v in rarr.items()
+                           if k.startswith(pre)}
+                    buf_by_b[b] = buf or None
+            writers = [self._stage_spill_writer(f"stage{stage}/b{b}", schema,
+                                                 chunks=chunks_by_b[b],
+                                                 buffered=buf_by_b[b])
+                       for b in range(nb)]
+        else:
+            writers = [self._spill_writer(schema) for _ in range(nb)]
+
+        def snap():
+            metas, arrays = [], {}
+            for b, w in enumerate(writers):
+                chunks, buf = w.state()
+                metas.append([[f, int(r)] for f, r in chunks])
+                for n, v in buf.items():
+                    arrays[f"b{b}/{n}"] = v
+            return {"k": cursor["k"], "chunks": metas}, arrays
+
+        if stage is not None:
+            self.session.set_active(stage, snap)
+        for k, host in self._stream_host(side, start=cursor["k"]):
+            cursor["k"] = k + 1
+            if len(next(iter(host.values()))):
+                h = _np_hash_columns(host, on) % np.uint32(nb)
+                for b in range(nb):
+                    m = h == b
+                    if m.any():
+                        self._spill_append(writers[b],
+                                           {c: v[m] for c, v in host.items()})
+            self._tick()
+        mans = [w.close() for w in writers]
+        self._stage_done(stage, "buckets",
+                         {"dirs": [m.directory for m in mans],
+                          "chunks": [[[f, int(r)] for f, r in m.chunks]
+                                     for m in mans]}, {})
+        return mans
 
     def _stream_join_spill(self, B: Join) -> DDF:
         """Out-of-core join with scans on both sides: hash-bucket spill.
@@ -496,7 +985,12 @@ class _Runner:
         bucket), then bucket pairs are joined on device one at a time —
         neither side's build table ever has to fit device capacity. Output
         order is bucket-major (row-set equal to the eager join; a downstream
-        sort/groupby canonicalizes it)."""
+        sort/groupby canonicalizes it). Under a checkpoint session the two
+        bucket spills and the bucket-join loop are three separate stages —
+        the join loop's snapshot carries the bucket cursor, the adaptive
+        ``cap_out``/``quota`` (their growth is deterministic, so a resumed
+        run continues with the same buffer sizes), and the concatenated
+        output accumulated so far."""
         on = B.on
         per_side_rows = []
         for side in (B.left, B.right):
@@ -506,15 +1000,41 @@ class _Runner:
         nb = max(-(-2 * max(per_side_rows) // br), 1)
         mans_l = self._spill_buckets(B.left, on, nb)
         mans_r = self._spill_buckets(B.right, on, nb)
+        stage, entry, resume = self._stage_enter("bucketjoin")
+        if entry is not None:
+            return self._restore_ddf(entry)
+        schema = schema_of(B)
+        cap_l = max(max((m.num_rows for m in mans_l), default=0) // self.P + 1, 1)
+        cap_r = max(max((m.num_rows for m in mans_r), default=0) // self.P + 1, 1)
+        sid_l, sid_r = next(_SIDS), next(_SIDS)
+        state = {"j": 0,
+                 "quota": int(B.quota or default_quota(max(cap_l, cap_r),
+                                                       self.P)),
+                 "cap_out": int(B.capacity or 2 * max(cap_l, cap_r))}
+        outs: list[dict] = []
+        if resume is not None:
+            rmeta, rarr = resume
+            state.update(j=int(rmeta["j"]), quota=int(rmeta["quota"]),
+                         cap_out=int(rmeta["cap_out"]))
+            acc = {n: rarr[f"acc/{n}"] for n, _, _ in schema
+                   if f"acc/{n}" in rarr}
+            if acc:
+                outs.append(acc)
+
+        def snap():
+            host = {n: np.concatenate([o[n] for o in outs])
+                    for n, _, _ in schema} if outs else {}
+            return ({"j": state["j"], "quota": state["quota"],
+                     "cap_out": state["cap_out"]},
+                    {f"acc/{n}": v for n, v in host.items()})
+
+        if stage is not None:
+            self.session.set_active(stage, snap)
         try:
-            cap_l = max(max((m.num_rows for m in mans_l), default=0) // self.P + 1, 1)
-            cap_r = max(max((m.num_rows for m in mans_r), default=0) // self.P + 1, 1)
-            sid_l, sid_r = next(_SIDS), next(_SIDS)
-            quota = B.quota or default_quota(max(cap_l, cap_r), self.P)
-            cap_out = B.capacity or 2 * max(cap_l, cap_r)
-            outs = []
-            for ml, mr in zip(mans_l, mans_r):
+            for j in range(state["j"], nb):
+                ml, mr = mans_l[j], mans_r[j]
                 if ml.num_rows == 0 or mr.num_rows == 0:
+                    state["j"] = j + 1
                     continue
                 dl = DDF.from_numpy(read_rows(ml, 0, ml.num_rows), self.ctx,
                                     capacity=cap_l, mode="eager")
@@ -526,11 +1046,16 @@ class _Runner:
                     # pairs (capacity) or skewed keys (quota) overflow
                     jroot = Join(Source(sid_l, mans_l[0].schema, cap_l),
                                  Source(sid_r, mans_r[0].schema, cap_r),
-                                 on, strategy="auto", quota=quota,
-                                 capacity=cap_out)
-                    out, aux = executor.execute(
-                        jroot, self.ctx, {sid_l: dl, sid_r: dr},
-                        src_rows={sid_l: cap_l * self.P, sid_r: cap_r * self.P})
+                                 on, strategy="auto", quota=state["quota"],
+                                 capacity=state["cap_out"])
+
+                    def run(jroot=jroot, dl=dl, dr=dr):
+                        return executor.execute(
+                            jroot, self.ctx, {sid_l: dl, sid_r: dr},
+                            src_rows={sid_l: cap_l * self.P,
+                                      sid_r: cap_r * self.P})
+
+                    out, aux = self._guarded("device_op", run)
                     ovj = sum(int(np.sum(v)) for k, v in aux.items()
                               if "overflow_join" in k)
                     ovs = sum(int(np.sum(v)) for k, v in aux.items()
@@ -539,17 +1064,22 @@ class _Runner:
                         self._fold_aux([aux])
                         break
                     if ovj:
-                        cap_out *= 2
+                        state["cap_out"] *= 2
                     if ovs:
-                        quota *= 2
+                        state["quota"] *= 2
                 outs.append(out.to_numpy())
+                state["j"] = j + 1
+                self._tick()
         finally:
-            for m in mans_l + mans_r:
-                shutil.rmtree(m.directory, ignore_errors=True)
-        schema = schema_of(B)
+            if self.session is None:
+                for m in mans_l + mans_r:
+                    shutil.rmtree(m.directory, ignore_errors=True)
         host = {n: np.concatenate([o[n] for o in outs])
                 for n, _, _ in schema} if outs else {}
-        return self._from_host(host, schema)
+        out = self._from_host(host, schema)
+        arrays, meta = self._ddf_arrays(out)
+        self._stage_done(stage, "bucketjoin", meta, arrays)
+        return out
 
     # -- staged materialization --------------------------------------------------
     def _collect_scanfree(self, root: Node):
@@ -557,7 +1087,8 @@ class _Runner:
                 if isinstance(n, Source)}
         if isinstance(root, Source):
             return srcs[root.sid], {}
-        return executor.execute(root, self.ctx, srcs)
+        return self._guarded("device_op",
+                             lambda: executor.execute(root, self.ctx, srcs))
 
     def _materialize_blocking(self, B: Node) -> DDF:
         if isinstance(B, GroupBy) and _streamable(B.child) and _has_scan(B.child):
@@ -570,7 +1101,12 @@ class _Runner:
                 and _streamable(B.left) and _streamable(B.right)):
             return self._stream_join_spill(B)
         # generic fallback: materialize scan-bearing children individually,
-        # then run the (now scan-free) blocking op eagerly
+        # then run the (now scan-free) blocking op eagerly. The wrapping
+        # stage completes after its recursive child stages, so its recorded
+        # stage_end fast-forwards the counter past them on resume.
+        stage, entry, _ = self._stage_enter("blocking")
+        if entry is not None:
+            return self._restore_ddf(entry)
         kids = []
         for c in B.children:
             if _has_scan(c):
@@ -582,6 +1118,8 @@ class _Runner:
                 kids.append(c)
         out, aux = self._collect_scanfree(B.with_children(kids))
         self._fold_aux([aux])
+        arrays, meta = self._ddf_arrays(out)
+        self._stage_done(stage, "blocking", meta, arrays)
         return out
 
     def _drain_blocking(self, root: Node) -> Node:
@@ -609,12 +1147,26 @@ class _Runner:
     # -- public entry points -----------------------------------------------------
     def run(self):
         out = self._collect_node(self.root)
+        if self.session is not None:
+            self.session.finish()
         return out, dict(self.info)
 
     def batches(self) -> Iterator[dict]:
         root = self._drain_blocking(self.root)
         if _has_scan(root):
-            yield from self._stream_host(root)
+            stage, entry, resume = self._stage_enter("emit")
+            if entry is None:
+                cursor = {"k": int(resume[0]["k"]) if resume is not None else 0}
+                if stage is not None:
+                    self.session.set_active(
+                        stage, lambda: ({"k": cursor["k"]}, {}))
+                for k, host in self._stream_host(root, start=cursor["k"]):
+                    yield host
+                    cursor["k"] = k + 1
+                    self._tick()
+                self._stage_done(stage, "emit", {}, {})
+            if self.session is not None:
+                self.session.finish()
             return
         out, aux = self._collect_scanfree(root)
         self._fold_aux([aux])
@@ -623,11 +1175,16 @@ class _Runner:
         step = self.nominal_batch_rows or max(total, 1)
         for lo in range(0, max(total, 1), step):
             yield {k: v[lo:lo + step] for k, v in host.items()}
+        if self.session is not None:
+            self.session.finish()
 
 
 def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,
             carry_capacity: int | None = None, spill_dir: str | None = None,
-            spill_compress: bool = False, strict_overflow: bool = True):
+            spill_compress: bool = False, strict_overflow: bool = True,
+            checkpoint_dir: str | None = None, checkpoint_every: int = 4,
+            resume: bool = False, max_retries: int = 2,
+            retry_backoff_s: float = 0.05):
     """Run a scan-bearing lazy plan through the streaming engine.
 
     Args:
@@ -641,29 +1198,55 @@ def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,
       spill_compress: compress spilled chunks (saves disk, costs CPU).
       strict_overflow: raise when any static shuffle/join buffer overflowed
         (rows dropped) instead of silently diverging from eager results.
+      checkpoint_dir: enable fault-tolerant execution — snapshot the full
+        per-query state (scan cursor, carry tables, spill manifests, info
+        counters) into this directory every ``checkpoint_every`` morsels
+        via an atomic publish; cleared on success.
+      checkpoint_every: morsels between snapshots (lower = less recompute
+        after a crash, more publish overhead).
+      resume: restart from the newest snapshot under ``checkpoint_dir``
+        (falls back to a fresh run when none exists; raises ``ValueError``
+        if the snapshot belongs to a different query). The resumed result
+        is bit-identical to an uninterrupted run.
+      max_retries: in-place re-executions per failed unit of work (morsel
+        decode / device op / spill append / checkpoint publish) before the
+        error propagates; only retryable errors are retried (see
+        ``repro.stream.recovery.RETRYABLE_EXCEPTIONS``).
+      retry_backoff_s: base of the bounded exponential retry backoff.
 
     Returns:
       ``(result DDF, info dict)`` — info carries ``batches`` plus summed
-      per-batch overflow counters.
+      per-batch overflow counters, ``retries:<site>`` counts, and
+      ``checkpoints`` published.
     """
     r = _Runner(lazy, batch_rows=batch_rows, prefetch=prefetch,
                 carry_capacity=carry_capacity, spill_dir=spill_dir,
-                spill_compress=spill_compress, strict_overflow=strict_overflow)
+                spill_compress=spill_compress, strict_overflow=strict_overflow,
+                checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+                resume=resume, max_retries=max_retries,
+                retry_backoff_s=retry_backoff_s)
     return r.run()
 
 
 def to_batches(lazy, batch_rows: int | None = None, prefetch: bool = True,
                carry_capacity: int | None = None, spill_dir: str | None = None,
-               spill_compress: bool = False,
-               strict_overflow: bool = True) -> Iterator[dict]:
+               spill_compress: bool = False, strict_overflow: bool = True,
+               checkpoint_dir: str | None = None, checkpoint_every: int = 4,
+               resume: bool = False, max_retries: int = 2,
+               retry_backoff_s: float = 0.05) -> Iterator[dict]:
     """Stream a lazy plan's result as host column-dict batches.
 
     Fully-streamable plans yield one dict per morsel without materializing
     the whole result (true out-of-core iteration); plans needing carry or
     spill finalization finalize first and yield ``batch_rows``-sized slices
-    of the final table. Args as :func:`collect`.
+    of the final table. Args as :func:`collect`; with ``resume=True`` the
+    iterator re-yields from the last snapshotted cursor (batches already
+    consumed after that snapshot are yielded again).
     """
     r = _Runner(lazy, batch_rows=batch_rows, prefetch=prefetch,
                 carry_capacity=carry_capacity, spill_dir=spill_dir,
-                spill_compress=spill_compress, strict_overflow=strict_overflow)
+                spill_compress=spill_compress, strict_overflow=strict_overflow,
+                checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+                resume=resume, max_retries=max_retries,
+                retry_backoff_s=retry_backoff_s)
     yield from r.batches()

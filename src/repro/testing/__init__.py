@@ -1,0 +1,21 @@
+"""Deterministic testing utilities for the streaming engine.
+
+``repro.testing.faults`` is the seeded fault-injection harness: named
+fault sites threaded through the streaming runner, a :class:`FaultPlan`
+that fails specific invocations deterministically from a seed, and the
+``fault_scope`` context manager chaos tests use to install one. See
+``docs/FAULT_TOLERANCE.md`` for the fault-site registry and the
+determinism contract.
+"""
+
+from .faults import (  # noqa: F401
+    FAULT_SITES,
+    FaultPlan,
+    InjectedFault,
+    active_plan,
+    check,
+    fault_scope,
+)
+
+__all__ = ["FAULT_SITES", "FaultPlan", "InjectedFault", "active_plan",
+           "check", "fault_scope"]

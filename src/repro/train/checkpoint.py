@@ -20,13 +20,53 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import tempfile
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "publish_dir", "list_steps"]
+
+
+def publish_dir(tmp: str, final: str) -> str:
+    """Atomically publish a staged directory: replace ``final`` with ``tmp``
+    via rename. A crash before the rename leaves only a ``*.tmp_*`` dir
+    (ignored and cleaned by :func:`list_steps`); a crash after it leaves the
+    complete new version. Shared by trainer checkpoints and the streaming
+    engine's ``StreamCheckpoint``."""
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def list_steps(directory: str, prefix: str = "step_",
+               clean_stale: bool = True) -> list[int]:
+    """Valid checkpoint step numbers under ``directory``, ascending.
+
+    A subdirectory counts only when it is ``<prefix><int>`` **and** holds a
+    ``manifest.json`` — a partial dir from a crashed non-atomic writer must
+    never be selected for restore. Leftover ``*.tmp_*`` staging dirs from a
+    crash mid-publish are ignored and (by default) deleted."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        path = os.path.join(directory, name)
+        if ".tmp_" in name:
+            if clean_stale and os.path.isdir(path):
+                shutil.rmtree(path, ignore_errors=True)
+            continue
+        if not (name.startswith(prefix) and os.path.isdir(path)):
+            continue
+        try:
+            step = int(name[len(prefix):])
+        except ValueError:
+            continue
+        if not os.path.exists(os.path.join(path, "manifest.json")):
+            continue  # partial dir (no atomic publish): never restorable
+        steps.append(step)
+    return sorted(steps)
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -42,7 +82,9 @@ def save(directory: str, step: int, state, process_index: int = 0) -> str:
     flat = _flatten(state)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + f".tmp_{process_index}"
-    os.makedirs(tmp, exist_ok=True)
+    if os.path.exists(tmp):  # stale staging dir from a crashed save
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
     np.savez(os.path.join(tmp, f"shard_{process_index}.npz"), **arrays)
     manifest = {
@@ -52,25 +94,29 @@ def save(directory: str, step: int, state, process_index: int = 0) -> str:
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic publish
-    return final
+    return publish_dir(tmp, final)
 
 
 def latest_step(directory: str) -> int | None:
-    if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp_0")]
-    return max(steps) if steps else None
+    """Newest restorable step in ``directory`` (None when there is none).
+
+    Robust to crash debris: leftover ``*.tmp_*`` staging dirs from a save
+    interrupted mid-publish are ignored and cleaned, and a partial
+    ``step_*`` dir without a ``manifest.json`` is never selected."""
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, step: int, state_specs, shardings=None, process_index: int = 0):
     """Load into the structure of ``state_specs``; device_put with
     ``shardings`` (same tree) if given — this is the elastic-rescale hook."""
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
+    manifest_path = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest_path):
+        raise FileNotFoundError(
+            f"no restorable checkpoint for step {step} under {directory!r} "
+            f"(valid steps: {list_steps(directory, clean_stale=False)})")
+    with open(manifest_path) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, f"shard_{process_index}.npz"))
 

@@ -45,24 +45,34 @@ def rescale_state(ckpt_dir: str, step: int, state_specs, new_mesh, mode: str = "
 
 class StepGuard:
     """Watchdog: emergency-checkpoint when a step exceeds the straggler
-    threshold (factor x trailing-mean step time)."""
+    threshold (factor x trailing-mean step time).
 
-    def __init__(self, ckpt_dir: str, threshold_factor: float = 3.0, min_history: int = 5):
+    ``time_fn`` injects the clock (tests drive straggler detection with a
+    fake clock; production uses ``time.monotonic``). Emergency saves go
+    through ``checkpoint.save``'s atomic tmp-dir-rename publish, so a
+    straggler that turns into a crash mid-save never corrupts the previous
+    checkpoint; ``last_emergency_step`` records the most recent trigger."""
+
+    def __init__(self, ckpt_dir: str, threshold_factor: float = 3.0,
+                 min_history: int = 5, time_fn: Callable[[], float] = time.monotonic):
         self.ckpt_dir = ckpt_dir
         self.factor = threshold_factor
         self.min_history = min_history
+        self.time_fn = time_fn
         self.history: list[float] = []
         self.emergency_saves = 0
+        self.last_emergency_step: int | None = None
 
     def step(self, step_idx: int, fn: Callable, state, *args):
-        t0 = time.monotonic()
+        t0 = self.time_fn()
         out = fn(state, *args)
         jax.block_until_ready(jax.tree.leaves(out)[0])
-        dt = time.monotonic() - t0
+        dt = self.time_fn() - t0
         if len(self.history) >= self.min_history:
             mean = sum(self.history[-20:]) / len(self.history[-20:])
             if dt > self.factor * mean:
                 checkpoint.save(self.ckpt_dir, step_idx, out[0] if isinstance(out, tuple) else out)
                 self.emergency_saves += 1
+                self.last_emergency_step = step_idx
         self.history.append(dt)
         return out
