@@ -18,6 +18,10 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
                                     paths: timings, parity, dispatch audit)
   ISSUE 6  -> bench_recovery       (streaming checkpoint overhead at the
                                     default cadence + kill/resume latency)
+  ISSUE 7  -> bench_service        (8 concurrent mixed queries through the
+                                    query service vs serial: throughput,
+                                    p50/p95 latency, fairness spread,
+                                    shared-cache hit rates)
 """
 
 import os
@@ -36,6 +40,7 @@ BENCHES = [
     "benchmarks.bench_expr",
     "benchmarks.bench_kernels",
     "benchmarks.bench_recovery",
+    "benchmarks.bench_service",
 ]
 
 

@@ -23,7 +23,10 @@ Fails (exit 1) if:
      ``repro.testing`` export, the stream checkpoint/recovery API
      (``StreamCheckpoint``, ``RetryPolicy``, ``classify_error``, ...),
      every registered fault site, and the runner's checkpoint knobs
-     (``checkpoint_dir`` / ``checkpoint_every`` / ``resume``).
+     (``checkpoint_dir`` / ``checkpoint_every`` / ``resume``), or
+  8. ``docs/SERVICE.md`` is missing, or does not mention every
+     ``repro.service`` export, lifecycle state, scheduling policy, and
+     service knob (``max_running`` / ``memory_budget_bytes`` / ...).
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -72,6 +75,12 @@ CORE_MODULES = [
     "repro.kernels.ops",
     "repro.kernels.ref",
     "repro.kernels.registry",
+    # concurrent query service (ISSUE 7)
+    "repro.service",
+    "repro.service.session",
+    "repro.service.scheduler",
+    "repro.service.admission",
+    "repro.service.cache",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -169,6 +178,21 @@ def missing_expression_docs() -> list:
         list(expr_pkg.__all__) + ["with_column", "alias"])
 
 
+def missing_service_docs() -> list:
+    """Return problems with docs/SERVICE.md coverage of repro.service:
+    every package export, each lifecycle state, both scheduling policies,
+    and the admission/stream knobs of ``QueryService.submit``."""
+    import repro.service as service_pkg
+    from repro.service import POLICIES, QueryState
+
+    symbols = (list(service_pkg.__all__)
+               + list(QueryState.ALL) + list(POLICIES)
+               + ["submit", "cancel", "shutdown", "stats",
+                  "memory_budget_bytes", "max_running", "max_backlog",
+                  "weight", "quantum_s"])
+    return missing_doc_mentions("docs/SERVICE.md", symbols)
+
+
 def missing_kernel_docs() -> list:
     """Return problems with docs/KERNELS.md coverage of repro.kernels."""
     import repro.kernels as kernels_pkg
@@ -216,12 +240,19 @@ def main() -> int:
         print("Kernel documentation problems:")
         for f in kernel_failures:
             print(f"  - {f}")
+    service_failures = missing_service_docs()
+    if service_failures:
+        print("Query-service documentation problems:")
+        for f in service_failures:
+            print(f"  - {f}")
     if failures or doc_failures or lazy_failures or stream_failures \
-            or fault_failures or expr_failures or kernel_failures:
+            or fault_failures or expr_failures or kernel_failures \
+            or service_failures:
         return 1
-    print("check_docs: all exported core+plan+stream+expr+kernel+testing "
-          "symbols documented; docs cover every pattern, node type, rewrite "
-          "pass, streaming, fault-tolerance, expression and kernel export")
+    print("check_docs: all exported core+plan+stream+expr+kernel+testing+"
+          "service symbols documented; docs cover every pattern, node type, "
+          "rewrite pass, streaming, fault-tolerance, expression, kernel and "
+          "service export")
     return 0
 
 

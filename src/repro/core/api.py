@@ -20,6 +20,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import threading
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -47,27 +48,51 @@ class _LRUCache:
     mesh's id was reused; this keys on stable signatures (see
     :func:`mesh_signature`) and evicts the least recently used entry past
     ``maxsize``.
+
+    Thread-safe: concurrent queries multiplexed by ``repro.service`` share
+    the process-wide plan/op caches, so get/put (including the recency
+    reordering and eviction, which mutate the OrderedDict) run under a
+    lock. Hit/miss/eviction counts are tracked for the service's cache
+    telemetry (:meth:`stats`).
     """
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = maxsize
         self._d: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
     def get(self, key):
-        try:
-            self._d.move_to_end(key)
-            return self._d[key]
-        except KeyError:
-            return None
+        with self._lock:
+            try:
+                self._d.move_to_end(key)
+                val = self._d[key]
+            except KeyError:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return val
 
     def put(self, key, value):
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+                self.evictions += 1
+
+    def stats(self) -> dict:
+        """Telemetry snapshot: ``{hits, misses, evictions, size, maxsize}``."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "size": len(self._d),
+                    "maxsize": self.maxsize}
 
     def __len__(self):
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
 
 @functools.lru_cache(maxsize=32)

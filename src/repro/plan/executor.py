@@ -60,9 +60,24 @@ from .logical import (
     walk,
 )
 
-__all__ = ["execute", "run_planned", "optimized_plan", "source_row_counts"]
+__all__ = ["execute", "run_planned", "optimized_plan", "source_row_counts",
+           "cache_stats"]
 
 _PLAN_CACHE = _LRUCache(maxsize=128)
+
+
+def cache_stats() -> dict:
+    """Telemetry snapshot of the two host-side caches.
+
+    ``{"plan": {hits, misses, evictions, size, maxsize},
+       "op": {...}}`` — the optimized-plan cache above and the compiled-op
+    cache shared with the eager API. Counters are cumulative for the
+    process; ``repro.service.CacheManager`` diffs snapshots to attribute
+    hits to a window (e.g. one batch of concurrent queries).
+    """
+    from ..core.api import _OP_CACHE
+
+    return {"plan": _PLAN_CACHE.stats(), "op": _OP_CACHE.stats()}
 
 
 def source_row_counts(sources: Mapping) -> dict:

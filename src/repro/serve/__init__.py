@@ -1,2 +1,23 @@
+"""Serving front door: batched LM inference + concurrent dataframe queries.
+
+Two long-lived entry points live here:
+
+- :class:`ServeEngine` — batched greedy decoding for the model zoo
+  (token-at-a-time prefill, static batch, per-lane correctness for
+  uneven prompt lengths);
+- :class:`QueryService` (re-exported from ``repro.service``) — the
+  concurrent dataframe query service: many lazy/streaming queries
+  multiplexed over one shared mesh at morsel granularity, with admission
+  control, fair scheduling and shared compiled-program caches. See
+  docs/SERVICE.md.
+
+Both follow the same shape: construct once, submit many requests, read
+telemetry, shut down cleanly — the serving layer the ROADMAP's
+"millions of users" direction builds on.
+"""
+
 from .serve_step import make_serve_step, make_prefill  # noqa: F401
 from .engine import ServeEngine  # noqa: F401
+from ..service import QueryService  # noqa: F401
+
+__all__ = ["ServeEngine", "QueryService", "make_serve_step", "make_prefill"]

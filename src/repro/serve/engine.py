@@ -25,32 +25,48 @@ class ServeEngine:
 
     def __post_init__(self):
         self._step = jax.jit(make_serve_step(self.model))
-        self._decode_one = jax.jit(self.model.decode_step)
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32) -> list[list[int]]:
         """Greedy-decode a batch of token prompts (token-at-a-time prefill —
-        uniform across families)."""
+        uniform across families).
+
+        Prompts may have different lengths: each lane feeds its own next
+        token every step — a real prompt token while that lane is still
+        prefilling, its previously generated token afterwards — so a lane's
+        first generated token comes from the logits at its *own* last
+        prompt token, never from another lane's padding, and every lane's
+        output is bit-identical to a solo run of that prompt.
+        """
         B = len(prompts)
+        if any(len(p) == 0 for p in prompts):
+            raise ValueError("every prompt must contain at least one token")
         cfg = self.model.cfg
         state = self.model.init_decode_state(B, self.max_len)
         if cfg.family == "encdec":
             state["enc_out"] = jnp.zeros((B, cfg.enc_positions, cfg.d_model), jnp.bfloat16)
 
-        maxp = max(len(p) for p in prompts)
+        lens = [len(p) for p in prompts]
+        maxp = max(lens)
         toks = np.zeros((B, maxp), np.int32)
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
 
-        # prefill token-at-a-time (correct for every family incl. hybrid)
-        last = None
-        for t in range(maxp):
-            logits, state = self._decode_one(self.params, state, {"token": jnp.asarray(toks[:, t: t + 1])})
-            last = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
         outs = [list(p) for p in prompts]
-        cur = last
-        for _ in range(max_new):
+        ngen = [0] * B
+        feed = toks[:, 0].copy()
+        # one unified loop covers prefill and generation: after the step
+        # that consumed lane i's token at position t, the model's argmax is
+        # lane i's token for position t+1 — a later prompt token (ignored,
+        # the real one is fed) or a generated one (recorded and fed back)
+        for t in range(maxp + max_new - 1):
+            nxt, state = self._step(self.params, state, {"token": jnp.asarray(feed[:, None])})
+            nxt = np.asarray(nxt).reshape(B)
             for i in range(B):
-                outs[i].append(int(cur[i]))
-            cur, state = self._step(self.params, state, {"token": cur[:, None]})
+                if t + 1 < lens[i]:
+                    feed[i] = toks[i, t + 1]
+                else:
+                    if ngen[i] < max_new:
+                        outs[i].append(int(nxt[i]))
+                        ngen[i] += 1
+                    feed[i] = nxt[i]
         return outs

@@ -1,0 +1,199 @@
+"""Admission control: bound how much work shares the mesh at once.
+
+The service cannot let every submitted query start immediately — device
+memory is static (every DDF/scan batch is a fixed-capacity padded table)
+and compiled-program working sets add up. Admission control enforces three
+bounds, in order:
+
+1. **concurrency** — at most ``max_running`` queries hold admission slots;
+2. **memory budget** — the sum of admitted queries' cost-model-estimated
+   working sets (:func:`estimate_query_bytes`) stays under
+   ``memory_budget_bytes``. A single query whose own estimate exceeds the
+   whole budget is still admitted *alone* (otherwise it could never run);
+   the budget throttles co-residency, it is not a hard per-query cap;
+3. **backlog** — queries that don't fit wait in a FIFO backlog of at most
+   ``max_backlog``; past that the service **sheds**: submission fails with
+   :class:`AdmissionError` instead of queueing unboundedly (the overload
+   behavior a front door needs — reject fast, don't collapse).
+
+The memory estimate reuses the streaming cost model's framing: a scan-
+bearing query's resident set is its cost-model-sized morsel (scan
+``capacity * P`` rows at the manifest's ``row_bytes``) inflated by
+``working_set_factor`` for shuffle buffers and operator intermediates
+(matching ``cost_model.choose_batch_rows``), plus its in-memory source
+tables; a scan-free query is its source tables inflated the same way.
+Everything is computed from host-side metadata (capacities, schemas) — no
+device sync on the submission path.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+
+import numpy as np
+
+from ..plan.logical import Scan, walk
+from .session import QuerySession, QueryState
+
+__all__ = [
+    "AdmissionError",
+    "AdmissionController",
+    "estimate_query_bytes",
+]
+
+#: default per-mesh memory budget for co-resident queries (bytes)
+DEFAULT_MEMORY_BUDGET = 256e6
+
+
+class AdmissionError(RuntimeError):
+    """Submission rejected: the admission backlog is full (shed-on-overflow)
+    or the service is shutting down."""
+
+
+def _ddf_row_bytes(columns) -> float:
+    """Bytes per row of an in-memory DDF's schema."""
+    total = 0.0
+    for v in columns.values():
+        total += np.dtype(v.dtype).itemsize * int(np.prod(v.shape[1:], dtype=np.int64))
+    return max(total, 1.0)
+
+
+def estimate_query_bytes(query, working_set_factor: float = 4.0) -> float:
+    """Cost-model working-set estimate for one query, in bytes.
+
+    ``query`` is a ``LazyDDF`` (scan-bearing or not) or a callable (an
+    opaque eager thunk — charged 0, it brings its own already-resident
+    tables). Scan leaves contribute one morsel's padded device table
+    (``capacity * P * row_bytes``) times ``working_set_factor``; ``Source``
+    leaves contribute their full padded capacity times the same factor
+    (shuffle outputs/intermediates scale with input size). Duplicate
+    sids are counted once.
+    """
+    if not hasattr(query, "_root"):
+        return 0.0  # eager thunks (and anything else the scheduler vets)
+    P = query._ctx.nworkers
+    total = 0.0
+    seen: set = set()
+    for n in walk(query._root):
+        if isinstance(n, Scan) and n.sid not in seen:
+            seen.add(n.sid)
+            man = query._scans[n.sid]
+            total += n.capacity * P * man.row_bytes()
+    for sid, ddf in query._sources.items():
+        if sid in seen:
+            continue
+        seen.add(sid)
+        total += ddf.capacity * P * _ddf_row_bytes(ddf.columns)
+    return total * max(working_set_factor, 1.0)
+
+
+class AdmissionController:
+    """Slot + budget accounting and the FIFO backlog.
+
+    Thread-safe; the service calls :meth:`offer` at submission time and
+    :meth:`release` when a query reaches a terminal state (the scheduler's
+    finish callback). ``release`` returns the backlogged sessions that now
+    fit, in FIFO order — the service hands those to the scheduler.
+    """
+
+    def __init__(self, max_running: int = 4, max_backlog: int = 32,
+                 memory_budget_bytes: float = DEFAULT_MEMORY_BUDGET,
+                 working_set_factor: float = 4.0):
+        self.max_running = max(int(max_running), 1)
+        self.max_backlog = max(int(max_backlog), 0)
+        self.memory_budget_bytes = float(memory_budget_bytes)
+        self.working_set_factor = float(working_set_factor)
+        self._lock = threading.Lock()
+        self._running: dict[str, float] = {}  # qid -> cost bytes
+        self._backlog: collections.deque[QuerySession] = collections.deque()
+        self.admitted_total = 0
+        self.rejected_total = 0
+        self.queued_total = 0
+
+    # -- internals -------------------------------------------------------------
+    def _fits(self, cost: float) -> bool:
+        if len(self._running) >= self.max_running:
+            return False
+        if not self._running:
+            return True  # a lone over-budget query must still run
+        return sum(self._running.values()) + cost <= self.memory_budget_bytes
+
+    def _admit(self, session: QuerySession) -> None:
+        self._running[session.qid] = session.cost_bytes
+        self.admitted_total += 1
+        session._transition(QueryState.ADMITTED)
+
+    # -- service surface -------------------------------------------------------
+    def offer(self, session: QuerySession) -> str:
+        """Place a PENDING session: returns ``"admitted"`` or ``"queued"``.
+
+        Estimates the session's cost (stored on ``session.cost_bytes``),
+        admits it when it fits, otherwise backlogs it FIFO. A full backlog
+        sheds: the session is failed with :class:`AdmissionError` and the
+        same error is raised to the submitter.
+        """
+        if not session.cost_bytes:
+            session.cost_bytes = estimate_query_bytes(
+                session.query, self.working_set_factor)
+        with self._lock:
+            if self._fits(session.cost_bytes) and not self._backlog:
+                self._admit(session)
+                return "admitted"
+            if len(self._backlog) >= self.max_backlog:
+                self.rejected_total += 1
+                err = AdmissionError(
+                    f"query {session.qid} rejected: admission backlog full "
+                    f"({len(self._backlog)}/{self.max_backlog} queued, "
+                    f"{len(self._running)}/{self.max_running} running, "
+                    f"{sum(self._running.values()):.0f}/"
+                    f"{self.memory_budget_bytes:.0f} budget bytes in use)")
+                session._finish(QueryState.FAILED, error=err)
+                raise err
+            self._backlog.append(session)
+            self.queued_total += 1
+            return "queued"
+
+    def release(self, session: QuerySession) -> list:
+        """Free a finished query's slot; admit now-fitting backlog heads.
+
+        Cancelled-while-pending sessions are dropped from the backlog here
+        (lazily — ``QuerySession.cancel`` resolves their future without
+        touching the deque). Returns newly admitted sessions, FIFO order.
+        """
+        with self._lock:
+            self._running.pop(session.qid, None)
+            admitted = []
+            while self._backlog:
+                head = self._backlog[0]
+                if head.state in QueryState.TERMINAL:
+                    self._backlog.popleft()  # cancelled while queued
+                    continue
+                if not self._fits(head.cost_bytes):
+                    break
+                self._backlog.popleft()
+                self._admit(head)
+                admitted.append(head)
+            return admitted
+
+    def backlog_depth(self) -> int:
+        """Current number of queued (not yet admitted) sessions."""
+        with self._lock:
+            return sum(1 for s in self._backlog
+                       if s.state not in QueryState.TERMINAL)
+
+    def stats(self) -> dict:
+        """Telemetry snapshot for ``service.stats()``."""
+        with self._lock:
+            return {
+                "max_running": self.max_running,
+                "max_backlog": self.max_backlog,
+                "memory_budget_bytes": self.memory_budget_bytes,
+                "running": len(self._running),
+                "in_use_bytes": float(sum(self._running.values())),
+                "backlog": sum(1 for s in self._backlog
+                               if s.state not in QueryState.TERMINAL),
+                "admitted_total": self.admitted_total,
+                "queued_total": self.queued_total,
+                "rejected_total": self.rejected_total,
+            }

@@ -15,6 +15,10 @@ than aggregate device capacity:
 - ``checkpoint`` — ``StreamCheckpoint``, atomic snapshots of the runner's
   whole per-query state (scan cursor, carry tables, spill manifests) so a
   killed query resumes mid-stream bit-identically (ISSUE 6 tentpole);
+- ``StreamExecution`` — the runner's morsel loop exposed as an externally
+  drivable step generator (one event per morsel), so the concurrent query
+  service (``repro.service``) can interleave morsels from many queries
+  over one shared mesh (ISSUE 7 tentpole);
 - ``recovery`` — retryable-vs-fatal error classification
   (``classify_error``, ``RETRYABLE_EXCEPTIONS``) and the bounded-backoff
   ``RetryPolicy`` / ``call_with_retry`` used at every runner fault site.
@@ -33,7 +37,7 @@ from .recovery import (  # noqa: F401
     call_with_retry,
     classify_error,
 )
-from .runner import collect, to_batches  # noqa: F401
+from .runner import StreamExecution, collect, to_batches  # noqa: F401
 from .scan import scan_csv, scan_dataset  # noqa: F401
 
 __all__ = [
@@ -41,6 +45,7 @@ __all__ = [
     "scan_dataset",
     "collect",
     "to_batches",
+    "StreamExecution",
     "StreamCheckpoint",
     "RetryPolicy",
     "RETRYABLE_EXCEPTIONS",

@@ -42,6 +42,18 @@ consumer). Retryable failures (injected faults, I/O errors, torn npz
 reads) re-execute in place; fatal errors (``strict_overflow``, schema
 mismatches) propagate immediately.
 
+**Externally drivable morsel steps.** The runner's execution is decomposed
+into value-returning *step generators*: every internal loop yields one
+event string per morsel of work (a scan batch through the compiled plan, a
+spilled bucket joined, a scan-free device dispatch) and carries its result
+back through ``return``. :func:`collect` / :func:`to_batches` simply drain
+the generator; :class:`StreamExecution` hands the same generator to
+external drivers — the concurrent query service (``repro.service``)
+interleaves cost-model-sized morsels from many queries over one mesh by
+round-robining ``next()`` across their step generators, and cancels a
+query cooperatively by closing its generator (``GeneratorExit`` unwinds
+the runner's ``finally`` blocks, cleaning up spill state).
+
 With ``checkpoint_dir`` set, the runner snapshots its whole per-query
 state — scan cursor, device carry tables, spill-writer manifests,
 partially-joined bucket outputs, folded info counters — every
@@ -106,7 +118,7 @@ from ..testing import faults as _faults
 from . import recovery as _recovery
 from .checkpoint import StreamCheckpoint
 
-__all__ = ["collect", "to_batches"]
+__all__ = ["collect", "to_batches", "StreamExecution"]
 
 _EPLIKE = (Select, Project, Rename, MapColumns, WithColumn, Fused, Rebalance)
 _SIDS = itertools.count(1 << 20)  # runner-created Source ids, disjoint range
@@ -212,6 +224,20 @@ def _np_hash_columns(host: Mapping[str, np.ndarray], cols) -> np.ndarray:
             h = h ^ (hk + np.uint32(0x9E3779B9) + (h << np.uint32(6))
                      + (h >> np.uint32(2)))
     return h
+
+
+def _drain(gen):
+    """Run a step generator to completion, returning its ``return`` value.
+
+    The synchronous entry points (:func:`collect`, the blocking prefix of
+    :func:`to_batches`) drive the same generators the query service steps
+    externally — draining is just "schedule every morsel back to back".
+    """
+    while True:
+        try:
+            next(gen)
+        except StopIteration as e:
+            return e.value
 
 
 # -- prefetch (double buffering) -----------------------------------------------
@@ -711,6 +737,7 @@ class _Runner:
             outs.append(host)
             cursor["k"] = k + 1
             self._tick()
+            yield "concat"
         host = {n: np.concatenate([o[n] for o in outs])
                 for n, _, _ in schema} if outs else {}
         out = self._from_host(host, schema)
@@ -774,6 +801,7 @@ class _Runner:
                                   carry_ov["overflow_carry"]}])
             state["k"] = k + 1
             self._tick()
+            yield "carry"
         return state["carry"], cap
 
     def _stream_groupby(self, B: GroupBy) -> DDF:
@@ -794,9 +822,9 @@ class _Runner:
                 return self._truncate_with_overflow(full, cap)
             return fn
 
-        carry, cap = self._run_carry(B, batch_root,
-                                     ("stream-gb-merge", by, aggs_t), merge,
-                                     stage=stage, resume=resume)
+        carry, cap = yield from self._run_carry(
+            B, batch_root, ("stream-gb-merge", by, aggs_t), merge,
+            stage=stage, resume=resume)
         out = carry._run(("stream-gb-fin", aggs_t, cap),
                          lambda comm, t: finalize_groupby(t, aggs))
         arrays, meta = self._ddf_arrays(out)
@@ -819,9 +847,9 @@ class _Runner:
                 return self._truncate_with_overflow(full, cap)
             return fn
 
-        carry, _ = self._run_carry(B, batch_root,
-                                   ("stream-uq-merge", subset), merge,
-                                   stage=stage, resume=resume)
+        carry, _ = yield from self._run_carry(
+            B, batch_root, ("stream-uq-merge", subset), merge,
+            stage=stage, resume=resume)
         arrays, meta = self._ddf_arrays(carry)
         self._stage_done(stage, "unique", meta, arrays)
         return carry
@@ -898,6 +926,7 @@ class _Runner:
                 self._spill_append(writer, host)
                 cursor["k"] = k + 1
                 self._tick()
+                yield "sort-spill"
             man = writer.close()
             host = read_rows(man, 0, man.num_rows)
         finally:
@@ -971,6 +1000,7 @@ class _Runner:
                         self._spill_append(writers[b],
                                            {c: v[m] for c, v in host.items()})
             self._tick()
+            yield "bucket-spill"
         mans = [w.close() for w in writers]
         self._stage_done(stage, "buckets",
                          {"dirs": [m.directory for m in mans],
@@ -998,8 +1028,8 @@ class _Runner:
             per_side_rows.append(sum(self.scans[s].num_rows for s in sids))
         br = self.nominal_batch_rows or max(max(per_side_rows), 1)
         nb = max(-(-2 * max(per_side_rows) // br), 1)
-        mans_l = self._spill_buckets(B.left, on, nb)
-        mans_r = self._spill_buckets(B.right, on, nb)
+        mans_l = yield from self._spill_buckets(B.left, on, nb)
+        mans_r = yield from self._spill_buckets(B.right, on, nb)
         stage, entry, resume = self._stage_enter("bucketjoin")
         if entry is not None:
             return self._restore_ddf(entry)
@@ -1070,6 +1100,7 @@ class _Runner:
                 outs.append(out.to_numpy())
                 state["j"] = j + 1
                 self._tick()
+                yield "bucket-join"
         finally:
             if self.session is None:
                 for m in mans_l + mans_r:
@@ -1090,16 +1121,17 @@ class _Runner:
         return self._guarded("device_op",
                              lambda: executor.execute(root, self.ctx, srcs))
 
-    def _materialize_blocking(self, B: Node) -> DDF:
+    def _materialize_blocking(self, B: Node):
+        """Step generator: finalize one blocking node, returning its DDF."""
         if isinstance(B, GroupBy) and _streamable(B.child) and _has_scan(B.child):
-            return self._stream_groupby(B)
+            return (yield from self._stream_groupby(B))
         if isinstance(B, Unique) and _streamable(B.child) and _has_scan(B.child):
-            return self._stream_unique(B)
+            return (yield from self._stream_unique(B))
         if isinstance(B, Sort) and _streamable(B.child) and _has_scan(B.child):
-            return self._stream_sort(B)
+            return (yield from self._stream_sort(B))
         if (isinstance(B, Join) and _has_scan(B.left) and _has_scan(B.right)
                 and _streamable(B.left) and _streamable(B.right)):
-            return self._stream_join_spill(B)
+            return (yield from self._stream_join_spill(B))
         # generic fallback: materialize scan-bearing children individually,
         # then run the (now scan-free) blocking op eagerly. The wrapping
         # stage completes after its recursive child stages, so its recorded
@@ -1110,7 +1142,7 @@ class _Runner:
         kids = []
         for c in B.children:
             if _has_scan(c):
-                d = self._collect_node(c)
+                d = yield from self._collect_node(c)
                 sid = next(_SIDS)
                 self.sources[sid] = d
                 kids.append(Source(sid, _ddf_schema(d), d.capacity))
@@ -1118,41 +1150,55 @@ class _Runner:
                 kids.append(c)
         out, aux = self._collect_scanfree(B.with_children(kids))
         self._fold_aux([aux])
+        yield "device"
         arrays, meta = self._ddf_arrays(out)
         self._stage_done(stage, "blocking", meta, arrays)
         return out
 
-    def _drain_blocking(self, root: Node) -> Node:
-        """Finalize blocking nodes bottom-up until the plan is streamable
-        (or scan-free), substituting each result back as a Source."""
+    def _drain_blocking(self, root: Node):
+        """Step generator: finalize blocking nodes bottom-up until the plan
+        is streamable (or scan-free), substituting each result back as a
+        Source; returns the rewritten plan root."""
         while _has_scan(root) and not _streamable(root):
             B = _find_blocking(root)
             if B is None:  # cannot happen; guard against infinite loop
                 raise RuntimeError("unstreamable plan with no blocking node")
-            mat = self._materialize_blocking(B)
+            mat = yield from self._materialize_blocking(B)
             sid = next(_SIDS)
             self.sources[sid] = mat
             root = _replace_node(root, B, Source(sid, _ddf_schema(mat),
                                                  mat.capacity))
         return root
 
-    def _collect_node(self, root: Node) -> DDF:
-        root = self._drain_blocking(root)
+    def _collect_node(self, root: Node):
+        """Step generator: evaluate a plan subtree, returning its DDF."""
+        root = yield from self._drain_blocking(root)
         if _has_scan(root):
-            return self._stream_concat(root)
+            return (yield from self._stream_concat(root))
         out, aux = self._collect_scanfree(root)
         self._fold_aux([aux])
+        yield "device"
         return out
 
     # -- public entry points -----------------------------------------------------
-    def run(self):
-        out = self._collect_node(self.root)
+    def steps(self):
+        """The whole query as one externally drivable step generator.
+
+        Yields one event string per morsel of work (the scheduling quantum:
+        a scan batch, a spilled bucket join, a scan-free device dispatch)
+        and returns ``(result DDF, info dict)``. Closing the generator
+        mid-run cancels the query cooperatively — the runner's ``finally``
+        blocks release spill/prefetch resources on the way out."""
+        out = yield from self._collect_node(self.root)
         if self.session is not None:
             self.session.finish()
         return out, dict(self.info)
 
+    def run(self):
+        return _drain(self.steps())
+
     def batches(self) -> Iterator[dict]:
-        root = self._drain_blocking(self.root)
+        root = _drain(self._drain_blocking(self.root))
         if _has_scan(root):
             stage, entry, resume = self._stage_enter("emit")
             if entry is None:
@@ -1177,6 +1223,46 @@ class _Runner:
             yield {k: v[lo:lo + step] for k, v in host.items()}
         if self.session is not None:
             self.session.finish()
+
+
+class StreamExecution:
+    """Externally drivable streaming execution of one lazy query.
+
+    Where :func:`collect` drives every morsel back to back,
+    ``StreamExecution`` exposes the runner's step generator so an external
+    scheduler (``repro.service.QueryService``) can interleave cost-model-
+    sized morsels from *many* queries over one shared mesh::
+
+        ex = StreamExecution(lazy, batch_rows=..., checkpoint_dir=...)
+        for event in ex.steps():   # one event per morsel — yield here to
+            ...                    # run a morsel of some *other* query
+        out, info = ex.result, ex.info
+
+    Args match :func:`collect`. ``steps()`` may be called once; the result
+    DDF and info counters are populated when the generator is exhausted.
+    Closing the generator early cancels the query cooperatively (spill and
+    prefetch state is released by the runner's ``finally`` blocks).
+    """
+
+    def __init__(self, lazy, **opts):
+        self._runner = _Runner(lazy, **opts)
+        self._started = False
+        self.result: DDF | None = None
+        self.info: dict | None = None
+
+    @property
+    def nominal_batch_rows(self) -> int | None:
+        """Cost-model global rows per morsel (None for scan-free plans)."""
+        return self._runner.nominal_batch_rows
+
+    def steps(self) -> Iterator[str]:
+        """Yield one event string per morsel; populates ``result``/``info``
+        on exhaustion. Single-shot: a second call raises ``RuntimeError``."""
+        if self._started:
+            raise RuntimeError("StreamExecution.steps() may only be called "
+                               "once per execution")
+        self._started = True
+        self.result, self.info = yield from self._runner.steps()
 
 
 def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,

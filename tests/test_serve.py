@@ -23,6 +23,32 @@ def test_engine_generates():
     assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
 
 
+def test_engine_uneven_prompts_match_solo():
+    """Regression: a batch of different-length prompts must produce exactly
+    what each prompt produces alone. The old prefill fed padding zeros to
+    short lanes past their end and took every lane's first token from the
+    logits at the longest prompt's final position, so short prompts'
+    continuations were computed from padding."""
+    cfg = get_smoke_config("olmo-1b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(3))
+    eng = ServeEngine(model, params, max_len=64)
+    prompts = [[5], [1, 2, 3], [9, 8, 7, 6, 5, 4]]
+    batched = eng.generate(prompts, max_new=6)
+    for p, got in zip(prompts, batched):
+        solo = eng.generate([p], max_new=6)[0]
+        assert got == solo
+
+
+def test_engine_rejects_empty_prompt():
+    cfg = get_smoke_config("olmo-1b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(4))
+    eng = ServeEngine(model, params, max_len=64)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.generate([[1, 2], []], max_new=2)
+
+
 def test_engine_deterministic():
     cfg = get_smoke_config("gemma2-9b")
     model = build_model(cfg)

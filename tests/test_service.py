@@ -1,0 +1,358 @@
+"""Concurrent query service (ISSUE 7): session lifecycle, admission
+control, morsel scheduling under both policies, shared-cache telemetry,
+and the headline property — N interleaved mixed queries bit-identical to
+running each serially."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DDF, DDFContext
+from repro.core.api import _LRUCache
+from repro.data.dataset import write_dataset
+from repro.expr import col
+from repro import stream
+from repro.service import (
+    AdmissionController,
+    AdmissionError,
+    CacheManager,
+    MorselScheduler,
+    QueryCancelled,
+    QueryService,
+    QuerySession,
+    QueryState,
+    SessionManager,
+    estimate_query_bytes,
+)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    return DDFContext(mesh=mesh, axes=("data",))
+
+
+def _table(n, nkeys=120, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, nkeys, n).astype(np.int32),
+            "v": rng.integers(0, 1000, n).astype(np.int32)}
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    root = tmp_path_factory.mktemp("svc")
+    return write_dataset(_table(4000, seed=1), str(root / "ds"), chunk_rows=512)
+
+
+@pytest.fixture(scope="module")
+def tables(ctx):
+    L = DDF.from_numpy(_table(240, seed=2), ctx, capacity=480)
+    R = {"k": np.arange(120, dtype=np.int32),
+         "w": np.arange(120, dtype=np.int32) % 9}
+    return L, DDF.from_numpy(R, ctx, capacity=240)
+
+
+def _same(a: DDF, b: DDF) -> bool:
+    an, bn = a.to_numpy(), b.to_numpy()
+    return set(an) == set(bn) and all(np.array_equal(an[c], bn[c]) for c in an)
+
+
+def _mixed_queries(ctx, dataset, tables):
+    """8 queries across all three submission kinds."""
+    L, R = tables
+    aggs = {"v": ("sum", "count")}
+    qs = []
+    for _ in range(3):
+        qs.append(("stream",
+                   stream.scan_dataset(dataset, ctx, batch_rows=500)
+                   .groupby(("k",), aggs)))
+    for _ in range(3):
+        qs.append(("lazy", L.lazy().join(R.lazy(), on=("k",))
+                   .groupby(("k",), aggs)))
+    qs.append(("eager", lambda: L.sort_values("k")[0]))
+    qs.append(("lazy", L.lazy().select(col("v") > 500)))
+    return qs
+
+
+def _serial(kind, q) -> DDF:
+    if kind == "eager":
+        return q()
+    if kind == "stream":
+        return stream.collect(q)[0]
+    return q.collect()
+
+
+# -- the headline property: interleaved == serial, bit for bit ------------------
+
+@pytest.mark.parametrize("policy", ["fair", "round_robin"])
+def test_interleaved_bit_identical_to_serial(ctx, dataset, tables, policy):
+    queries = _mixed_queries(ctx, dataset, tables)
+    assert len(queries) >= 8
+    serial = [_serial(k, q) for k, q in queries]
+    with QueryService(policy=policy, max_running=4) as svc:
+        handles = [svc.submit(q) for _, q in queries]
+        results = [h.result(timeout=300) for h in handles]
+        stats = svc.stats()
+    for ref, got in zip(serial, results):
+        assert _same(ref, got)
+    assert stats["sessions"]["DONE"] == len(queries)
+    assert stats["sessions"]["FAILED"] == 0
+    # interleaving actually happened: more morsels than queries means the
+    # streaming queries went through multiple scheduler-driven quanta
+    assert stats["scheduler"]["morsels_total"] > len(queries)
+
+
+def test_cross_query_cache_reuse(ctx, dataset, tables):
+    """Queries sharing a plan shape hit the shared plan/compiled-op caches."""
+    queries = _mixed_queries(ctx, dataset, tables)
+    _ = [_serial(k, q) for k, q in queries[:1]]  # ensure at least one warm
+    with QueryService(max_running=8) as svc:
+        for _, q in queries:
+            svc.submit(q)
+        # drain via shutdown, then read the window
+        svc.shutdown()
+        caches = svc.stats()["caches"]
+    assert caches["op"]["window"]["hits"] > 0
+    assert caches["plan"]["window"]["hits"] > 0
+
+
+def test_submit_weight_and_labels(ctx, tables):
+    L, _ = tables
+    with QueryService() as svc:
+        h = svc.submit(L.lazy().select(col("v") > 500), weight=2.5,
+                       label="filter")
+        h.result(timeout=120)
+        desc = [d for d in svc.stats()["queries"] if d["qid"] == h.qid][0]
+    assert desc["label"] == "filter"
+    assert desc["weight"] == 2.5
+    assert desc["state"] == QueryState.DONE
+    assert desc["morsels"] >= 1
+
+
+# -- cancellation ---------------------------------------------------------------
+
+def test_cancel_mid_stream(ctx, dataset):
+    aggs = {"v": ("sum", "count")}
+    # warm the compile caches so the query is mid-stream quickly
+    stream.collect(stream.scan_dataset(dataset, ctx, batch_rows=300)
+                   .groupby(("k",), aggs))
+    svc = QueryService()
+    try:
+        h = svc.submit(stream.scan_dataset(dataset, ctx, batch_rows=300)
+                       .groupby(("k",), aggs))
+        deadline = time.monotonic() + 60
+        while h.morsels < 1 and not h.done() and time.monotonic() < deadline:
+            time.sleep(0.002)
+        assert svc.cancel(h.qid) or h.done()
+        if not h.state == QueryState.DONE:
+            with pytest.raises(QueryCancelled):
+                h.result(timeout=60)
+            assert h.state == QueryState.CANCELLED
+    finally:
+        svc.shutdown(cancel=True, timeout=30)
+
+
+def test_cancel_pending_resolves_immediately():
+    mgr = SessionManager()
+    s = mgr.create(lambda: None, {})
+    assert s.cancel() is True
+    assert s.state == QueryState.CANCELLED
+    with pytest.raises(QueryCancelled):
+        s.result(timeout=1)
+    # terminal sessions can't be re-cancelled
+    assert s.cancel() is False
+
+
+def test_failed_query_propagates_error(ctx):
+    def boom():
+        raise RuntimeError("exploded in the query")
+    with QueryService() as svc:
+        h = svc.submit(boom)
+        with pytest.raises(RuntimeError, match="exploded"):
+            h.result(timeout=60)
+        assert h.state == QueryState.FAILED
+        # one bad query never poisons the service
+        h2 = svc.submit(lambda: 42)
+        assert h2.result(timeout=60) == 42
+
+
+# -- admission control ----------------------------------------------------------
+
+def _mk_session(cost=0.0):
+    s = SessionManager().create(lambda: None, {})
+    s.cost_bytes = cost
+    return s
+
+
+def test_admission_concurrency_and_backlog():
+    adm = AdmissionController(max_running=2, max_backlog=2,
+                             memory_budget_bytes=1e9)
+    a, b, c, d = (_mk_session() for _ in range(4))
+    assert adm.offer(a) == "admitted" and adm.offer(b) == "admitted"
+    assert adm.offer(c) == "queued" and adm.offer(d) == "queued"
+    # backlog full -> shed with AdmissionError, session fails
+    e = _mk_session()
+    with pytest.raises(AdmissionError, match="backlog full"):
+        adm.offer(e)
+    assert e.state == QueryState.FAILED
+    assert adm.stats()["rejected_total"] == 1
+    # releasing a slot admits the FIFO head
+    a._transition(QueryState.RUNNING)
+    a._finish(QueryState.DONE)
+    admitted = adm.release(a)
+    assert admitted == [c]
+    assert c.state == QueryState.ADMITTED
+
+
+def test_admission_memory_budget():
+    adm = AdmissionController(max_running=8, max_backlog=8,
+                             memory_budget_bytes=100.0)
+    big = _mk_session(cost=1000.0)   # over the whole budget, but alone: runs
+    assert adm.offer(big) == "admitted"
+    small = _mk_session(cost=10.0)   # doesn't fit next to `big`
+    assert adm.offer(small) == "queued"
+    big._transition(QueryState.RUNNING)
+    big._finish(QueryState.DONE)
+    assert adm.release(big) == [small]
+
+
+def test_admission_skips_cancelled_backlog():
+    adm = AdmissionController(max_running=1, max_backlog=4)
+    a, b, c = (_mk_session() for _ in range(3))
+    adm.offer(a), adm.offer(b), adm.offer(c)
+    b.cancel()  # cancelled while queued
+    a._transition(QueryState.RUNNING)
+    a._finish(QueryState.DONE)
+    assert adm.release(a) == [c]
+    assert adm.backlog_depth() == 0
+
+
+def test_estimate_query_bytes(ctx, dataset, tables):
+    L, R = tables
+    assert estimate_query_bytes(lambda: None) == 0.0
+    scan_q = stream.scan_dataset(dataset, ctx, batch_rows=500).groupby(
+        ("k",), {"v": ("sum",)})
+    lazy_q = L.lazy().join(R.lazy(), on=("k",))
+    assert estimate_query_bytes(scan_q) > 0.0
+    assert estimate_query_bytes(lazy_q) > 0.0
+    # factor scales the estimate linearly
+    assert estimate_query_bytes(lazy_q, working_set_factor=8.0) == pytest.approx(
+        2 * estimate_query_bytes(lazy_q, working_set_factor=4.0))
+
+
+def test_shed_on_overflow_from_service(ctx, tables):
+    L, _ = tables
+    q = L.lazy().select(col("v") > 500)
+    svc = QueryService(max_running=1, max_backlog=0,
+                       memory_budget_bytes=1.0)
+    try:
+        # block the single slot with a slow eager thunk
+        gate = threading.Event()
+        h = svc.submit(lambda: gate.wait(timeout=30))
+        with pytest.raises(AdmissionError):
+            svc.submit(q)
+        gate.set()
+        h.result(timeout=60)
+    finally:
+        svc.shutdown(cancel=True, timeout=30)
+
+
+def test_submit_after_shutdown_rejected(ctx, tables):
+    L, _ = tables
+    svc = QueryService()
+    svc.shutdown()
+    with pytest.raises(AdmissionError, match="shut down"):
+        svc.submit(L.lazy().select(col("v") > 500))
+
+
+# -- session state machine ------------------------------------------------------
+
+def test_session_lifecycle_transitions():
+    mgr = SessionManager()
+    s = mgr.create(lambda: None, {}, label="t")
+    assert s.state == QueryState.PENDING
+    s._transition(QueryState.ADMITTED)
+    s._transition(QueryState.RUNNING)
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        s._transition(QueryState.PENDING)
+    s._finish(QueryState.DONE, result=7)
+    assert s.result(timeout=1) == 7
+    assert s.done()
+    # unique, monotonic-ish ids
+    ids = {mgr.create(lambda: None, {}).qid for _ in range(10)}
+    assert len(ids) == 10
+
+
+def test_scheduler_rejects_bad_inputs(ctx, tables):
+    L, _ = tables
+    with pytest.raises(ValueError, match="policy"):
+        MorselScheduler(policy="nope")
+    with QueryService() as svc:
+        # materialized DDFs must come in as .lazy()
+        h = svc.submit(L)
+        with pytest.raises(TypeError, match="lazy"):
+            h.result(timeout=60)
+        # stream options on a scan-free query are a user error
+        h2 = svc.submit(L.lazy().select(col("v") > 500), batch_rows=64)
+        with pytest.raises(ValueError, match="stream options"):
+            h2.result(timeout=60)
+
+
+# -- shared cache managers (satellite: thread-safe _LRUCache) -------------------
+
+def test_lru_cache_counters():
+    c = _LRUCache(maxsize=2)
+    assert c.get("a") is None
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1
+    c.put("c", 3)  # evicts b (a was touched more recently)
+    assert c.get("b") is None
+    st = c.stats()
+    assert st["hits"] == 1 and st["misses"] == 2 and st["evictions"] == 1
+    assert st["size"] == 2 and st["maxsize"] == 2
+
+
+def test_lru_cache_thread_safety():
+    c = _LRUCache(maxsize=64)
+    errs = []
+
+    def work(seed):
+        try:
+            rng = np.random.default_rng(seed)
+            for _ in range(500):
+                k = int(rng.integers(0, 128))
+                if rng.random() < 0.5:
+                    c.put(k, k)
+                else:
+                    v = c.get(k)
+                    assert v is None or v == k
+        except BaseException as e:  # surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    st = c.stats()
+    assert st["hits"] + st["misses"] > 0
+    assert len(c) <= 64
+
+
+def test_cache_manager_window(ctx, tables):
+    L, _ = tables
+    mgr = CacheManager()
+    before = mgr.stats()["op"]["window"]
+    L.lazy().select(col("v") > 500).collect()
+    L.lazy().select(col("v") > 500).collect()
+    after = mgr.stats()["op"]["window"]
+    assert after["hits"] + after["misses"] > before["hits"] + before["misses"]
+    assert mgr.hit_rate("op") is not None
+    mgr.mark()
+    reset = mgr.stats()["op"]["window"]
+    assert reset["hits"] == 0 and reset["misses"] == 0
