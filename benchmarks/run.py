@@ -22,6 +22,11 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
                                     query service vs serial: throughput,
                                     p50/p95 latency, fairness spread,
                                     shared-cache hit rates)
+  ISSUE 8  -> bench_obs            (tracing overhead on the 4-op pipeline —
+                                    must stay under 3% with bit-identical
+                                    results — plus per-pattern cost-model
+                                    error reports and the disabled-mode
+                                    null-span cost)
 """
 
 import os
@@ -41,6 +46,7 @@ BENCHES = [
     "benchmarks.bench_kernels",
     "benchmarks.bench_recovery",
     "benchmarks.bench_service",
+    "benchmarks.bench_obs",
 ]
 
 

@@ -26,7 +26,10 @@ Fails (exit 1) if:
      (``checkpoint_dir`` / ``checkpoint_every`` / ``resume``), or
   8. ``docs/SERVICE.md`` is missing, or does not mention every
      ``repro.service`` export, lifecycle state, scheduling policy, and
-     service knob (``max_running`` / ``memory_budget_bytes`` / ...).
+     service knob (``max_running`` / ``memory_budget_bytes`` / ...), or
+  9. ``docs/OBSERVABILITY.md`` is missing, or does not mention every
+     ``repro.obs`` export, the engine's metric and span names, and the
+     tracing/profiling knobs (``REPRO_TRACE`` / ``profile=True`` / ...).
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -81,6 +84,11 @@ CORE_MODULES = [
     "repro.service.scheduler",
     "repro.service.admission",
     "repro.service.cache",
+    # unified tracing + metrics + cost-model accounting (ISSUE 8)
+    "repro.obs",
+    "repro.obs.trace",
+    "repro.obs.metrics",
+    "repro.obs.model_check",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -204,6 +212,21 @@ def missing_kernel_docs() -> list:
                                      "segment_reduce_partials"])
 
 
+def missing_obs_docs() -> list:
+    """Return problems with docs/OBSERVABILITY.md coverage of repro.obs:
+    every package export, the metric names the engine emits, the span
+    names each layer records, and the tracing/profiling knobs."""
+    import repro.obs as obs_pkg
+
+    symbols = (list(obs_pkg.__all__)
+               + ["REPRO_TRACE", "to_chrome_trace", "model_report",
+                  "peak_working_set_bytes", "retries:", "checkpoints",
+                  "kernels.dispatch", "stream.decode", "stream.device_op",
+                  "stream.stage", "service.morsel", "service.query",
+                  "profile=True", "analyze=True", "query_learn_key"])
+    return missing_doc_mentions("docs/OBSERVABILITY.md", symbols)
+
+
 def main() -> int:
     failures = missing_docstrings()
     if failures:
@@ -245,14 +268,19 @@ def main() -> int:
         print("Query-service documentation problems:")
         for f in service_failures:
             print(f"  - {f}")
+    obs_failures = missing_obs_docs()
+    if obs_failures:
+        print("Observability documentation problems:")
+        for f in obs_failures:
+            print(f"  - {f}")
     if failures or doc_failures or lazy_failures or stream_failures \
             or fault_failures or expr_failures or kernel_failures \
-            or service_failures:
+            or service_failures or obs_failures:
         return 1
     print("check_docs: all exported core+plan+stream+expr+kernel+testing+"
-          "service symbols documented; docs cover every pattern, node type, "
-          "rewrite pass, streaming, fault-tolerance, expression, kernel and "
-          "service export")
+          "service+obs symbols documented; docs cover every pattern, node "
+          "type, rewrite pass, streaming, fault-tolerance, expression, "
+          "kernel, service and observability export")
     return 0
 
 

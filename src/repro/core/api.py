@@ -31,6 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import cost_model, operators, patterns
 from .. import expr as _expr
 from ..compat import shard_map
+from ..obs import trace as _trace
 from .comm.communicator import Communicator, make_communicator
 from .dataframe import Table
 from .local_ops import select as local_select
@@ -125,7 +126,10 @@ def cached_op(ctx: "DDFContext", key: tuple, fn: Callable, arg_schemas: tuple) -
                  _kernel_registry.dispatch_signature())
     op = _OP_CACHE.get(cache_key)
     if op is None:
-        op = _build_op(ctx, fn, arg_schemas)
+        # compile misses are the expensive rare path — span them so traces
+        # separate trace/compile stalls from steady-state dispatches
+        with _trace.span("core.compile", op=str(key[0])):
+            op = _build_op(ctx, fn, arg_schemas)
         _OP_CACHE.put(cache_key, op)
     return op
 

@@ -122,6 +122,12 @@ def resolve(kernel: str, n_rows: int, dtype=None) -> str:
     """
     if kernel not in KERNEL_OPS:
         raise ValueError(f"unknown kernel {kernel!r}; expected {KERNEL_OPS}")
+    decision = _decide(kernel, n_rows, dtype)
+    _note_dispatch(kernel, n_rows, decision)
+    return decision
+
+
+def _decide(kernel: str, n_rows: int, dtype) -> str:
     p = current_params()
     if _backend == "jnp":
         return "jnp"
@@ -132,9 +138,32 @@ def resolve(kernel: str, n_rows: int, dtype=None) -> str:
     return "pallas" if p.profitable(kernel, n_rows, dtype) else "jnp"
 
 
+def _note_dispatch(kernel: str, n_rows: int, decision: str) -> None:
+    """Record one dispatch decision: always counted in the global metrics
+    registry; while tracing, also attached to the enclosing span's
+    ``kernel_dispatch`` attr (or an instant event when no span is open).
+    Dispatch happens at trace time, so the cost is per compile, not per
+    batch. Imports are deferred — ``repro.obs`` pulls in no engine modules,
+    but keeping the registry import-light avoids any cycle risk."""
+    from ..obs import metrics as _metrics
+    from ..obs import trace as _trace
+
+    _metrics.registry().counter(f"kernels.dispatch.{kernel}.{decision}").add(1)
+    if _trace.enabled():
+        sp = _trace.current_span()
+        entry = {"kernel": kernel, "n_rows": int(n_rows),
+                 "decision": decision}
+        if sp is not None:
+            sp.attrs.setdefault("kernel_dispatch", []).append(entry)
+        else:
+            _trace.instant("kernels.dispatch", **entry)
+
+
 def explain(kernel: str, n_rows: int, dtype=None) -> dict:
     """The :func:`resolve` decision plus the model inputs that produced it
-    (for benchmarks and debugging dispatch behavior)."""
+    (for benchmarks and debugging dispatch behavior). Unlike
+    :func:`resolve`, no dispatch decision is recorded — explaining is not
+    dispatching."""
     p = current_params()
     return {
         "kernel": kernel,
@@ -145,7 +174,7 @@ def explain(kernel: str, n_rows: int, dtype=None) -> dict:
         "native": p.native,
         "min_rows": int(p.min_rows.get(kernel, 0)),
         "dtype_supported": (dtype is None or p.dtype_supported(kernel, dtype)),
-        "decision": resolve(kernel, n_rows, dtype),
+        "decision": _decide(kernel, n_rows, dtype),
     }
 
 

@@ -22,12 +22,16 @@ per-method blocking syncs of eager mode.
 
 from __future__ import annotations
 
+import time
 from typing import Mapping
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import cost_model, operators
+from ..obs import model_check as _model
+from ..obs import trace as _trace
 from ..core.api import DDF, DDFContext, _LRUCache, _schema_sig, cached_op
 from ..core.dataframe import Table, concat
 from ..core.local_ops import (
@@ -279,7 +283,29 @@ def execute(root: Node, ctx: DDFContext, sources: Mapping,
     """
     src_rows = dict(src_rows) if src_rows is not None else source_row_counts(sources)
     plan = optimized_plan(root, ctx, src_rows, level=level)
+    if _trace.enabled():
+        return _run_profiled(plan, ctx, sources, src_rows)
     return run_planned(plan, ctx, sources)
+
+
+def _run_profiled(plan: Node, ctx: DDFContext, sources: Mapping,
+                  src_rows: Mapping):
+    """:func:`run_planned` under tracing: span the program dispatch, block
+    for a true wall measurement, and record predicted-vs-observed samples
+    for the plan's modeled operators (``repro.obs.model_check``). The sync
+    only adds a barrier — results are bit-identical to the untraced path."""
+    params = cost_model.params_for_fabric(ctx.fabric)
+    preds = _model.predict_plan(plan, ctx.nworkers, src_rows, params)
+    with _trace.span("plan.execute", ops=len(preds),
+                     workers=ctx.nworkers) as sp:
+        t0 = time.perf_counter()
+        out, aux = run_planned(plan, ctx, sources)
+        jax.block_until_ready(out.counts)
+        dt = time.perf_counter() - t0
+        rows = int(np.asarray(out.counts).sum())
+        sp.set(wall_s=dt, out_rows=rows)
+    _model.record_program(preds, dt, observed_rows=rows)
+    return out, aux
 
 
 def run_planned(plan: Node, ctx: DDFContext, sources: Mapping):

@@ -67,6 +67,7 @@ class LazyDDF:
         # scan sid -> DatasetManifest (out-of-core leaves, repro.stream)
         self._scans = dict(scans or {})
         self.last_info: dict | None = None
+        self.last_profile = None  # repro.obs.Profile after collect(profile=True)
 
     @classmethod
     def from_ddf(cls, ddf: DDF) -> "LazyDDF":
@@ -281,7 +282,7 @@ class LazyDDF:
         rows.update({sid: m.num_rows for sid, m in self._scans.items()})
         return rows
 
-    def collect(self, level: str = "all") -> DDF:
+    def collect(self, level: str = "all", profile: bool = False) -> DDF:
         """Optimize + compile + execute the pipeline; returns an eager DDF.
 
         Aux outputs (overflow counters etc.) land in ``self.last_info``.
@@ -289,7 +290,19 @@ class LazyDDF:
         Plans with ``SCAN`` leaves (built via ``repro.stream.scan_csv`` /
         ``scan_dataset``) route through :meth:`collect_stream` — the
         out-of-core engine is the only way to run them (and it always runs
-        the full optimizer, so ``level`` overrides are rejected there)."""
+        the full optimizer, so ``level`` overrides are rejected there).
+
+        ``profile=True`` runs the query with tracing enabled for its
+        duration and stores a ``repro.obs.Profile`` (spans plus the cost
+        model's predicted-vs-observed samples) in ``self.last_profile``.
+        Profiling never changes results — it only adds a device sync per
+        dispatched program for honest wall times."""
+        if profile:
+            from .. import obs as _obs
+            with _obs.profiled() as prof:
+                out = self.collect(level=level)
+            self.last_profile = prof
+            return out
         if self._scans:
             if level != "all":
                 raise ValueError(
@@ -342,14 +355,26 @@ class LazyDDF:
         """Collect and gather live rows to host, in partition order."""
         return self.collect().to_numpy()
 
-    def explain(self, optimized: bool = True) -> str:
+    def explain(self, optimized: bool = True, analyze: bool = False) -> str:
         """Render the logical plan (post-optimizer by default) with row
-        estimates and a shuffle count — no device execution."""
+        estimates and a shuffle count — no device execution.
+
+        ``analyze=True`` additionally *executes* the query under profiling
+        (the EXPLAIN ANALYZE idiom) and appends the measured per-operator
+        profile — predicted vs observed milliseconds per op and the
+        per-pattern cost-model error — to the rendered plan. The analyzed
+        result is bit-identical to a plain :meth:`collect` and lands in
+        ``self.last_info`` as usual."""
         rows = self._rows()
         if not optimized:
-            return format_plan(self._root, rows)
-        plan = executor.optimized_plan(self._root, self._ctx, rows)
-        return format_plan(plan, rows)
+            text = format_plan(self._root, rows)
+        else:
+            plan = executor.optimized_plan(self._root, self._ctx, rows)
+            text = format_plan(plan, rows)
+        if not analyze:
+            return text
+        self.collect(profile=True)
+        return text + "\n\n" + self.last_profile.render()
 
     def __repr__(self) -> str:
         return (f"LazyDDF(cols={list(self.column_names)}, "

@@ -36,6 +36,7 @@ predicates never alias.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Callable, ClassVar, Mapping, Sequence
 
 import jax.numpy as jnp
@@ -70,6 +71,7 @@ __all__ = [
     "probe_columns",
     "count_shuffles",
     "format_plan",
+    "plan_signature",
     "walk",
 ]
 
@@ -777,3 +779,30 @@ def format_plan(root: Node, src_rows: Mapping | None = None) -> str:
     rec(root, 0)
     lines.append(f"shuffles: {count_shuffles(root)}")
     return "\n".join(lines)
+
+
+def plan_signature(root: Node) -> str:
+    """Process-stable text identity of a plan's *shape*.
+
+    :func:`format_plan` output normalized so that re-building the same
+    pipeline — in this process or after a restart — yields the same
+    string: object addresses are stripped (legacy predicate closures print
+    as ``<function ... at 0x...>``) and the process-global source/scan id
+    counters (``#N`` / ``sid=N``) are renumbered by first appearance.
+
+    Shared identity key for anything that must recognize "the same query
+    again" across processes or rebuilds: the streaming checkpoint
+    ``query_key`` and the admission controller's learned working-set
+    corrections.
+    """
+    text = re.sub(r"0x[0-9a-f]+", "0x", format_plan(root))
+    seen: dict[str, int] = {}
+
+    def renum(m):
+        s = m.group(1)
+        if s not in seen:
+            seen[s] = len(seen)
+        return f"#{seen[s]}"
+
+    text = re.sub(r"#(\d+)", renum, text)
+    return re.sub(r"sid=(\d+)", lambda m: "sid=" + renum(m)[1:], text)

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import threading
 
+from ..obs import trace as _trace
 from .admission import AdmissionController, AdmissionError, estimate_query_bytes
 from .cache import CacheManager
 from .scheduler import POLICIES, MorselScheduler
@@ -126,6 +127,10 @@ class QueryService:
 
     # -- scheduler callback ----------------------------------------------------
     def _on_query_finished(self, session: QuerySession) -> None:
+        # learn from the finished query's measured peak working set before
+        # releasing its slot (so a same-shape backlog head is re-costed
+        # against the corrected estimate)
+        self.admission.observe(session)
         for newly_admitted in self.admission.release(session):
             self.scheduler.enqueue(newly_admitted)
 
@@ -135,8 +140,9 @@ class QueryService:
 
         ``{"sessions": {state: count}, "queries": [per-session dicts],
         "scheduler": {...}, "admission": {...}, "caches": {"plan"/"op":
-        cumulative + windowed hit/miss/eviction counts}}`` — the schema is
-        documented in docs/SERVICE.md.
+        cumulative + windowed hit/miss/eviction counts}, "trace":
+        {"enabled", "spans", "dropped", "by_name"}}`` — the schema is
+        documented in docs/SERVICE.md (tracing in docs/OBSERVABILITY.md).
         """
         return {
             "sessions": self.sessions.counts(),
@@ -144,6 +150,7 @@ class QueryService:
             "scheduler": self.scheduler.stats(),
             "admission": self.admission.stats(),
             "caches": self.caches.stats(),
+            "trace": _trace.summary(),
         }
 
     # -- lifecycle -------------------------------------------------------------

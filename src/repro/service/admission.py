@@ -24,22 +24,33 @@ bearing query's resident set is its cost-model-sized morsel (scan
 tables; a scan-free query is its source tables inflated the same way.
 Everything is computed from host-side metadata (capacities, schemas) — no
 device sync on the submission path.
+
+The static estimate is also *corrected by observation*: streaming runs
+report their measured peak working set (the runner's
+``peak_working_set_bytes`` gauge, via ``repro.obs``), and
+:meth:`AdmissionController.observe` folds the observed-vs-estimated ratio
+into an EWMA keyed by the query's plan shape (:func:`query_learn_key`).
+Repeat submissions of the same shape are admitted against the corrected
+estimate — the feedback loop that keeps the cost model honest at the
+front door.
 """
 
 from __future__ import annotations
 
 import collections
+import hashlib
 import threading
 
 import numpy as np
 
-from ..plan.logical import Scan, walk
+from ..plan.logical import Scan, plan_signature, walk
 from .session import QuerySession, QueryState
 
 __all__ = [
     "AdmissionError",
     "AdmissionController",
     "estimate_query_bytes",
+    "query_learn_key",
 ]
 
 #: default per-mesh memory budget for co-resident queries (bytes)
@@ -88,6 +99,28 @@ def estimate_query_bytes(query, working_set_factor: float = 4.0) -> float:
     return total * max(working_set_factor, 1.0)
 
 
+def query_learn_key(query) -> str | None:
+    """Identity under which observed working-set peaks are learned: the
+    plan's process-stable shape (``plan_signature``) plus the worker
+    count. Queries with the same shape and mesh have the same static
+    buffer sizing, so one query's measured peak predicts the next's.
+    Opaque eager thunks have no plan to key on — None, no learning."""
+    if not hasattr(query, "_root"):
+        return None
+    h = hashlib.sha256()
+    h.update(plan_signature(query._root).encode())
+    h.update(f"P={query._ctx.nworkers}".encode())
+    return h.hexdigest()
+
+
+#: clamp on the learned estimate-correction ratio — one wild measurement
+#: (or a tiny probe run of a shape) cannot swing admissions unboundedly
+_RATIO_BOUNDS = (0.125, 8.0)
+
+#: EWMA weight of the newest observation when updating a learned ratio
+_EWMA_WEIGHT = 0.5
+
+
 class AdmissionController:
     """Slot + budget accounting and the FIFO backlog.
 
@@ -107,9 +140,13 @@ class AdmissionController:
         self._lock = threading.Lock()
         self._running: dict[str, float] = {}  # qid -> cost bytes
         self._backlog: collections.deque[QuerySession] = collections.deque()
+        # learned correction ratios: query_learn_key -> EWMA of
+        # observed peak working set / static cost-model estimate
+        self._learned: dict[str, float] = {}
         self.admitted_total = 0
         self.rejected_total = 0
         self.queued_total = 0
+        self.observed_total = 0
 
     # -- internals -------------------------------------------------------------
     def _fits(self, cost: float) -> bool:
@@ -134,9 +171,15 @@ class AdmissionController:
         same error is raised to the submitter.
         """
         if not session.cost_bytes:
-            session.cost_bytes = estimate_query_bytes(
+            session.cost_base = estimate_query_bytes(
                 session.query, self.working_set_factor)
+            session.admission_key = query_learn_key(session.query)
+            session.cost_bytes = session.cost_base
         with self._lock:
+            ratio = (self._learned.get(session.admission_key)
+                     if session.admission_key else None)
+            if ratio is not None and session.cost_base:
+                session.cost_bytes = session.cost_base * ratio
             if self._fits(session.cost_bytes) and not self._backlog:
                 self._admit(session)
                 return "admitted"
@@ -176,6 +219,41 @@ class AdmissionController:
                 admitted.append(head)
             return admitted
 
+    def observe(self, session: QuerySession) -> None:
+        """Close the estimate-vs-reality loop for one finished query.
+
+        Streaming runs measure their actual peak working set (the
+        ``peak_working_set_bytes`` gauge in the runner's info); the ratio
+        of that observed peak (re-inflated by ``working_set_factor``, the
+        same headroom the static estimate carries for unmeasured shuffle
+        intermediates) to the query's *base* estimate becomes an EWMA-
+        learned correction for the query's plan shape. The next submission
+        of the same shape is admitted against the corrected estimate —
+        systematically over-estimated shapes stop hogging budget,
+        under-estimated ones stop over-committing the mesh. Ratios are
+        clamped to ``_RATIO_BOUNDS``; queries without a learn key or a
+        measured peak (eager thunks, failed runs) teach nothing."""
+        key = getattr(session, "admission_key", None)
+        base = getattr(session, "cost_base", 0.0)
+        peak = (session.info or {}).get("peak_working_set_bytes")
+        if not key or not base or not peak:
+            return
+        lo, hi = _RATIO_BOUNDS
+        obs = min(max(float(peak) * self.working_set_factor / base, lo), hi)
+        with self._lock:
+            prev = self._learned.get(key)
+            self._learned[key] = (obs if prev is None else
+                                  (1.0 - _EWMA_WEIGHT) * prev
+                                  + _EWMA_WEIGHT * obs)
+            self.observed_total += 1
+
+    def learned_ratio(self, query) -> float | None:
+        """The current correction ratio for ``query``'s plan shape (None
+        when nothing has been learned yet)."""
+        key = query_learn_key(query)
+        with self._lock:
+            return self._learned.get(key) if key else None
+
     def backlog_depth(self) -> int:
         """Current number of queued (not yet admitted) sessions."""
         with self._lock:
@@ -196,4 +274,6 @@ class AdmissionController:
                 "admitted_total": self.admitted_total,
                 "queued_total": self.queued_total,
                 "rejected_total": self.rejected_total,
+                "learned_keys": len(self._learned),
+                "observed_total": self.observed_total,
             }

@@ -44,6 +44,7 @@ import threading
 import time
 
 from ..core.api import DDF
+from ..obs import trace as _trace
 from ..plan.frame import LazyDDF
 from ..stream.runner import StreamExecution
 from .session import QueryCancelled, QuerySession, QueryState
@@ -105,13 +106,14 @@ def _steps_for(session: QuerySession):
 class _Active:
     """Scheduler-internal per-query run state."""
 
-    __slots__ = ("session", "gen", "deficit", "cost_est")
+    __slots__ = ("session", "gen", "deficit", "cost_est", "t_start")
 
     def __init__(self, session: QuerySession, gen):
         self.session = session
         self.gen = gen
         self.deficit = 0.0
         self.cost_est = 0.0
+        self.t_start: float | None = None  # trace clock, first morsel
 
 
 class MorselScheduler:
@@ -201,6 +203,13 @@ class MorselScheduler:
     def _finish(self, entry: _Active, state: str, result=None, error=None,
                 info=None) -> None:
         entry.session._finish(state, result=result, error=error, info=info)
+        if _trace.enabled() and entry.t_start is not None:
+            # retroactive query-lifetime span: stack spans would misnest
+            # across interleaved queries on the one driver thread
+            s = entry.session
+            _trace.complete("service.query", entry.t_start, qid=s.qid,
+                            label=s.label, state=state, morsels=s.morsels,
+                            device_s=s.device_s)
         if self._on_finish is not None:
             self._on_finish(entry.session)
 
@@ -233,9 +242,11 @@ class MorselScheduler:
         if s.state == QueryState.ADMITTED:
             s._transition(QueryState.RUNNING)
             s.started_at = time.monotonic()
+            entry.t_start = _trace.now()
         t0 = time.perf_counter()
         try:
-            next(entry.gen)
+            with _trace.span("service.morsel", qid=s.qid):
+                next(entry.gen)
         except StopIteration as e:
             out, info = e.value if e.value is not None else (None, {})
             self._finish(entry, QueryState.DONE, result=out, info=info)

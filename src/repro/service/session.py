@@ -94,6 +94,8 @@ class QuerySession:
         self.label = label or qid
         self.state = QueryState.PENDING
         self.cost_bytes = 0.0
+        self.cost_base = 0.0  # pre-correction admission estimate
+        self.admission_key: str | None = None  # plan-shape learning key
         self.morsels = 0
         self.device_s = 0.0
         self.info: dict = {}

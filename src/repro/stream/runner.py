@@ -72,10 +72,10 @@ import dataclasses
 import hashlib
 import itertools
 import queue
-import re
 import shutil
 import tempfile
 import threading
+import time
 from typing import Callable, Iterator, Mapping
 
 import jax
@@ -94,6 +94,9 @@ from ..data.dataset import (
     normalize_schema,
     read_rows,
 )
+from ..obs import metrics as _metrics
+from ..obs import model_check as _model
+from ..obs import trace as _trace
 from ..plan import executor, optimizer
 from ..plan.logical import (
     Fused,
@@ -110,7 +113,8 @@ from ..plan.logical import (
     Source,
     Unique,
     WithColumn,
-    format_plan,
+    plan_signature,
+    row_bytes_of,
     schema_of,
     walk,
 )
@@ -424,8 +428,9 @@ class _CkptSession:
             "checkpoint_publish",
             lambda: self.store.save(step, manifest, arrays))
         self._step += 1
-        self.runner.info["checkpoints"] = int(
-            self.runner.info.get("checkpoints", 0)) + 1
+        self.runner.metrics.counter("checkpoints").add(1)
+        _trace.instant("stream.checkpoint", step=step,
+                       arrays=len(arrays))
 
     def finish(self) -> None:
         """Query succeeded: snapshots and spill are crash artifacts only."""
@@ -461,11 +466,17 @@ class _Runner:
         # backend the stream executed under.
         from ..kernels import registry as _kernel_registry
 
-        self.info: dict = {"batches": 0,
-                           "kernel_backend": _kernel_registry.get_backend()}
+        self.info: dict = {"kernel_backend": _kernel_registry.get_backend()}
+        # typed counters for everything numeric the run used to keep as
+        # ad-hoc info keys (batches, retries:<site>, checkpoints, peak
+        # working set). Parenting under the global registry means process
+        # totals aggregate across runs while each run reads its own values;
+        # the info dict keeps only non-metric payloads (arrays, strings).
+        self.metrics = _metrics.MetricsRegistry(parent=_metrics.registry(),
+                                                prefix="stream.")
+        self.metrics.counter("batches")  # pre-create: info always has it
         self.retry = _recovery.RetryPolicy(max_retries=int(max_retries),
                                            backoff_s=float(retry_backoff_s))
-        self._retry_lock = threading.Lock()
         self._stage = 0
         if resume and checkpoint_dir is None:
             raise ValueError("resume=True requires checkpoint_dir")
@@ -476,9 +487,11 @@ class _Runner:
 
     # -- fault sites + retry ---------------------------------------------------
     def _note_retry(self, site: str, attempt: int, exc: BaseException) -> None:
-        with self._retry_lock:
-            key = f"retries:{site}"
-            self.info[key] = int(self.info.get(key, 0)) + 1
+        # Counter.add is internally locked — safe from the prefetch thread
+        # and the service driver thread without a runner-level lock.
+        self.metrics.counter(f"retries:{site}").add(1)
+        _trace.instant("stream.retry", site=site, attempt=int(attempt),
+                       error=type(exc).__name__)
 
     def _retry_call(self, site: str, fn):
         """Retry ``fn`` under the site's policy (fault check is inside fn)."""
@@ -495,9 +508,19 @@ class _Runner:
         return self._retry_call(site, unit)
 
     # -- info bookkeeping ------------------------------------------------------
-    def _fold_aux(self, aux_list: list) -> None:
+    def _fold_aux(self, aux_list: list, scope: str | None = None) -> None:
+        """Fold per-batch aux dicts into run info.
+
+        ``scope`` namespaces the keys (``"{scope}:{k}"``). Aux keys are
+        ``n{i}:{name}`` with ``i`` the node's post-order index *within that
+        stage's plan* — two different stages can both emit ``n0:overflow_agg``
+        for unrelated operators, and on a resumed run the restored info
+        already holds the crashed process's totals. Scoping keeps those
+        identically named counters from alias-summing (double counting)."""
         for aux in aux_list:
             for k, v in aux.items():
+                if scope is not None:
+                    k = f"{scope}:{k}"
                 v = np.asarray(v)
                 if "overflow" in k:
                     prev = self.info.get(k)
@@ -516,10 +539,20 @@ class _Runner:
                     "op, lower batch_rows, or pass strict_overflow=False to "
                     "accept eager-style truncation semantics.")
 
+    def _info_view(self) -> dict:
+        """The run-info mapping handed to callers: non-metric payloads from
+        the info dict merged with this run's metric values (counters plus
+        any set gauges). The metrics registry is the single source of truth
+        for every numeric counter."""
+        out = dict(self.info)
+        out.update(self.metrics.scalars())
+        return out
+
     def _info_state(self) -> tuple[dict, dict]:
-        """Split the info dict into (JSON-able scalars, numpy arrays)."""
+        """Split run info into (JSON-able scalars, numpy arrays) for the
+        checkpoint manifest."""
         scalars, arrays = {}, {}
-        for k, v in self.info.items():
+        for k, v in self._info_view().items():
             if isinstance(v, np.ndarray):
                 arrays[k] = v
             elif isinstance(v, (np.integer, np.floating)):
@@ -528,8 +561,28 @@ class _Runner:
                 scalars[k] = v
         return scalars, arrays
 
+    # gauge-typed info keys: restored with .restore (set, don't accumulate)
+    _GAUGE_KEYS = frozenset({"peak_working_set_bytes"})
+
     def _info_restore(self, scalars: dict, arrays: dict) -> None:
-        self.info.update(scalars)
+        """Rehydrate run info from a checkpoint manifest.
+
+        Numeric scalars route into this run's metric registry via
+        ``restore`` — a *local-only* set. The restored counts were earned
+        by the crashed process; re-adding them here would propagate to the
+        parent (process-global) registry a second time and double-count
+        identically named counters across the resume. ``kernel_backend``
+        stays whatever the *current* process runs under."""
+        for k, v in scalars.items():
+            if k == "kernel_backend":
+                continue
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                if k in self._GAUGE_KEYS:
+                    self.metrics.gauge(k).restore(v)
+                else:
+                    self.metrics.counter(k).restore(int(v))
+            else:
+                self.info[k] = v
         self.info.update(arrays)
 
     # -- checkpoint/stage machinery --------------------------------------------
@@ -538,24 +591,8 @@ class _Runner:
         plan shape, the worker count, and every scanned dataset's schema +
         chunk list. Resuming under a different key is refused — the cursor
         would index different data."""
-        # strip object addresses from the rendering (predicate closures
-        # print as `<function ... at 0x...>`) so the key is process-stable
-        text = re.sub(r"0x[0-9a-f]+", "0x", format_plan(self.root))
-        # source/scan ids are process-global counters: renumber them by
-        # first appearance so re-building the same pipeline (or restarting
-        # the process) yields the same key
-        seen: dict[str, int] = {}
-
-        def renum(m):
-            s = m.group(1)
-            if s not in seen:
-                seen[s] = len(seen)
-            return f"#{seen[s]}"
-
-        text = re.sub(r"#(\d+)", renum, text)
-        text = re.sub(r"sid=(\d+)", lambda m: "sid=" + renum(m)[1:], text)
         h = hashlib.sha256()
-        h.update(text.encode())
+        h.update(plan_signature(self.root).encode())
         h.update(f"P={self.P}".encode())
         done = set()
         for n in walk(self.root):
@@ -570,16 +607,17 @@ class _Runner:
     def _stage_enter(self, kind: str):
         """Allocate the next stage id (deterministic plan-order numbering).
 
-        Returns ``(stage, completed_entry, active_resume)``: all None when
-        no checkpoint session is active; ``completed_entry`` when this
+        Returns ``(stage, completed_entry, active_resume)``. The stage id
+        is always allocated — it scopes aux counters and trace spans even
+        without a checkpoint session; ``completed_entry`` is set when this
         stage already finished in the snapshot (the counter fast-forwards
         past any child stages via the recorded ``stage_end``);
         ``active_resume = (meta, arrays)`` when the snapshot died inside
         this stage."""
-        if self.session is None:
-            return None, None, None
         i = self._stage
         self._stage += 1
+        if self.session is None:
+            return i, None, None
         entry = self.session.completed.get(i)
         if entry is not None:
             if entry["meta"].get("kind") != kind:
@@ -600,6 +638,31 @@ class _Runner:
     def _tick(self) -> None:
         if self.session is not None:
             self.session.tick()
+
+    def _stage_span(self, stage, kind: str, t0: float, **attrs) -> None:
+        """Record a retroactive span for one finished streaming stage.
+
+        Stage drivers are generators the query service suspends between
+        morsels, so a stack-scoped span would misnest across interleaved
+        queries — a ``trace.complete`` from captured timestamps cannot.
+        The duration therefore includes any time spent suspended."""
+        if _trace.enabled():
+            _trace.complete("stream.stage", t0, kind=kind, stage=stage,
+                            **attrs)
+
+    def _resident_bytes(self) -> float:
+        """Padded bytes of the always-resident inputs (non-scanned
+        sources)."""
+        return sum(float(d.capacity) * self.P * row_bytes_of(_ddf_schema(d))
+                   for d in self.sources.values())
+
+    def _note_working_set(self, extra_bytes: float) -> None:
+        """Fold one observation into the run's peak-working-set gauge: the
+        resident sources plus the active stage's padded batch/carry/bucket
+        tables. The admission controller learns per-query-key corrections
+        from this peak (see ``repro.service.admission``)."""
+        self.metrics.gauge("peak_working_set_bytes").max(
+            self._resident_bytes() + float(extra_bytes))
 
     # -- DDF <-> checkpoint arrays ---------------------------------------------
     def _ddf_arrays(self, ddf: DDF) -> tuple[dict, dict]:
@@ -661,13 +724,33 @@ class _Runner:
         for k in range(start, nb):
             lo, hi = k * batch_rows, min((k + 1) * batch_rows, total)
 
-            def decode(lo=lo, hi=hi):
+            def decode(lo=lo, hi=hi, k=k):
+                # spans carry the prefetch thread's tid when prefetching —
+                # decode/compute overlap is visible in the trace timeline
+                t0 = _trace.now()
                 data = read_rows(man, lo, hi, columns=read_cols)
                 for fn in scan.pred_fns:
                     mask = np.asarray(fn(data)).astype(bool)
                     data = {n: v[mask] for n, v in data.items()}
                 if read_cols is not cols:
                     data = {n: data[n] for n in cols}
+                if _trace.enabled():
+                    out_rows = (len(next(iter(data.values())))
+                                if data else hi - lo)
+                    nbytes = sum(int(v.nbytes) for v in data.values())
+                    _trace.complete("stream.decode", t0, batch=k,
+                                    rows_read=hi - lo, rows_out=out_rows,
+                                    bytes=nbytes)
+                    pred = _model.scan_prediction(
+                        hi - lo, row_bytes_of(schema_of(scan)), self.P,
+                        self.params)
+                    _model.record(
+                        "partitioned_io", "stream.Scan", pred["predicted_s"],
+                        _trace.now() - t0,
+                        predicted_rows=pred["predicted_rows"],
+                        observed_rows=out_rows,
+                        predicted_bytes=pred["predicted_bytes"],
+                        observed_bytes=nbytes, meta={"batch": k})
                 return data
 
             yield k, self._guarded("chunk_decode", decode)
@@ -677,6 +760,19 @@ class _Runner:
         streamable subtree (``start`` skips already-folded batches on
         resume — the scan cursor)."""
         plan, scan_opt, man, batch_rows, srcs = prep or self._prep(root)
+        batch_bytes = (scan_opt.capacity * self.P
+                       * row_bytes_of(schema_of(scan_opt)))
+        self._note_working_set(batch_bytes)
+        preds = None
+        if _trace.enabled():
+            src_rows = executor.source_row_counts(srcs)
+            src_rows[scan_opt.sid] = max(min(man.num_rows, batch_rows), 1)
+            # the scan's partitioned_io cost is host-side decode, recorded
+            # per batch in _host_batches — keep only the device program's
+            # patterns here or scans would be double-counted
+            preds = [p for p in _model.predict_plan(plan, self.P, src_rows,
+                                                    self.params)
+                     if p["pattern"] != "partitioned_io"]
         gen = self._host_batches(man, scan_opt, batch_rows, start=start)
         if self.prefetch:
             gen = _prefetched(gen)
@@ -687,19 +783,30 @@ class _Runner:
                 return executor.run_planned(
                     plan, self.ctx, {**srcs, scan_opt.sid: bddf})
 
-            out, aux = self._guarded("device_op", run)
-            self.info["batches"] = int(self.info.get("batches", 0)) + 1
+            if preds is not None:
+                t0 = _trace.now()
+                out, aux = self._guarded("device_op", run)
+                jax.block_until_ready(out.counts)
+                t1 = _trace.now()
+                rows = int(np.asarray(out.counts).sum())
+                _trace.complete("stream.device_op", t0, t1, batch=k,
+                                ops=len(preds), out_rows=rows)
+                _model.record_program(preds, t1 - t0, observed_rows=rows,
+                                      op_prefix="stream.")
+            else:
+                out, aux = self._guarded("device_op", run)
+            self.metrics.counter("batches").add(1)
             yield k, out, aux
 
     # -- streamable whole-plan paths -------------------------------------------
-    def _stream_host(self, root: Node, start: int = 0,
-                     prep=None) -> Iterator[tuple]:
+    def _stream_host(self, root: Node, start: int = 0, prep=None,
+                     scope: str | None = None) -> Iterator[tuple]:
         # aux folds per batch: a strict_overflow violation raises BEFORE the
         # truncated batch is handed out (and early iterator abandon cannot
         # skip the check). The per-batch device sync this implies is free
         # here — to_numpy() syncs on the same results anyway.
         for k, out, aux in self._iter_batches(root, prep=prep, start=start):
-            self._fold_aux([aux])
+            self._fold_aux([aux], scope=scope)
             yield k, out.to_numpy()
 
     def _from_host(self, host: dict, schema: tuple) -> DDF:
@@ -714,6 +821,7 @@ class _Runner:
         stage, entry, resume = self._stage_enter("concat")
         if entry is not None:
             return self._restore_ddf(entry)
+        t0 = _trace.now()
         schema = schema_of(root)
         outs: list[dict] = []
         cursor = {"k": 0}
@@ -731,9 +839,10 @@ class _Runner:
             return ({"k": cursor["k"]},
                     {f"acc/{n}": v for n, v in host.items()})
 
-        if stage is not None:
+        if self.session is not None:
             self.session.set_active(stage, snap)
-        for k, host in self._stream_host(root, start=cursor["k"]):
+        for k, host in self._stream_host(root, start=cursor["k"],
+                                         scope=f"s{stage}"):
             outs.append(host)
             cursor["k"] = k + 1
             self._tick()
@@ -741,6 +850,7 @@ class _Runner:
         host = {n: np.concatenate([o[n] for o in outs])
                 for n, _, _ in schema} if outs else {}
         out = self._from_host(host, schema)
+        self._stage_span(stage, "concat", t0, batches=cursor["k"])
         arrays, meta = self._ddf_arrays(out)
         self._stage_done(stage, "concat", meta, arrays)
         return out
@@ -785,20 +895,25 @@ class _Runner:
             state["carry"] = self._ddf_from_arrays(rarr)
         else:
             state["carry"] = self._empty_carry(schema_of(plan), cap)
+        # active set here = the carry table plus one batch's partial result
+        self._note_working_set((cap + prep[1].capacity) * self.P
+                               * row_bytes_of(schema_of(plan)))
 
         def snap():
             arrays, _ = self._ddf_arrays(state["carry"])
             return {"k": state["k"], "cap": cap}, arrays
 
-        if stage is not None:
+        if self.session is not None:
             self.session.set_active(stage, snap)
+        scope = f"s{stage}"
         for k, out, aux in self._iter_batches(batch_root, prep=prep,
                                               start=state["k"]):
             carry, carry_ov = state["carry"]._run(merge_key + (cap,),
                                                   merge(cap), out)
             state["carry"] = carry
             self._fold_aux([aux, {"carry:overflow_carry":
-                                  carry_ov["overflow_carry"]}])
+                                  carry_ov["overflow_carry"]}],
+                           scope=scope)
             state["k"] = k + 1
             self._tick()
             yield "carry"
@@ -808,6 +923,7 @@ class _Runner:
         stage, entry, resume = self._stage_enter("groupby")
         if entry is not None:
             return self._restore_ddf(entry)
+        t0 = _trace.now()
         aggs = {k: v for k, v in B.aggs}
         batch_root = dataclasses.replace(B, emit_partials=True, quota=None,
                                          capacity=None, num_chunks=None)
@@ -827,6 +943,7 @@ class _Runner:
             stage=stage, resume=resume)
         out = carry._run(("stream-gb-fin", aggs_t, cap),
                          lambda comm, t: finalize_groupby(t, aggs))
+        self._stage_span(stage, "groupby", t0)
         arrays, meta = self._ddf_arrays(out)
         self._stage_done(stage, "groupby", meta, arrays)
         return out
@@ -835,6 +952,7 @@ class _Runner:
         stage, entry, resume = self._stage_enter("unique")
         if entry is not None:
             return self._restore_ddf(entry)
+        t0 = _trace.now()
         batch_root = dataclasses.replace(B, quota=None, capacity=None,
                                          num_chunks=None)
         subset = B.subset
@@ -850,6 +968,7 @@ class _Runner:
         carry, _ = yield from self._run_carry(
             B, batch_root, ("stream-uq-merge", subset), merge,
             stage=stage, resume=resume)
+        self._stage_span(stage, "unique", t0)
         arrays, meta = self._ddf_arrays(carry)
         self._stage_done(stage, "unique", meta, arrays)
         return carry
@@ -894,10 +1013,11 @@ class _Runner:
         stage, entry, resume = self._stage_enter("sort")
         if entry is not None:
             return self._restore_ddf(entry)
+        t0 = _trace.now()
         prefix = B.child
         schema = schema_of(prefix)
         cursor = {"k": 0}
-        if stage is not None:
+        if self.session is not None:
             if resume is not None:
                 rmeta, rarr = resume
                 cursor["k"] = int(rmeta["k"])
@@ -919,10 +1039,11 @@ class _Runner:
             return ({"k": cursor["k"], "chunks": [[f, int(r)] for f, r in chunks]},
                     {f"buf/{n}": v for n, v in buf.items()})
 
-        if stage is not None:
+        if self.session is not None:
             self.session.set_active(stage, snap)
         try:
-            for k, host in self._stream_host(prefix, start=cursor["k"]):
+            for k, host in self._stream_host(prefix, start=cursor["k"],
+                                             scope=f"s{stage}"):
                 self._spill_append(writer, host)
                 cursor["k"] = k + 1
                 self._tick()
@@ -942,6 +1063,7 @@ class _Runner:
         order = np.argsort(key, kind="stable")
         host = {k: v[order] for k, v in host.items()}
         out = self._from_host(host, schema)
+        self._stage_span(stage, "sort", t0, batches=cursor["k"])
         arrays, meta = self._ddf_arrays(out)
         self._stage_done(stage, "sort", meta, arrays)
         return out
@@ -959,8 +1081,9 @@ class _Runner:
                                     tuple((f, int(r)) for f, r in ch))
                     for d, ch in zip(entry["meta"]["dirs"],
                                      entry["meta"]["chunks"])]
+        t0 = _trace.now()
         cursor = {"k": 0}
-        if stage is not None:
+        if self.session is not None:
             chunks_by_b = [None] * nb
             buf_by_b: list = [None] * nb
             if resume is not None:
@@ -988,9 +1111,10 @@ class _Runner:
                     arrays[f"b{b}/{n}"] = v
             return {"k": cursor["k"], "chunks": metas}, arrays
 
-        if stage is not None:
+        if self.session is not None:
             self.session.set_active(stage, snap)
-        for k, host in self._stream_host(side, start=cursor["k"]):
+        for k, host in self._stream_host(side, start=cursor["k"],
+                                         scope=f"s{stage}"):
             cursor["k"] = k + 1
             if len(next(iter(host.values()))):
                 h = _np_hash_columns(host, on) % np.uint32(nb)
@@ -1002,6 +1126,8 @@ class _Runner:
             self._tick()
             yield "bucket-spill"
         mans = [w.close() for w in writers]
+        self._stage_span(stage, "buckets", t0, batches=cursor["k"],
+                         buckets=nb)
         self._stage_done(stage, "buckets",
                          {"dirs": [m.directory for m in mans],
                           "chunks": [[[f, int(r)] for f, r in m.chunks]
@@ -1033,6 +1159,7 @@ class _Runner:
         stage, entry, resume = self._stage_enter("bucketjoin")
         if entry is not None:
             return self._restore_ddf(entry)
+        t0 = _trace.now()
         schema = schema_of(B)
         cap_l = max(max((m.num_rows for m in mans_l), default=0) // self.P + 1, 1)
         cap_r = max(max((m.num_rows for m in mans_r), default=0) // self.P + 1, 1)
@@ -1058,10 +1185,16 @@ class _Runner:
                      "cap_out": state["cap_out"]},
                     {f"acc/{n}": v for n, v in host.items()})
 
-        if stage is not None:
+        if self.session is not None:
             self.session.set_active(stage, snap)
+        rb_l = row_bytes_of(schema_of(B.left))
+        rb_r = row_bytes_of(schema_of(B.right))
+        rb_out = row_bytes_of(schema)
         try:
             for j in range(state["j"], nb):
+                self._note_working_set(
+                    self.P * (cap_l * rb_l + cap_r * rb_r
+                              + state["cap_out"] * rb_out))
                 ml, mr = mans_l[j], mans_r[j]
                 if ml.num_rows == 0 or mr.num_rows == 0:
                     state["j"] = j + 1
@@ -1091,7 +1224,7 @@ class _Runner:
                     ovs = sum(int(np.sum(v)) for k, v in aux.items()
                               if "overflow" in k and "overflow_join" not in k)
                     if not ovj and not ovs:
-                        self._fold_aux([aux])
+                        self._fold_aux([aux], scope=f"s{stage}")
                         break
                     if ovj:
                         state["cap_out"] *= 2
@@ -1108,6 +1241,7 @@ class _Runner:
         host = {n: np.concatenate([o[n] for o in outs])
                 for n, _, _ in schema} if outs else {}
         out = self._from_host(host, schema)
+        self._stage_span(stage, "bucketjoin", t0, buckets=nb)
         arrays, meta = self._ddf_arrays(out)
         self._stage_done(stage, "bucketjoin", meta, arrays)
         return out
@@ -1149,7 +1283,7 @@ class _Runner:
             else:
                 kids.append(c)
         out, aux = self._collect_scanfree(B.with_children(kids))
-        self._fold_aux([aux])
+        self._fold_aux([aux], scope=f"s{stage}")
         yield "device"
         arrays, meta = self._ddf_arrays(out)
         self._stage_done(stage, "blocking", meta, arrays)
@@ -1192,7 +1326,7 @@ class _Runner:
         out = yield from self._collect_node(self.root)
         if self.session is not None:
             self.session.finish()
-        return out, dict(self.info)
+        return out, self._info_view()
 
     def run(self):
         return _drain(self.steps())
@@ -1203,10 +1337,11 @@ class _Runner:
             stage, entry, resume = self._stage_enter("emit")
             if entry is None:
                 cursor = {"k": int(resume[0]["k"]) if resume is not None else 0}
-                if stage is not None:
+                if self.session is not None:
                     self.session.set_active(
                         stage, lambda: ({"k": cursor["k"]}, {}))
-                for k, host in self._stream_host(root, start=cursor["k"]):
+                for k, host in self._stream_host(root, start=cursor["k"],
+                                                 scope=f"s{stage}"):
                     yield host
                     cursor["k"] = k + 1
                     self._tick()
@@ -1302,8 +1437,11 @@ def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,
 
     Returns:
       ``(result DDF, info dict)`` — info carries ``batches`` plus summed
-      per-batch overflow counters, ``retries:<site>`` counts, and
-      ``checkpoints`` published.
+      per-batch overflow counters (namespaced ``s<stage>:`` per streaming
+      stage), ``retries:<site>`` counts, ``checkpoints`` published, and
+      the observed ``peak_working_set_bytes`` (which the query service's
+      admission controller learns from). The numeric counters come from a
+      per-run ``repro.obs`` metrics registry parented to the global one.
     """
     r = _Runner(lazy, batch_rows=batch_rows, prefetch=prefetch,
                 carry_capacity=carry_capacity, spill_dir=spill_dir,
