@@ -27,6 +27,11 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
                                     results — plus per-pattern cost-model
                                     error reports and the disabled-mode
                                     null-span cost)
+  ISSUE 9  -> bench_stats          (per-chunk sketches: selective-scan
+                                    chunk-skip speedup with bit-identical
+                                    output, and shuffle-quota prediction
+                                    error with vs without adaptive
+                                    mid-stream re-planning on skewed keys)
 """
 
 import os
@@ -47,6 +52,7 @@ BENCHES = [
     "benchmarks.bench_recovery",
     "benchmarks.bench_service",
     "benchmarks.bench_obs",
+    "benchmarks.bench_stats",
 ]
 
 

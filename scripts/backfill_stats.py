@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Backfill per-chunk statistics sketches into existing dataset manifests.
+
+Datasets written before the statistics subsystem (ISSUE 9) — or written
+with ``DatasetWriter(..., stats=False)``, e.g. resumed spill writers —
+carry no per-chunk sketches, so scans over them cannot skip chunks or
+estimate selectivities. This script recomputes the sketches by decoding
+each chunk once and atomically rewrites ``manifest.json`` in place
+(tmp-file + ``os.replace``; a crash mid-backfill leaves the old manifest
+intact). Chunk ``.npz`` payloads are never touched, and the stats field
+rides outside cache/checkpoint identity, so backfilling is always safe.
+
+Usage::
+
+    python scripts/backfill_stats.py DATASET_DIR [DATASET_DIR ...]
+        [--k 128] [--force]
+
+``--k`` sets the KMV sketch size (distinct-count accuracy ~ 1/sqrt(k));
+``--force`` recomputes even when the manifest already has sketches
+(e.g. to change ``k``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Backfill per-chunk sketches into dataset manifests")
+    ap.add_argument("directories", nargs="+", metavar="DATASET_DIR",
+                    help="dataset directories (each containing manifest.json)")
+    ap.add_argument("--k", type=int, default=None,
+                    help="KMV sketch size (default: repro.stats.DEFAULT_KMV_K)")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even if sketches already exist")
+    args = ap.parse_args(argv)
+
+    from repro.stats import DEFAULT_KMV_K, backfill_stats
+
+    k = args.k if args.k is not None else DEFAULT_KMV_K
+    status = 0
+    for directory in args.directories:
+        try:
+            man = backfill_stats(directory, k=k, force=args.force)
+        except (FileNotFoundError, ValueError) as e:
+            print(f"{directory}: ERROR: {e}", file=sys.stderr)
+            status = 1
+            continue
+        if man.stats is None:
+            print(f"{directory}: no chunks to sketch (empty dataset)")
+        else:
+            print(f"{directory}: {len(man.stats)} chunk sketch(es) "
+                  f"(k={man.stats_k}, {man.num_rows} rows)")
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

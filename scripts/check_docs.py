@@ -29,7 +29,11 @@ Fails (exit 1) if:
      service knob (``max_running`` / ``memory_budget_bytes`` / ...), or
   9. ``docs/OBSERVABILITY.md`` is missing, or does not mention every
      ``repro.obs`` export, the engine's metric and span names, and the
-     tracing/profiling knobs (``REPRO_TRACE`` / ``profile=True`` / ...).
+     tracing/profiling knobs (``REPRO_TRACE`` / ``profile=True`` / ...), or
+  10. ``docs/STATISTICS.md`` is missing, or does not mention every
+     ``repro.stats`` export, the writer/stream statistics knobs
+     (``stats_k`` / ``adaptive`` / ``replan_every``), and the
+     cost-model adaptation constants (``ADAPTIVE_*``).
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -89,6 +93,11 @@ CORE_MODULES = [
     "repro.obs.trace",
     "repro.obs.metrics",
     "repro.obs.model_check",
+    # statistics: sketches, estimation, adaptive re-planning (ISSUE 9)
+    "repro.stats",
+    "repro.stats.sketch",
+    "repro.stats.estimate",
+    "repro.stats.adaptive",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -227,6 +236,21 @@ def missing_obs_docs() -> list:
     return missing_doc_mentions("docs/OBSERVABILITY.md", symbols)
 
 
+def missing_stats_docs() -> list:
+    """Return problems with docs/STATISTICS.md coverage of repro.stats:
+    every package export, the writer/stream knobs, and the cost-model
+    adaptation constants."""
+    import repro.stats as stats_pkg
+
+    symbols = (list(stats_pkg.__all__)
+               + ["stats_k", "adaptive", "replan_every", "chunks_skipped",
+                  "chunks_decoded", "replans", "partition_histogram",
+                  "ADAPTIVE_REPLAN_EVERY", "ADAPTIVE_DRIFT",
+                  "ADAPTIVE_QUOTA_SAFETY", "ADAPTIVE_CAPACITY_SAFETY",
+                  "backfill_stats", "shuffle_quota"])
+    return missing_doc_mentions("docs/STATISTICS.md", symbols)
+
+
 def main() -> int:
     failures = missing_docstrings()
     if failures:
@@ -273,14 +297,19 @@ def main() -> int:
         print("Observability documentation problems:")
         for f in obs_failures:
             print(f"  - {f}")
+    stats_failures = missing_stats_docs()
+    if stats_failures:
+        print("Statistics documentation problems:")
+        for f in stats_failures:
+            print(f"  - {f}")
     if failures or doc_failures or lazy_failures or stream_failures \
             or fault_failures or expr_failures or kernel_failures \
-            or service_failures or obs_failures:
+            or service_failures or obs_failures or stats_failures:
         return 1
     print("check_docs: all exported core+plan+stream+expr+kernel+testing+"
-          "service+obs symbols documented; docs cover every pattern, node "
-          "type, rewrite pass, streaming, fault-tolerance, expression, "
-          "kernel, service and observability export")
+          "service+obs+stats symbols documented; docs cover every pattern, "
+          "node type, rewrite pass, streaming, fault-tolerance, expression, "
+          "kernel, service, observability and statistics export")
     return 0
 
 

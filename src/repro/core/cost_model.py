@@ -38,6 +38,10 @@ __all__ = [
     "choose_shuffle_algorithm",
     "choose_chunk_count",
     "choose_batch_rows",
+    "ADAPTIVE_REPLAN_EVERY",
+    "ADAPTIVE_DRIFT",
+    "ADAPTIVE_QUOTA_SAFETY",
+    "ADAPTIVE_CAPACITY_SAFETY",
 ]
 
 
@@ -102,6 +106,29 @@ _KERNEL_DTYPES = {
 # smaller block because its exactness contract sizes the one-hot matmul as
 # (block x block) (dense contiguous segment ids span <= block per block).
 _KERNEL_BLOCKS = {"hash_partition": 1024, "segment_reduce": 256}
+
+
+# -- Adaptive mid-stream re-planning knobs (ISSUE 9) -----------------------------
+#
+# The streaming runner's AdaptiveController (repro.stats.adaptive) corrects
+# quota/capacity for later morsels from observed batch histograms. These are
+# policy constants, not calibration: re-plans recompile the pipeline for new
+# static shapes, so the controller acts only at a coarse cadence and only on
+# substantial drift, and always leaves safety headroom over observed maxima
+# (an undersized buffer raises under strict_overflow; an oversized one just
+# wastes a bounded slice of memory).
+
+#: batches between adaptive re-plan decision points
+ADAPTIVE_REPLAN_EVERY = 4
+
+#: relative quota drift (|target - current| / current) that triggers a re-plan
+ADAPTIVE_DRIFT = 0.25
+
+#: headroom multiplier over the max observed per-partition histogram cell
+ADAPTIVE_QUOTA_SAFETY = 1.5
+
+#: headroom multiplier over the max observed per-worker partial-group count
+ADAPTIVE_CAPACITY_SAFETY = 2.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -147,11 +147,22 @@ def _adjacent_new_group(sorted_table: Table, key_columns: Sequence[str]) -> jax.
 
 # -- unique (hash dedup, paper Table 4: O(n), output O(nC)) --------------------
 
-def local_unique(table: Table, key_columns: Sequence[str], capacity: int | None = None) -> Table:
-    """Deduplicate rows by key columns (first occurrence wins; hash-exact)."""
+def local_unique(table: Table, key_columns: Sequence[str],
+                 capacity: int | None = None, with_overflow: bool = False):
+    """Deduplicate rows by key columns (first occurrence wins; hash-exact).
+
+    ``with_overflow=True`` additionally returns how many distinct rows did
+    not fit in ``capacity`` (``compact`` truncates silently otherwise —
+    the distributed wrappers surface this so ``strict_overflow`` can turn
+    a capacity misestimate into a loud error instead of dropped rows)."""
     st, _, _ = _sorted_by_key_hash(table, key_columns)
     keep = _adjacent_new_group(st, key_columns) & valid_mask(st)
-    return compact(st, keep, capacity=capacity)
+    out = compact(st, keep, capacity=capacity)
+    if not with_overflow:
+        return out
+    cap_out = st.capacity if capacity is None else capacity
+    ov = jnp.maximum(jnp.sum(keep, dtype=jnp.int32) - cap_out, 0)
+    return out, ov
 
 
 # -- groupby (combine / reduce legs, paper §5.3.4) ------------------------------
@@ -187,7 +198,8 @@ def local_groupby(
     aggs: Mapping[str, Sequence[str]],
     capacity: int | None = None,
     merge: bool = False,
-) -> Table:
+    with_overflow: bool = False,
+):
     """Hash-groupby via sort + segment reduction. O(n log n) under XLA (the
     paper's O(n) hash table does not map to static shapes; the extra log n is
     a documented hardware-adaptation cost, DESIGN.md §2).
@@ -197,6 +209,10 @@ def local_groupby(
     distributed wrapper).
     merge=True: input columns are partials named <col>_<op>; re-reduces with
     the merge semantics (sum of sums, min of mins, ...).
+    with_overflow=True: additionally return how many groups did not fit in
+    ``capacity`` (``compact`` truncates silently otherwise; the distributed
+    wrappers surface this so ``strict_overflow`` turns a reduce-side
+    capacity misestimate into a loud error instead of dropped groups).
     """
     cap = table.capacity
     cap_out = cap if capacity is None else capacity
@@ -256,7 +272,10 @@ def local_groupby(
     ngroups = jnp.sum(is_new, dtype=jnp.int32)
     out = Table(out_cols, jnp.asarray(cap, jnp.int32))
     keep = jnp.arange(cap, dtype=jnp.int32) < ngroups
-    return compact(out, keep, capacity=cap_out)
+    out = compact(out, keep, capacity=cap_out)
+    if not with_overflow:
+        return out
+    return out, jnp.maximum(ngroups - cap_out, 0)
 
 
 def finalize_groupby(table: Table, aggs: Mapping[str, Sequence[str]]) -> Table:

@@ -159,7 +159,8 @@ def dist_groupby(
         state, merged across batches with ``local_groupby(merge=True)``.
 
     Returns:
-      (aggregated table, {"overflow_shuffle": rows dropped at the shuffle}).
+      (aggregated table, {"overflow_shuffle": rows dropped at the shuffle,
+      "overflow_agg": groups dropped at the reduce-side ``capacity``}).
     """
     P = comm.size()
     if pre_combine:
@@ -168,12 +169,10 @@ def dist_groupby(
         partial = table
     dest = hash_partition_ids(partial, key_columns, P)
     shuf, ov = comm.shuffle(partial, dest, quota, num_chunks=num_chunks)
-    if pre_combine:
-        red = local_groupby(shuf, key_columns, aggs, capacity=capacity, merge=True)
-    else:
-        red = local_groupby(shuf, key_columns, aggs, capacity=capacity, merge=False)
+    red, ov_agg = local_groupby(shuf, key_columns, aggs, capacity=capacity,
+                                merge=pre_combine, with_overflow=True)
     out = finalize_groupby(red, aggs) if finalize else red
-    return out, {"overflow_shuffle": ov}
+    return out, {"overflow_shuffle": ov, "overflow_agg": ov_agg}
 
 
 def dist_unique(
@@ -189,14 +188,17 @@ def dist_unique(
     dedup (optional), hash-shuffle by key, local dedup of the merged rows.
 
     Args mirror :func:`dist_groupby`; ``num_chunks`` > 1 pipelines the
-    shuffle. Returns (deduplicated table, {"overflow_shuffle"}).
+    shuffle. Returns (deduplicated table, {"overflow_shuffle",
+    "overflow_agg"}) — ``overflow_agg`` counts distinct rows dropped at
+    the reduce-side ``capacity``.
     """
     P = comm.size()
     t = local_unique(table, key_columns) if pre_combine else table
     dest = hash_partition_ids(t, key_columns, P)
     shuf, ov = comm.shuffle(t, dest, quota, num_chunks=num_chunks)
-    out = local_unique(shuf, key_columns, capacity=capacity)
-    return out, {"overflow_shuffle": ov}
+    out, ov_agg = local_unique(shuf, key_columns, capacity=capacity,
+                               with_overflow=True)
+    return out, {"overflow_shuffle": ov, "overflow_agg": ov_agg}
 
 
 def dist_union(

@@ -16,7 +16,8 @@ import numpy as np
 
 from . import cost_model
 
-__all__ = ["PATTERNS", "Plan", "plan_join", "plan_groupby", "sampled_quota", "sampled_cardinality"]
+__all__ = ["PATTERNS", "Plan", "plan_join", "plan_groupby", "sampled_quota",
+           "sampled_cardinality", "quota_from_histogram"]
 
 # Pattern -> (operators, result semantic, communication ops) — paper Table 2.
 PATTERNS: dict[str, dict] = {
@@ -68,6 +69,28 @@ class Plan:
     num_chunks: int = 1
 
 
+def quota_from_histogram(
+    hist: np.ndarray,
+    capacity: int,
+    num_partitions: int,
+    sample_fraction: float = 1.0,
+    safety: float = 1.5,
+) -> int:
+    """Quota from a destination histogram (paper §5.4.2). ``hist`` counts
+    rows per destination partition — either a full histogram (the Pallas
+    ``hash_partition``/``partition_histogram`` kernel output, or the
+    streaming runner's host mirror; ``sample_fraction=1.0``) or one built
+    from a row sample scaled back up by ``sample_fraction``. The quota is
+    the (scaled) largest cell with ``safety`` headroom, clipped to
+    ``capacity`` and floored at 16."""
+    hist = np.asarray(hist)
+    if hist.size == 0 or hist.max() <= 0:
+        from .partition import default_quota
+        return default_quota(capacity, num_partitions)
+    est_max = hist.max() / max(sample_fraction, 1e-9)
+    return int(min(capacity, max(est_max * safety, 16)))
+
+
 def sampled_quota(
     dest_sample: np.ndarray,
     capacity: int,
@@ -82,8 +105,8 @@ def sampled_quota(
         from .partition import default_quota
         return default_quota(capacity, num_partitions)
     hist = np.bincount(dest_sample, minlength=num_partitions)
-    est_max = hist.max() / max(sample_fraction, 1e-9)
-    return int(min(capacity, max(est_max * safety, 16)))
+    return quota_from_histogram(hist, capacity, num_partitions,
+                                sample_fraction, safety)
 
 
 def sampled_cardinality(key_sample: np.ndarray) -> float:

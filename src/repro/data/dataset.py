@@ -4,7 +4,8 @@ A *dataset* is a directory of fixed-row-count column chunks plus a JSON
 manifest recording the schema and per-chunk row counts:
 
     dir/
-      manifest.json        {"version": 1, "schema": [...], "chunks": [...]}
+      manifest.json        {"version": 1, "schema": [...], "chunks": [...],
+                            "stats": {...}}   # stats optional (ISSUE 9)
       chunk-00000.npz      one compressed array per column
       chunk-00001.npz
       ...
@@ -82,6 +83,12 @@ class DatasetManifest:
     directory: str
     schema: tuple
     chunks: tuple
+    #: optional per-chunk ``repro.stats.sketch.ChunkStats`` tuple aligned
+    #: with ``chunks`` (None when the dataset carries no sketches); rides
+    #: outside cache/checkpoint identity, which hashes schema+chunks only
+    stats: tuple | None = None
+    #: KMV sketch size the stats were computed with
+    stats_k: int = 128
 
     @property
     def num_rows(self) -> int:
@@ -101,20 +108,36 @@ class DatasetManifest:
         return max(total, 1.0)
 
     def save(self) -> str:
-        """Write ``manifest.json`` into the dataset directory."""
+        """Write ``manifest.json`` into the dataset directory (atomically:
+        tmp file + rename, so a crash mid-save leaves the old manifest —
+        the contract :func:`repro.stats.sketch.backfill_stats` relies on).
+        Per-chunk sketches, when present, serialize under an optional
+        versioned ``stats`` key that pre-stats readers never see."""
         path = os.path.join(self.directory, _MANIFEST_NAME)
         payload = {
             "version": _VERSION,
             "schema": [[n, dt, list(tail)] for n, dt, tail in self.schema],
             "chunks": [[f, int(r)] for f, r in self.chunks],
         }
-        with open(path, "w") as f:
+        if self.stats is not None:
+            from ..stats.sketch import STATS_VERSION  # local: avoid cycle
+            payload["stats"] = {
+                "stats_version": STATS_VERSION,
+                "k": int(self.stats_k),
+                "chunks": [cs.to_json() for cs in self.stats],
+            }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
             json.dump(payload, f, indent=1)
+        os.replace(tmp, path)
         return path
 
     @classmethod
     def load(cls, directory: str) -> "DatasetManifest":
-        """Read ``manifest.json`` from ``directory``."""
+        """Read ``manifest.json`` from ``directory``. The optional
+        ``stats`` key is parsed when present with a known version and
+        silently ignored otherwise — old manifests (and future stats
+        formats) load as stats-free datasets, never errors."""
         path = os.path.join(directory, _MANIFEST_NAME)
         with open(path) as f:
             payload = json.load(f)
@@ -123,7 +146,18 @@ class DatasetManifest:
                 f"{path}: unsupported dataset version {payload.get('version')!r}")
         schema = tuple((n, dt, tuple(tail)) for n, dt, tail in payload["schema"])
         chunks = tuple((f, int(r)) for f, r in payload["chunks"])
-        return cls(directory, schema, chunks)
+        stats = None
+        stats_k = 128
+        raw = payload.get("stats")
+        if isinstance(raw, dict):
+            from ..stats.sketch import (  # local: avoid import cycle
+                STATS_VERSION, ChunkStats, DEFAULT_KMV_K)
+            if (raw.get("stats_version") == STATS_VERSION
+                    and len(raw.get("chunks", ())) == len(chunks)):
+                stats_k = int(raw.get("k", DEFAULT_KMV_K))
+                stats = tuple(ChunkStats.from_json(c, stats_k)
+                              for c in raw["chunks"])
+        return cls(directory, schema, chunks, stats=stats, stats_k=stats_k)
 
 
 class DatasetWriter:
@@ -133,10 +167,17 @@ class DatasetWriter:
     ``chunk_rows`` rows; :meth:`close` flushes the remainder and writes the
     manifest. Used by :func:`write_dataset`, CSV ingestion, and the
     streaming runner's host-side spill (spilled runs *are* datasets).
+
+    With ``stats=True`` (the default) every flushed chunk is sketched
+    in-memory (``repro.stats.sketch.ChunkStats``: count, per-column
+    min/max, KMV distinct) and the sketches ride into the manifest —
+    write-time stats cost one pass over data already in cache. Spill
+    writers pass ``stats=False``: spill runs are consumed once, in full.
     """
 
     def __init__(self, directory: str, schema=None,
-                 chunk_rows: int = DEFAULT_CHUNK_ROWS, compress: bool = True):
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS, compress: bool = True,
+                 stats: bool = True, stats_k: int = 128):
         os.makedirs(directory, exist_ok=True)
         self.directory = directory
         self.chunk_rows = max(int(chunk_rows), 1)
@@ -146,6 +187,9 @@ class DatasetWriter:
         self._buffered = 0
         self._chunks: list[tuple] = []
         self._closed = False
+        self.stats_enabled = bool(stats)
+        self.stats_k = int(stats_k)
+        self._stats: list = []
 
     @property
     def rows_written(self) -> int:
@@ -175,9 +219,12 @@ class DatasetWriter:
         ``chunks`` are trusted as-is (their files are on disk); chunk files
         written *after* the snapshot are simply overwritten by index as the
         resumed stream re-appends, and never referenced by the final
-        manifest — torn post-snapshot writes cannot corrupt the dataset."""
+        manifest — torn post-snapshot writes cannot corrupt the dataset.
+        Resumed writers close without stats (sketches for the pre-snapshot
+        chunks were lost with the crashed process; :func:`backfill_stats`
+        recomputes them on demand)."""
         w = cls(directory, schema=schema, chunk_rows=chunk_rows,
-                compress=compress)
+                compress=compress, stats=False)
         w._chunks = [(f, int(r)) for f, r in chunks]
         if buffered and len(next(iter(buffered.values()))):
             w.append(buffered)
@@ -216,6 +263,9 @@ class DatasetWriter:
         fname = f"chunk-{len(self._chunks):05d}.npz"
         save = np.savez_compressed if self.compress else np.savez
         save(os.path.join(self.directory, fname), **head)
+        if self.stats_enabled:
+            from ..stats.sketch import ChunkStats  # local: avoid cycle
+            self._stats.append(ChunkStats.from_columns(head, self.stats_k))
         self._chunks.append((fname, rows))
         self._buffered -= rows
         self._buffers = [tail] if self._buffered else []
@@ -230,8 +280,16 @@ class DatasetWriter:
             raise ValueError("cannot close an empty DatasetWriter without a "
                              "schema (pass schema= at construction)")
         self._closed = True
+        # resumed writers lack sketches for pre-snapshot chunks: only a
+        # complete per-chunk set is trustworthy, else drop stats entirely
+        # (consumers treat "no stats" as "no estimates"; backfill_stats
+        # can recompute later)
+        stats = (tuple(self._stats)
+                 if self.stats_enabled and len(self._stats) == len(self._chunks)
+                 else None)
         self._manifest = DatasetManifest(self.directory, self._schema,
-                                         tuple(self._chunks))
+                                         tuple(self._chunks), stats=stats,
+                                         stats_k=self.stats_k)
         self._manifest.save()
         return self._manifest
 
@@ -275,9 +333,16 @@ def read_chunk(manifest: DatasetManifest, index: int,
 
 
 def read_rows(manifest: DatasetManifest, start: int, stop: int,
-              columns: Sequence[str] | None = None) -> dict:
+              columns: Sequence[str] | None = None,
+              skip_chunks: Sequence[bool] | None = None) -> dict:
     """Global row range ``[start, stop)`` as a column dict, decoding only
-    the chunks that overlap the range (the runner's batch reader)."""
+    the chunks that overlap the range (the runner's batch reader).
+
+    ``skip_chunks`` (aligned with ``manifest.chunks``) marks chunks whose
+    decode may be elided — the statistics layer's chunk-skip mask, where
+    True means the chunk provably contributes no rows to the caller's
+    predicate. Skipped chunks contribute zero rows (the result simply
+    gets shorter); global row offsets are unaffected."""
     names = tuple(columns) if columns is not None else manifest.column_names
     dtypes = {n: (dt, tail) for n, dt, tail in manifest.schema}
     start, stop = max(int(start), 0), max(int(stop), 0)
@@ -285,7 +350,7 @@ def read_rows(manifest: DatasetManifest, start: int, stop: int,
     off = 0
     for i, (_, rows) in enumerate(manifest.chunks):
         lo, hi = max(start, off), min(stop, off + rows)
-        if lo < hi:
+        if lo < hi and not (skip_chunks is not None and skip_chunks[i]):
             chunk = read_chunk(manifest, i, names)
             for n in names:
                 parts[n].append(chunk[n][lo - off:hi - off])

@@ -19,7 +19,12 @@ oracles, ``registry`` the backend override + decision logic.
 """
 
 from . import ops, ref, registry  # noqa: F401
-from .ops import hash_partition, segment_reduce, segment_reduce_partials  # noqa: F401
+from .ops import (  # noqa: F401
+    hash_partition,
+    partition_histogram,
+    segment_reduce,
+    segment_reduce_partials,
+)
 from .registry import (  # noqa: F401
     dispatch_signature,
     explain,
@@ -34,6 +39,7 @@ __all__ = [
     "ref",
     "registry",
     "hash_partition",
+    "partition_histogram",
     "segment_reduce",
     "segment_reduce_partials",
     "set_backend",

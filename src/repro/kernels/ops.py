@@ -28,7 +28,8 @@ from . import ssd_scan as _ssd
 from . import ref
 
 __all__ = ["on_tpu", "flash_attention", "ssd_scan", "hash_partition",
-           "segment_reduce", "segment_reduce_partials", "ref"]
+           "partition_histogram", "segment_reduce",
+           "segment_reduce_partials", "ref"]
 
 
 def on_tpu() -> bool:
@@ -117,6 +118,24 @@ def hash_partition(keys, num_partitions, *, block: int | None = None,
             hist = hist.at[dest[N]].add(-pad)
         dest = dest[:N]
     return dest, hist
+
+
+def partition_histogram(keys, num_partitions, *, block: int | None = None,
+                        force: str | None = None):
+    """Per-partition destination counts for the shuffle keys — the
+    statistics layer's observation primitive (ISSUE 9).
+
+    The same dispatched :func:`hash_partition` pass that computes
+    destination ids also accumulates the (P,) histogram in its one-hot
+    kernel leg; this wrapper returns just that histogram, so the adaptive
+    re-planner and ``patterns.quota_from_histogram`` consume the exact
+    per-partition row counts the shuffle is about to see (bit-identical
+    across pallas/interpret/jnp modes, and to the streaming runner's host
+    ``bincount`` mirror).
+    """
+    _, hist = hash_partition(keys, num_partitions, block=block, force=force,
+                             with_hist=True)
+    return hist
 
 
 def segment_reduce_partials(values, seg_ids, *, max_segments=128, block=1024,

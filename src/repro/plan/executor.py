@@ -114,7 +114,7 @@ def source_row_counts(sources: Mapping) -> dict:
 
 
 def optimized_plan(root: Node, ctx: DDFContext, src_rows: Mapping,
-                   level: str = "all") -> Node:
+                   level: str = "all", stats=None) -> Node:
     """Optimize (and fully plan) a logical DAG, with caching.
 
     ``level``: "all" runs every rewrite pass; "plan-only" runs just the
@@ -122,20 +122,25 @@ def optimized_plan(root: Node, ctx: DDFContext, src_rows: Mapping,
     needs concrete quotas/capacities). The cache key includes the kernel
     dispatch signature (like ``cached_op``'s compiled-op keys) so plans —
     and anything keyed off them downstream — never alias across
-    ``repro.kernels.set_backend`` flips.
+    ``repro.kernels.set_backend`` flips; when ``stats``
+    (``repro.stats.PlanStats``) inform the plan, its content hash keys the
+    cache too, so re-sketched datasets never reuse stale plans.
     """
     from ..kernels import registry as _kernel_registry
 
     key = (ctx.nworkers, ctx.axes, ctx.fabric, level, root,
            tuple(sorted(src_rows.items())),
-           _kernel_registry.dispatch_signature())
+           _kernel_registry.dispatch_signature(),
+           stats.cache_key if stats is not None else None)
     plan = _PLAN_CACHE.get(key)
     if plan is None:
         params = cost_model.params_for_fabric(ctx.fabric)
         if level == "all":
-            plan = optimizer.optimize(root, ctx.nworkers, src_rows, params)
+            plan = optimizer.optimize(root, ctx.nworkers, src_rows, params,
+                                      stats=stats)
         else:
-            plan = optimizer.plan_shuffles(root, ctx.nworkers, src_rows, params)
+            plan = optimizer.plan_shuffles(root, ctx.nworkers, src_rows,
+                                           params, stats=stats)
         _PLAN_CACHE.put(key, plan)
     return plan
 
@@ -208,8 +213,10 @@ def _make_plan_fn(root: Node, ordered_sids: tuple):
                 t = lower(node.child)
                 aggs = {k: v for k, v in node.aggs}
                 if node.elide_shuffle:
-                    red = local_groupby(t, node.by, aggs,
-                                        capacity=node.capacity, merge=False)
+                    red, ov_agg = local_groupby(t, node.by, aggs,
+                                                capacity=node.capacity,
+                                                merge=False, with_overflow=True)
+                    put_aux(node, {"overflow_agg": ov_agg})
                     out = red if node.emit_partials else finalize_groupby(red, aggs)
                 else:
                     out, info = operators.dist_groupby(
@@ -220,7 +227,10 @@ def _make_plan_fn(root: Node, ordered_sids: tuple):
             elif isinstance(node, Unique):
                 t = lower(node.child)
                 if node.elide_shuffle:
-                    out = local_unique(t, node.subset, capacity=node.capacity)
+                    out, ov_agg = local_unique(t, node.subset,
+                                               capacity=node.capacity,
+                                               with_overflow=True)
+                    put_aux(node, {"overflow_agg": ov_agg})
                 else:
                     out, info = operators.dist_unique(
                         comm, t, node.subset, node.quota, node.capacity,
@@ -229,8 +239,10 @@ def _make_plan_fn(root: Node, ordered_sids: tuple):
             elif isinstance(node, Union):
                 l, r = lower(node.left), lower(node.right)
                 if node.elide_shuffle:
-                    out = local_unique(concat(l, r), node.on,
-                                       capacity=node.capacity)
+                    out, ov_agg = local_unique(concat(l, r), node.on,
+                                               capacity=node.capacity,
+                                               with_overflow=True)
+                    put_aux(node, {"overflow_agg": ov_agg})
                 else:
                     out, info = operators.dist_union(
                         comm, l, r, node.on, node.quota, node.capacity,

@@ -76,10 +76,13 @@ def estimate_query_bytes(query, working_set_factor: float = 4.0) -> float:
     ``query`` is a ``LazyDDF`` (scan-bearing or not) or a callable (an
     opaque eager thunk — charged 0, it brings its own already-resident
     tables). Scan leaves contribute one morsel's padded device table
-    (``capacity * P * row_bytes``) times ``working_set_factor``; ``Source``
-    leaves contribute their full padded capacity times the same factor
-    (shuffle outputs/intermediates scale with input size). Duplicate
-    sids are counted once.
+    (``capacity * P * row_bytes``) times ``working_set_factor``; when the
+    dataset manifest carries per-chunk sketches (``repro.stats``), the
+    morsel guess is tightened by the selectivity-adjusted row estimate —
+    a tiny highly-selective scan no longer reserves a full morsel's
+    worth of budget. ``Source`` leaves contribute their full padded
+    capacity times the same factor (shuffle outputs/intermediates scale
+    with input size). Duplicate sids are counted once.
     """
     if not hasattr(query, "_root"):
         return 0.0  # eager thunks (and anything else the scheduler vets)
@@ -90,7 +93,12 @@ def estimate_query_bytes(query, working_set_factor: float = 4.0) -> float:
         if isinstance(n, Scan) and n.sid not in seen:
             seen.add(n.sid)
             man = query._scans[n.sid]
-            total += n.capacity * P * man.row_bytes()
+            rows = float(n.capacity * P)
+            from ..stats import scan_row_estimate  # avoid import cycle
+            est = scan_row_estimate(man, n)
+            if est is not None:
+                rows = min(rows, max(float(est), 1.0))
+            total += rows * man.row_bytes()
     for sid, ddf in query._sources.items():
         if sid in seen:
             continue

@@ -6,7 +6,12 @@ device-resident carry tables (groupby partials, unique carry), spill-file
 manifests, partial concat outputs, and the folded overflow counters. A
 checkpoint is one consistent snapshot of all of it, taken at a morsel
 boundary, so a killed query can resume *mid-stream* and produce output
-bit-identical to an uninterrupted run.
+bit-identical to an uninterrupted run. Adaptive streams
+(``collect(..., adaptive=True)``) additionally snapshot their
+``repro.stats.AdaptiveController`` decision state inside the
+active-stage metadata, so a resumed query re-enters the exact corrected
+plan and makes the same future re-planning decisions it would have made
+uninterrupted.
 
 Layout (one directory per query)::
 

@@ -443,7 +443,8 @@ class _Runner:
     def __init__(self, lazy, batch_rows=None, prefetch=True,
                  carry_capacity=None, spill_dir=None, spill_compress=False,
                  strict_overflow=True, checkpoint_dir=None, checkpoint_every=4,
-                 resume=False, max_retries=2, retry_backoff_s=0.05):
+                 resume=False, max_retries=2, retry_backoff_s=0.05,
+                 adaptive=False, replan_every=None):
         self.ctx: DDFContext = lazy._ctx
         self.P = self.ctx.nworkers
         self.params = cost_model.params_for_fabric(self.ctx.fabric)
@@ -454,6 +455,14 @@ class _Runner:
         self.spill_dir = spill_dir
         self.spill_compress = bool(spill_compress)
         self.strict_overflow = bool(strict_overflow)
+        self.adaptive = bool(adaptive)
+        self.replan_every = replan_every
+        # per-batch shuffle-key observation channel: _host_batches fills
+        # self._obs[k] = (rows, histogram) on the decode (prefetch) thread
+        # when _obs_keys is set; the consuming carry loop pops by batch
+        # index (dict item assignment is GIL-atomic)
+        self._obs: dict[int, tuple] = {}
+        self._obs_keys: tuple | None = None
         root = lazy._root
         if batch_rows is not None:
             root = _set_batch_caps(root, max(-(-int(batch_rows) // self.P), 1))
@@ -475,6 +484,9 @@ class _Runner:
         self.metrics = _metrics.MetricsRegistry(parent=_metrics.registry(),
                                                 prefix="stream.")
         self.metrics.counter("batches")  # pre-create: info always has it
+        self.metrics.counter("chunks_decoded")   # chunk-skip visibility:
+        self.metrics.counter("chunks_skipped")   # info always carries both
+        self.metrics.counter("replans")
         self.retry = _recovery.RetryPolicy(max_retries=int(max_retries),
                                            backoff_s=float(retry_backoff_s))
         self._stage = 0
@@ -687,6 +699,8 @@ class _Runner:
 
     # -- batch iteration over one streamable subtree ---------------------------
     def _prep(self, root: Node):
+        from ..stats import chunk_skip_mask, plan_stats  # local: avoid cycle
+
         scans = [n for n in walk(root) if isinstance(n, Scan)]
         sids = {s.sid for s in scans}
         if len(sids) != 1:
@@ -699,12 +713,19 @@ class _Runner:
                 if isinstance(n, Source)}
         src_rows = executor.source_row_counts(srcs)
         src_rows[scan.sid] = max(min(man.num_rows, batch_rows), 1)
-        plan = optimizer.optimize(root, self.P, src_rows, self.params)
+        stats = plan_stats({scan.sid: man})
+        plan = optimizer.optimize(root, self.P, src_rows, self.params,
+                                  stats=stats)
         scan_opt = next(n for n in walk(plan) if isinstance(n, Scan))
-        return plan, scan_opt, man, batch_rows, srcs
+        # chunk-skip mask from the *optimized* scan (post predicate
+        # absorption): conservative — never flags a chunk that could
+        # contribute a matching row, so skipping is bit-identical
+        skips = chunk_skip_mask(man, scan_opt.pred_sigs)
+        return plan, scan_opt, man, batch_rows, srcs, skips
 
     def _host_batches(self, man: DatasetManifest, scan: Scan,
-                      batch_rows: int, start: int = 0) -> Iterator[tuple]:
+                      batch_rows: int, start: int = 0,
+                      skips=None) -> Iterator[tuple]:
         cols = scan.columns
         # expression predicates may reference columns outside the scan's
         # projected output (the optimizer narrows the decode set past them
@@ -721,6 +742,10 @@ class _Runner:
                 read_cols = tuple(sorted(set(cols) | extra))
         total = man.num_rows
         nb = max(-(-total // batch_rows), 1)
+        # per-chunk global offsets, for attributing skip/decode counts to
+        # the batch whose row range covers each chunk
+        chunk_offs = np.cumsum([0] + [r for _, r in man.chunks])
+        obs_keys = self._obs_keys
         for k in range(start, nb):
             lo, hi = k * batch_rows, min((k + 1) * batch_rows, total)
 
@@ -728,12 +753,31 @@ class _Runner:
                 # spans carry the prefetch thread's tid when prefetching —
                 # decode/compute overlap is visible in the trace timeline
                 t0 = _trace.now()
-                data = read_rows(man, lo, hi, columns=read_cols)
+                data = read_rows(man, lo, hi, columns=read_cols,
+                                 skip_chunks=skips)
+                n_over = n_skip = 0
+                for i in range(len(man.chunks)):
+                    if chunk_offs[i] < hi and chunk_offs[i + 1] > lo:
+                        n_over += 1
+                        if skips is not None and skips[i]:
+                            n_skip += 1
+                # Counter.add is locked: safe from the prefetch thread
+                self.metrics.counter("chunks_skipped").add(n_skip)
+                self.metrics.counter("chunks_decoded").add(n_over - n_skip)
                 for fn in scan.pred_fns:
                     mask = np.asarray(fn(data)).astype(bool)
                     data = {n: v[mask] for n, v in data.items()}
                 if read_cols is not cols:
                     data = {n: data[n] for n in cols}
+                if obs_keys is not None and data \
+                        and all(c in data for c in obs_keys):
+                    # host mirror of the device shuffle's key->partition
+                    # map: the observed per-partition histogram the
+                    # adaptive controller and quota accounting consume
+                    rows_out = len(next(iter(data.values())))
+                    dest = _np_hash_columns(data, obs_keys) % np.uint32(self.P)
+                    self._obs[k] = (rows_out,
+                                    np.bincount(dest, minlength=self.P))
                 if _trace.enabled():
                     out_rows = (len(next(iter(data.values())))
                                 if data else hi - lo)
@@ -759,7 +803,7 @@ class _Runner:
         """Yield ``(batch index, result DDF, aux)`` per streamed batch of a
         streamable subtree (``start`` skips already-folded batches on
         resume — the scan cursor)."""
-        plan, scan_opt, man, batch_rows, srcs = prep or self._prep(root)
+        plan, scan_opt, man, batch_rows, srcs, skips = prep or self._prep(root)
         batch_bytes = (scan_opt.capacity * self.P
                        * row_bytes_of(schema_of(scan_opt)))
         self._note_working_set(batch_bytes)
@@ -773,7 +817,8 @@ class _Runner:
             preds = [p for p in _model.predict_plan(plan, self.P, src_rows,
                                                     self.params)
                      if p["pattern"] != "partitioned_io"]
-        gen = self._host_batches(man, scan_opt, batch_rows, start=start)
+        gen = self._host_batches(man, scan_opt, batch_rows, start=start,
+                                 skips=skips)
         if self.prefetch:
             gen = _prefetched(gen)
         for k, data in gen:
@@ -877,46 +922,133 @@ class _Runner:
         ov = jnp.maximum(full.nvalid - cap, 0)
         return Table(cols, jnp.minimum(full.nvalid, cap)), {"overflow_carry": ov}
 
+    @staticmethod
+    def _keys_direct(node: Node) -> bool:
+        """True when every node below a shuffle passes the scan's columns
+        through untouched — the condition under which the host hash
+        mirror over decoded rows equals the device shuffle's
+        key->partition map (the observation the adaptive controller
+        feeds on)."""
+        return all(isinstance(n, (Scan, Select, Project, Rebalance))
+                   for n in walk(node))
+
     def _run_carry(self, B: Node, batch_root: Node, merge_key: tuple, merge,
                    stage=None, resume=None):
         """Shared carry-state drive loop: stream batches through the
         compiled per-batch plan, folding each result into the carry DDF.
         The carry table (padded columns + per-worker counts) plus the scan
         cursor *is* the whole cross-batch state, so it is exactly what the
-        checkpoint session snapshots."""
+        checkpoint session snapshots.
+
+        With ``adaptive=True`` an :class:`~repro.stats.AdaptiveController`
+        watches each batch's observed key histogram (host mirror of the
+        device shuffle) and per-worker group counts; at its decision
+        cadence it may re-pin quota/capacity on the batch plan for all
+        *later* morsels. Corrections only resize static buffers, so
+        results stay bit-identical (undersized corrections raise under
+        ``strict_overflow`` rather than truncate silently). Controller
+        state snapshots into the checkpoint's active-stage meta, so a
+        resumed stream re-enters the exact corrected plan and makes the
+        same future decisions."""
+        from ..stats import AdaptiveController  # local: avoid import cycle
+
         prep = self._prep(batch_root)
         plan = prep[0]
         cap = self._carry_cap(B, prep[2].num_rows)
+        nb = max(-(-prep[2].num_rows // prep[3]), 1)
+        shuffle_node = next((n for n in walk(plan)
+                             if isinstance(n, (GroupBy, Unique))), None)
+        plan_quota = getattr(shuffle_node, "quota", None)
+        keys = getattr(B, "by", None) or getattr(B, "subset", None)
+        keys_direct = bool(keys) and self._keys_direct(batch_root.children[0])
+        ctrl = None
+        if (self.adaptive and plan_quota
+                and getattr(shuffle_node, "capacity", None)):
+            ctrl = AdaptiveController(self.P, plan_quota,
+                                      int(shuffle_node.capacity),
+                                      replan_every=self.replan_every)
         state = {"k": 0, "carry": None}
         if resume is not None:
             rmeta, rarr = resume
             state["k"] = int(rmeta["k"])
             cap = int(rmeta["cap"])
             state["carry"] = self._ddf_from_arrays(rarr)
+            if ctrl is not None and rmeta.get("adaptive"):
+                ctrl = AdaptiveController.restore(rmeta["adaptive"])
         else:
             state["carry"] = self._empty_carry(schema_of(plan), cap)
+        cur_root = batch_root
+        if ctrl is not None and (ctrl.quota_override is not None
+                                 or ctrl.capacity_override is not None):
+            # resumed mid-correction: re-enter the corrected plan exactly
+            cur_root = ctrl.pin(batch_root)
+            prep = self._prep(cur_root)
+            plan = prep[0]
         # active set here = the carry table plus one batch's partial result
         self._note_working_set((cap + prep[1].capacity) * self.P
                                * row_bytes_of(schema_of(plan)))
 
         def snap():
             arrays, _ = self._ddf_arrays(state["carry"])
-            return {"k": state["k"], "cap": cap}, arrays
+            meta = {"k": state["k"], "cap": cap}
+            if ctrl is not None:
+                meta["adaptive"] = ctrl.state_dict()
+            return meta, arrays
 
         if self.session is not None:
             self.session.set_active(stage, snap)
         scope = f"s{stage}"
-        for k, out, aux in self._iter_batches(batch_root, prep=prep,
-                                              start=state["k"]):
-            carry, carry_ov = state["carry"]._run(merge_key + (cap,),
-                                                  merge(cap), out)
-            state["carry"] = carry
-            self._fold_aux([aux, {"carry:overflow_carry":
-                                  carry_ov["overflow_carry"]}],
-                           scope=scope)
-            state["k"] = k + 1
-            self._tick()
-            yield "carry"
+        if keys_direct and (ctrl is not None or _trace.enabled()):
+            self._obs_keys = tuple(keys)
+        try:
+            while state["k"] < nb:
+                gen = self._iter_batches(cur_root, prep=prep,
+                                         start=state["k"])
+                for k, out, aux in gen:
+                    carry, carry_ov = state["carry"]._run(
+                        merge_key + (cap,), merge(cap), out)
+                    state["carry"] = carry
+                    self._fold_aux([aux, {"carry:overflow_carry":
+                                          carry_ov["overflow_carry"]}],
+                                   scope=scope)
+                    state["k"] = k + 1
+                    obs = self._obs.pop(k, None)
+                    if obs is not None:
+                        rows_in, hist = obs
+                        quota_now = (ctrl.current_quota if ctrl is not None
+                                     else plan_quota)
+                        if _trace.enabled() and quota_now:
+                            # quota accuracy, in rows: planned per-partition
+                            # allowance vs the batch's observed max cell
+                            _model.record(
+                                "shuffle_quota",
+                                f"stream.{type(B).__name__}",
+                                float(quota_now),
+                                float(max(int(hist.max()), 1)),
+                                observed_rows=int(rows_in),
+                                meta={"batch": k})
+                        if ctrl is not None:
+                            counts = np.asarray(out.counts)
+                            ctrl.observe(rows_in, hist=hist,
+                                         groups_out=int(counts.sum()),
+                                         max_worker_groups=int(counts.max()))
+                    self._tick()
+                    yield "carry"
+                    if (ctrl is not None and state["k"] < nb
+                            and ctrl.should_replan()):
+                        gen.close()  # stop the prefetch thread cleanly
+                        cur_root = ctrl.apply(batch_root)
+                        prep = self._prep(cur_root)
+                        plan = prep[0]
+                        self.metrics.counter("replans").add(1)
+                        _trace.instant("stream.replan", batch=state["k"],
+                                       quota=int(ctrl.current_quota))
+                        break
+                else:
+                    break  # generator exhausted: all batches folded
+        finally:
+            self._obs_keys = None
+            self._obs.clear()
         return state["carry"], cap
 
     def _stream_groupby(self, B: GroupBy) -> DDF:
@@ -980,8 +1112,10 @@ class _Runner:
     def _spill_writer(self, schema: tuple) -> DatasetWriter:
         d = tempfile.mkdtemp(prefix="repro-spill-",
                              dir=self.spill_dir)
+        # stats=False: spill runs are consumed once in full — sketching
+        # them would cost write-time work with no pruning to gain
         return DatasetWriter(d, schema=schema, chunk_rows=self._spill_chunk_rows(),
-                             compress=self.spill_compress)
+                             compress=self.spill_compress, stats=False)
 
     def _stage_spill_writer(self, tag: str, schema: tuple,
                             chunks=None, buffered=None) -> DatasetWriter:
@@ -994,7 +1128,7 @@ class _Runner:
         if chunks is None:
             return DatasetWriter(d, schema=schema,
                                  chunk_rows=self._spill_chunk_rows(),
-                                 compress=self.spill_compress)
+                                 compress=self.spill_compress, stats=False)
         return DatasetWriter.resume(d, schema, chunks, buffered=buffered,
                                     chunk_rows=self._spill_chunk_rows(),
                                     compress=self.spill_compress)
@@ -1405,7 +1539,8 @@ def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,
             spill_compress: bool = False, strict_overflow: bool = True,
             checkpoint_dir: str | None = None, checkpoint_every: int = 4,
             resume: bool = False, max_retries: int = 2,
-            retry_backoff_s: float = 0.05):
+            retry_backoff_s: float = 0.05, adaptive: bool = False,
+            replan_every: int | None = None):
     """Run a scan-bearing lazy plan through the streaming engine.
 
     Args:
@@ -1434,12 +1569,23 @@ def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,
         error propagates; only retryable errors are retried (see
         ``repro.stream.recovery.RETRYABLE_EXCEPTIONS``).
       retry_backoff_s: base of the bounded exponential retry backoff.
+      adaptive: enable mid-stream re-planning — an
+        ``repro.stats.AdaptiveController`` corrects quota/capacity for
+        later morsels of carry-fold stages (groupby/unique) from observed
+        batch key histograms; results stay bit-identical (corrections
+        only resize static buffers), ``info["replans"]`` counts the
+        plan revisions, and the controller state rides the checkpoint so
+        resumed runs make the same decisions. See docs/STATISTICS.md.
+      replan_every: batches between adaptive re-plan decision points
+        (default ``cost_model.ADAPTIVE_REPLAN_EVERY``).
 
     Returns:
       ``(result DDF, info dict)`` — info carries ``batches`` plus summed
       per-batch overflow counters (namespaced ``s<stage>:`` per streaming
-      stage), ``retries:<site>`` counts, ``checkpoints`` published, and
-      the observed ``peak_working_set_bytes`` (which the query service's
+      stage), ``retries:<site>`` counts, ``checkpoints`` published,
+      ``chunks_decoded`` / ``chunks_skipped`` (statistics-layer chunk
+      skipping on absorbed scan predicates), ``replans``, and the
+      observed ``peak_working_set_bytes`` (which the query service's
       admission controller learns from). The numeric counters come from a
       per-run ``repro.obs`` metrics registry parented to the global one.
     """
@@ -1448,7 +1594,8 @@ def collect(lazy, batch_rows: int | None = None, prefetch: bool = True,
                 spill_compress=spill_compress, strict_overflow=strict_overflow,
                 checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
                 resume=resume, max_retries=max_retries,
-                retry_backoff_s=retry_backoff_s)
+                retry_backoff_s=retry_backoff_s, adaptive=adaptive,
+                replan_every=replan_every)
     return r.run()
 
 
@@ -1457,7 +1604,8 @@ def to_batches(lazy, batch_rows: int | None = None, prefetch: bool = True,
                spill_compress: bool = False, strict_overflow: bool = True,
                checkpoint_dir: str | None = None, checkpoint_every: int = 4,
                resume: bool = False, max_retries: int = 2,
-               retry_backoff_s: float = 0.05) -> Iterator[dict]:
+               retry_backoff_s: float = 0.05, adaptive: bool = False,
+               replan_every: int | None = None) -> Iterator[dict]:
     """Stream a lazy plan's result as host column-dict batches.
 
     Fully-streamable plans yield one dict per morsel without materializing
@@ -1472,5 +1620,6 @@ def to_batches(lazy, batch_rows: int | None = None, prefetch: bool = True,
                 spill_compress=spill_compress, strict_overflow=strict_overflow,
                 checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
                 resume=resume, max_retries=max_retries,
-                retry_backoff_s=retry_backoff_s)
+                retry_backoff_s=retry_backoff_s, adaptive=adaptive,
+                replan_every=replan_every)
     yield from r.batches()

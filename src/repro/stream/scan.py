@@ -68,6 +68,11 @@ def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
         decoded transiently and dropped after filtering); non-portable
         ones (float arithmetic, 64-bit columns) become a device SELECT
         above the scan so results never diverge from the eager path.
+        When the dataset manifest carries per-chunk sketches
+        (``repro.stats``, the write-time default), absorbed predicates
+        additionally drive *chunk skipping*: chunks whose min/max bounds
+        prove zero matching rows are never decoded at all — see
+        docs/STATISTICS.md for the conservatism contract.
 
     Returns:
       A ``LazyDDF`` whose plan root is a ``SCAN`` leaf. Terminal calls
