@@ -32,6 +32,10 @@ set its own host-device count. Prints ``name,us_per_call,derived`` CSV.
                                     output, and shuffle-quota prediction
                                     error with vs without adaptive
                                     mid-stream re-planning on skewed keys)
+  ISSUE 10 -> bench_types          (dict-encoded string keys: join/groupby
+                                    vs a pre-coded int32 baseline, plus
+                                    isolated vocab-unification/recode
+                                    overhead)
 """
 
 import os
@@ -53,6 +57,7 @@ BENCHES = [
     "benchmarks.bench_service",
     "benchmarks.bench_obs",
     "benchmarks.bench_stats",
+    "benchmarks.bench_types",
 ]
 
 

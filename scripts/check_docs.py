@@ -33,7 +33,10 @@ Fails (exit 1) if:
   10. ``docs/STATISTICS.md`` is missing, or does not mention every
      ``repro.stats`` export, the writer/stream statistics knobs
      (``stats_k`` / ``adaptive`` / ``replan_every``), and the
-     cost-model adaptation constants (``ADAPTIVE_*``).
+     cost-model adaptation constants (``ADAPTIVE_*``), or
+  11. ``docs/TYPES.md`` is missing, or does not mention every
+     ``repro.core.vocab`` export, the ``Recode`` plan node, the typed
+     ``DatasetSchemaError``, and the vocab unification surface.
 
 Run:  PYTHONPATH=src python scripts/check_docs.py
 Wired into the test suite via tests/test_docs_lint.py.
@@ -98,6 +101,8 @@ CORE_MODULES = [
     "repro.stats.sketch",
     "repro.stats.estimate",
     "repro.stats.adaptive",
+    # dict-encoded string columns: vocabularies + unification (ISSUE 10)
+    "repro.core.vocab",
 ]
 
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -251,6 +256,18 @@ def missing_stats_docs() -> list:
     return missing_doc_mentions("docs/STATISTICS.md", symbols)
 
 
+def missing_types_docs() -> list:
+    """Return problems with docs/TYPES.md coverage of the dict-encoded
+    string column subsystem: every ``repro.core.vocab`` export, the
+    unification/recode surface, and the typed ingestion error."""
+    from repro.core import vocab as vocab_mod
+
+    symbols = (list(vocab_mod.__all__)
+               + ["Recode", "DatasetSchemaError", "vocab_map", "bind_vocabs",
+                  "is_in", "decode", "recode_map", "merge", "'dict'"])
+    return missing_doc_mentions("docs/TYPES.md", symbols)
+
+
 def main() -> int:
     failures = missing_docstrings()
     if failures:
@@ -302,14 +319,21 @@ def main() -> int:
         print("Statistics documentation problems:")
         for f in stats_failures:
             print(f"  - {f}")
+    types_failures = missing_types_docs()
+    if types_failures:
+        print("Types documentation problems:")
+        for f in types_failures:
+            print(f"  - {f}")
     if failures or doc_failures or lazy_failures or stream_failures \
             or fault_failures or expr_failures or kernel_failures \
-            or service_failures or obs_failures or stats_failures:
+            or service_failures or obs_failures or stats_failures \
+            or types_failures:
         return 1
     print("check_docs: all exported core+plan+stream+expr+kernel+testing+"
-          "service+obs+stats symbols documented; docs cover every pattern, "
-          "node type, rewrite pass, streaming, fault-tolerance, expression, "
-          "kernel, service, observability and statistics export")
+          "service+obs+stats+vocab symbols documented; docs cover every "
+          "pattern, node type, rewrite pass, streaming, fault-tolerance, "
+          "expression, kernel, service, observability, statistics and "
+          "string-type export")
     return 0
 
 

@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import cost_model, operators, patterns
+from .vocab import DictVocab, encode_strings, is_string_array
 from .. import expr as _expr
 from ..compat import shard_map
 from ..obs import trace as _trace
@@ -239,19 +240,24 @@ class DDF:
     columns: dict[str, jax.Array]
     counts: jax.Array  # (P,) int32 — valid rows per partition
     ctx: DDFContext
+    #: host-side vocabularies of dict-encoded string columns (name ->
+    #: ``DictVocab``); the device column holds int32 codes. Rides in the
+    #: pytree aux data (DictVocab is hashable) so jit caching keys on it.
+    vocabs: dict = dataclasses.field(default_factory=dict)
     # host-side caches (not pytree children): global row count + lazy handle
     _nrows: int | None = dataclasses.field(default=None, repr=False, compare=False)
     _lazy_cache: object = dataclasses.field(default=None, repr=False, compare=False)
 
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
-        return tuple(self.columns[n] for n in names) + (self.counts,), (names, self.ctx)
+        return (tuple(self.columns[n] for n in names) + (self.counts,),
+                (names, self.ctx, tuple(sorted(self.vocabs.items()))))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        names, ctx = aux
+        names, ctx, vocabs = aux
         *cols, counts = children
-        return cls(dict(zip(names, cols)), counts, ctx)
+        return cls(dict(zip(names, cols)), counts, ctx, dict(vocabs))
 
     # -- metadata --------------------------------------------------------------
     @property
@@ -284,28 +290,33 @@ class DDF:
         per = -(-n // nw)
         cap = per if capacity is None else capacity
         cols = {}
+        vocabs = {}
         for k, v in data.items():
             v = np.asarray(v)
+            if is_string_array(v):  # dict-encode: int32 codes + host vocab
+                v, vocabs[k] = encode_strings(v)
             buf = np.zeros((nw, cap) + v.shape[1:], v.dtype)
             for w in range(nw):
                 chunk = v[w * per: (w + 1) * per][:cap]
                 buf[w, : len(chunk)] = chunk
             cols[k] = jax.device_put(buf.reshape((nw * cap,) + v.shape[1:]), ctx.sharding())
         counts = np.minimum(np.maximum(n - per * np.arange(nw), 0), min(per, cap)).astype(np.int32)
-        ddf = cls(cols, jax.device_put(counts, ctx.sharding()), ctx)
+        ddf = cls(cols, jax.device_put(counts, ctx.sharding()), ctx, vocabs)
         if mode is None:
             from .. import plan  # local import: plan depends on this module
             mode = plan.get_default_mode()
         return ddf.lazy() if mode == "lazy" else ddf
 
     def to_numpy(self) -> dict[str, np.ndarray]:
-        """Gather live rows to host, in partition order."""
+        """Gather live rows to host, in partition order. Dict-encoded
+        columns come back decoded (numpy string arrays, not codes)."""
         counts = np.asarray(self.counts)
         cap = self.capacity
         out = {}
         for k, v in self.columns.items():
             v = np.asarray(v).reshape((self.ctx.nworkers, cap) + v.shape[1:])
-            out[k] = np.concatenate([v[w, : counts[w]] for w in range(self.ctx.nworkers)])
+            g = np.concatenate([v[w, : counts[w]] for w in range(self.ctx.nworkers)])
+            out[k] = self.vocabs[k].decode(g) if k in self.vocabs else g
         return out
 
     # -- execution plumbing ---------------------------------------------------------
@@ -325,6 +336,68 @@ class DDF:
                 out.append(item)
         return out[0] if len(out) == 1 else tuple(out)
 
+    # -- dict-encoded string columns (vocab plumbing) ---------------------------
+    def _attach(self, res, vocabs: Mapping[str, DictVocab]):
+        """Attach vocab metadata to the DDF element(s) of an op result,
+        restricted to columns the result actually has."""
+        items = res if isinstance(res, tuple) else (res,)
+        for item in items:
+            if isinstance(item, DDF):
+                item.vocabs = {n: v for n, v in vocabs.items()
+                               if n in item.columns}
+        return res
+
+    def _recode(self, mappings: Mapping[str, np.ndarray]) -> "DDF":
+        """Apply per-column int32 gather maps — the device half of vocab
+        unification (``new_codes = map[old_codes]``). The op cache keys on
+        the map *contents*, so two recodes into different merged vocabs
+        never alias one compiled program."""
+        maps = {n: np.asarray(m, dtype=np.int32) for n, m in mappings.items()
+                if n in self.columns}
+        if not maps:
+            # shallow copy: callers overwrite .vocabs on the result, and
+            # mutating self would corrupt the input relation's metadata
+            return DDF(dict(self.columns), self.counts, self.ctx,
+                       dict(self.vocabs))
+        key = ("recode", tuple(sorted((n, m.tobytes()) for n, m in maps.items())))
+
+        def fn(comm, t):
+            cols = dict(t.columns)
+            for n, m in maps.items():
+                cols[n] = jnp.asarray(m)[cols[n]]
+            return Table(cols, t.nvalid)
+
+        return self._run(key, fn)
+
+    def _unify_vocabs_with(self, other: "DDF", op: str):
+        """Vocab unification at a binary boundary (join/union/difference):
+        merge each shared dict column's vocabs host-side and recode both
+        sides into the merged code space. Returns ``(left, right, merged)``
+        where merged covers every dict column of either side."""
+        mixed = sorted(n for n in set(self.vocabs) ^ set(other.vocabs)
+                       if n in self.columns and n in other.columns)
+        if mixed:
+            raise TypeError(
+                f"{op}: column(s) {mixed} are dict-encoded strings on one "
+                f"side but plain numerics on the other — codes and raw "
+                f"values are not comparable; encode both sides or neither")
+        merged = {**other.vocabs, **self.vocabs}
+        lmaps, rmaps = {}, {}
+        for n in sorted(set(self.vocabs) & set(other.vocabs)):
+            lv, rv = self.vocabs[n], other.vocabs[n]
+            if lv.words == rv.words:
+                continue
+            mv = lv.merge(rv)
+            merged[n] = mv
+            if not lv.is_identity_into(mv):
+                lmaps[n] = lv.recode_map(mv)
+            if not rv.is_identity_into(mv):
+                rmaps[n] = rv.recode_map(mv)
+        left, right = self._recode(lmaps), other._recode(rmaps)
+        left.vocabs = {n: merged[n] for n in self.vocabs}
+        right.vocabs = {n: merged[n] for n in other.vocabs}
+        return left, right, merged
+
     # -- embarrassingly parallel (paper §5.3.1) ----------------------------------
     def select(self, pred, name: str = "pred") -> "DDF":
         """Filter rows by a boolean expression: ``select(col("a") > 3)``.
@@ -336,13 +409,16 @@ class DDF:
         dict is deprecated (one-shot ``DeprecationWarning``) but keeps
         bit-identical behavior through the legacy fingerprint path."""
         if isinstance(pred, (_expr.Expr, bool)) or _expr.is_when_builder(pred):
-            pred = _expr.prepare_row_expr(pred, self.columns, "select")
+            pred = _expr.prepare_row_expr(pred, self.columns, "select",
+                                          vocabs=self.vocabs or None)
             fn = _expr.to_jax_fn(pred)
-            return self._run(("select", name, pred),
-                             lambda comm, t: local_select(t, fn))
+            return self._attach(self._run(("select", name, pred),
+                                          lambda comm, t: local_select(t, fn)),
+                                self.vocabs)
         _expr.warn_callable_deprecated("select")
-        return self._run(("select", name, callable_signature(pred)),
-                         lambda comm, t: local_select(t, pred))
+        return self._attach(self._run(("select", name, callable_signature(pred)),
+                                      lambda comm, t: local_select(t, pred)),
+                            self.vocabs)
 
     def with_column(self, name: str, value) -> "DDF":
         """Add (or overwrite) column ``name`` from an expression:
@@ -350,10 +426,13 @@ class DDF:
         literals; all other columns pass through unchanged. The expression
         is validated against the schema (``KeyError`` listing the schema on
         unknown references) and compiled to a pure jax function."""
-        e = _expr.prepare_row_expr(value, self.columns, "with_column")
+        e = _expr.prepare_row_expr(value, self.columns, "with_column",
+                                   vocabs=self.vocabs or None)
         fn = _expr.to_jax_fn(e)
-        return self._run(("with_column", name, e),
-                         lambda comm, t: local_with_column(t, name, fn))
+        return self._attach(
+            self._run(("with_column", name, e),
+                      lambda comm, t: local_with_column(t, name, fn)),
+            {n: v for n, v in self.vocabs.items() if n != name})
 
     def _check_columns(self, names: Sequence[str], op: str) -> None:
         missing = [n for n in names if n not in self.columns]
@@ -366,7 +445,8 @@ class DDF:
         """Column projection (zero-copy). Unknown names raise ``KeyError``
         listing the available schema instead of failing inside jit."""
         self._check_columns(names, "project")
-        return DDF({n: self.columns[n] for n in names}, self.counts, self.ctx)
+        return DDF({n: self.columns[n] for n in names}, self.counts, self.ctx,
+                   {n: v for n, v in self.vocabs.items() if n in names})
 
     def drop(self, names: Sequence[str]) -> "DDF":
         """Drop columns — the natural inverse of :meth:`project`."""
@@ -374,7 +454,8 @@ class DDF:
         self._check_columns(names, "drop")
         gone = set(names)
         return DDF({k: v for k, v in self.columns.items() if k not in gone},
-                   self.counts, self.ctx)
+                   self.counts, self.ctx,
+                   {k: v for k, v in self.vocabs.items() if k not in gone})
 
     def rename(self, mapping: Mapping[str, str]) -> "DDF":
         """Column rename (paper Fig. 6 Modin-algebra surface; zero-copy).
@@ -386,7 +467,8 @@ class DDF:
         if dup:
             raise ValueError(f"rename: duplicate target column(s) {sorted(dup)}")
         return DDF({mapping.get(k, k): v for k, v in self.columns.items()},
-                   self.counts, self.ctx)
+                   self.counts, self.ctx,
+                   {mapping.get(k, k): v for k, v in self.vocabs.items()})
 
     def map_columns(self, fn, name: str = "map") -> "DDF":
         """Legacy column-wise map over the raw column dict (deprecated —
@@ -406,29 +488,34 @@ class DDF:
         vs broadcast AND the shuffle pipeline depth from the cost model;
         ``num_chunks`` overrides the depth (1 = monolithic all-to-all)."""
         on = tuple(on)
+        left, right, merged = self._unify_vocabs_with(other, "join")
         nw = self.ctx.nworkers
         if strategy == "auto":
             plan = patterns.plan_join(
-                self.num_rows(), other.num_rows(), nw, self.capacity,
+                left.num_rows(), right.num_rows(), nw, left.capacity,
                 params=cost_model.params_for_fabric(self.ctx.fabric))
             strategy = plan.strategy
             if num_chunks is None:
                 num_chunks = plan.num_chunks
         num_chunks = num_chunks or 1
-        quota = quota or default_quota(self.capacity, nw)
-        capacity = capacity or 2 * self.capacity
+        quota = quota or default_quota(left.capacity, nw)
+        capacity = capacity or 2 * left.capacity
         if strategy == "broadcast":
             # replicate the small side; left/right column roles are preserved
             # either way (matches the lazy planner's broadcast_left/right)
-            gather = "left" if self.num_rows() <= other.num_rows() else "right"
-            return self._run(("bjoin", on, capacity, gather),
-                             lambda comm, l, r: operators.dist_join_broadcast(
-                                 comm, l, r, on, capacity, gather=gather),
-                             other)
-        return self._run(("join", on, quota, capacity, num_chunks),
-                         lambda comm, l, r: operators.dist_join_shuffle(
-                             comm, l, r, on, quota, capacity, num_chunks=num_chunks),
-                         other)
+            gather = "left" if left.num_rows() <= right.num_rows() else "right"
+            return self._attach(
+                left._run(("bjoin", on, capacity, gather),
+                          lambda comm, l, r: operators.dist_join_broadcast(
+                              comm, l, r, on, capacity, gather=gather),
+                          right),
+                merged)
+        return self._attach(
+            left._run(("join", on, quota, capacity, num_chunks),
+                      lambda comm, l, r: operators.dist_join_shuffle(
+                          comm, l, r, on, quota, capacity, num_chunks=num_chunks),
+                      right),
+            merged)
 
     def groupby(self, by: Sequence[str], aggs,
                 pre_combine: bool | None = None, cardinality_hint: float | None = None,
@@ -449,6 +536,19 @@ class DDF:
             aggs, renames = _expr.parse_agg_specs(aggs)
         aggs = {k: tuple(v) for k, v in aggs.items()}
         self._check_columns(sorted(aggs), "groupby(aggs)")
+        bad = sorted(f"{c}.{o}" for c, ops_ in aggs.items() for o in ops_
+                     if c in self.vocabs and o in ("sum", "mean"))
+        if bad:
+            raise TypeError(
+                f"groupby: aggregation(s) {bad} are arithmetic over a "
+                f"dict-encoded string column — codes have order but no "
+                f"arithmetic; only min/max/count apply to strings")
+        out_vocabs = dict(self.vocabs)
+        for c, ops_ in aggs.items():
+            if c in self.vocabs:  # ordered aggs of a dict column stay dict
+                for o in ops_:
+                    if o in ("min", "max"):
+                        out_vocabs[f"{c}_{o}"] = self.vocabs[c]
         nw = self.ctx.nworkers
         if pre_combine is None:
             # planning reads row counts (a blocking device->host sync), so it
@@ -465,8 +565,11 @@ class DDF:
         capacity = capacity or self.capacity
         key = ("groupby", by, tuple(sorted(aggs.items())), pre_combine, quota,
                capacity, num_chunks)
-        res = self._run(key, lambda comm, t: operators.dist_groupby(
-            comm, t, by, aggs, quota, capacity, pre_combine, num_chunks=num_chunks))
+        res = self._attach(
+            self._run(key, lambda comm, t: operators.dist_groupby(
+                comm, t, by, aggs, quota, capacity, pre_combine,
+                num_chunks=num_chunks)),
+            out_vocabs)
         if renames:
             res = (res[0].rename(dict(renames)),) + tuple(res[1:])
         return res
@@ -478,34 +581,42 @@ class DDF:
         nw = self.ctx.nworkers
         quota = quota or default_quota(self.capacity, nw)
         capacity = capacity or self.capacity
-        return self._run(("unique", subset, quota, capacity, num_chunks),
-                         lambda comm, t: operators.dist_unique(
-                             comm, t, subset, quota, capacity, num_chunks=num_chunks))
+        return self._attach(
+            self._run(("unique", subset, quota, capacity, num_chunks),
+                      lambda comm, t: operators.dist_unique(
+                          comm, t, subset, quota, capacity, num_chunks=num_chunks)),
+            self.vocabs)
 
     def union(self, other: "DDF", on: Sequence[str], quota: int | None = None,
               capacity: int | None = None, num_chunks: int = 1):
         """Set union by key (concat + distributed unique, paper Table 2)."""
         on = tuple(on)
+        left, right, merged = self._unify_vocabs_with(other, "union")
         nw = self.ctx.nworkers
-        cap = self.capacity + other.capacity
+        cap = left.capacity + right.capacity
         quota = quota or default_quota(cap, nw)
         capacity = capacity or cap
-        return self._run(("union", on, quota, capacity, num_chunks),
-                         lambda comm, l, r: operators.dist_union(
-                             comm, l, r, on, quota, capacity, num_chunks=num_chunks),
-                         other)
+        return self._attach(
+            left._run(("union", on, quota, capacity, num_chunks),
+                      lambda comm, l, r: operators.dist_union(
+                          comm, l, r, on, quota, capacity, num_chunks=num_chunks),
+                      right),
+            merged)
 
     def difference(self, other: "DDF", on: Sequence[str], quota: int | None = None,
                    capacity: int | None = None, num_chunks: int = 1):
         """Set difference by key (co-partition + local anti-join)."""
         on = tuple(on)
+        left, right, merged = self._unify_vocabs_with(other, "difference")
         nw = self.ctx.nworkers
-        quota = quota or default_quota(self.capacity, nw)
-        capacity = capacity or self.capacity
-        return self._run(("difference", on, quota, capacity, num_chunks),
-                         lambda comm, l, r: operators.dist_difference(
-                             comm, l, r, on, quota, capacity, num_chunks=num_chunks),
-                         other)
+        quota = quota or default_quota(left.capacity, nw)
+        capacity = capacity or left.capacity
+        return self._attach(
+            left._run(("difference", on, quota, capacity, num_chunks),
+                      lambda comm, l, r: operators.dist_difference(
+                          comm, l, r, on, quota, capacity, num_chunks=num_chunks),
+                      right),
+            merged)
 
     def sort_values(self, by: str, descending: bool = False, quota: int | None = None,
                     capacity: int | None = None, num_chunks: int = 1):
@@ -514,15 +625,25 @@ class DDF:
         nw = self.ctx.nworkers
         quota = quota or default_quota(self.capacity, nw, safety=3.0)
         capacity = capacity or 2 * self.capacity
-        return self._run(("sort", by, descending, quota, capacity, num_chunks),
-                         lambda comm, t: operators.dist_sort(
-                             comm, t, by, quota, capacity, descending=descending,
-                             num_chunks=num_chunks))
+        return self._attach(
+            self._run(("sort", by, descending, quota, capacity, num_chunks),
+                      lambda comm, t: operators.dist_sort(
+                          comm, t, by, quota, capacity, descending=descending,
+                          num_chunks=num_chunks)),
+            self.vocabs)
 
     def agg(self, column: str, op: str):
+        if column in self.vocabs and op not in ("min", "max", "count"):
+            raise TypeError(
+                f"agg: {op!r} over dict-encoded string column {column!r} — "
+                f"codes have order but no arithmetic; only min/max/count "
+                f"apply to strings")
         out = self._run(("agg", column, op),
                         lambda comm, t: (operators.dist_column_agg(comm, t, column, op),))
-        return np.asarray(out)[0]  # replicated; take worker 0's copy
+        val = np.asarray(out)[0]  # replicated; take worker 0's copy
+        if column in self.vocabs and op in ("min", "max"):
+            return self.vocabs[column].words[int(val)]  # decode the scalar
+        return val
 
     def length(self) -> int:
         out = self._run(("length",), lambda comm, t: (operators.dist_length(comm, t),))
@@ -545,12 +666,16 @@ class DDF:
     def rebalance(self, quota: int | None = None, num_chunks: int = 1):
         """Evenly redistribute rows across workers, preserving global order."""
         quota = quota or self.capacity
-        return self._run(("rebalance", quota, num_chunks),
-                         lambda comm, t: operators.rebalance(
-                             comm, t, quota, num_chunks=num_chunks))
+        return self._attach(
+            self._run(("rebalance", quota, num_chunks),
+                      lambda comm, t: operators.rebalance(
+                          comm, t, quota, num_chunks=num_chunks)),
+            self.vocabs)
 
     def head(self, k: int) -> "DDF":
-        return self._run(("head", k), lambda comm, t: operators.dist_head(comm, t, k))
+        return self._attach(
+            self._run(("head", k), lambda comm, t: operators.dist_head(comm, t, k)),
+            self.vocabs)
 
     # -- lazy plan layer (repro.plan) -------------------------------------------
     def lazy(self):

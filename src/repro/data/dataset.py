@@ -34,9 +34,12 @@ from typing import Iterable, Iterator, Mapping, Sequence
 
 import numpy as np
 
+from ..core.vocab import DICT_DTYPE, DictVocab, encode_strings, storage_dtype
+
 __all__ = [
     "DatasetManifest",
     "DatasetWriter",
+    "DatasetSchemaError",
     "write_dataset",
     "open_dataset",
     "read_chunk",
@@ -50,6 +53,32 @@ __all__ = [
 DEFAULT_CHUNK_ROWS = 65536
 _MANIFEST_NAME = "manifest.json"
 _VERSION = 1
+#: reserved npz member prefix carrying a dict column's per-chunk vocab
+_VOCAB_MEMBER = "__vocab__"
+
+
+class DatasetSchemaError(ValueError):
+    """A CSV cell (or appended array) cannot be parsed as its schema dtype.
+
+    Raised with the offending column *named* — the actionable replacement
+    for the raw ``ValueError`` numpy's float conversion used to surface on
+    non-numeric cells. String-valued columns belong in the dict-encoded
+    path: declare them with dtype ``"dict"``."""
+
+
+def _dtype_name(d) -> str:
+    """Canonical dtype string for a schema entry.
+
+    ``"dict"`` passes through (it is not a numpy dtype — codes are stored
+    as int32, the vocab rides in the manifest); numpy string dtypes
+    (kind U/S) normalize *to* ``"dict"`` so schema inference from string
+    arrays lands in the dict-encoded path automatically."""
+    if isinstance(d, str) and d == DICT_DTYPE:
+        return DICT_DTYPE
+    dt = np.dtype(d)
+    if dt.kind in ("U", "S"):
+        return DICT_DTYPE
+    return dt.name
 
 
 def normalize_schema(schema) -> tuple:
@@ -57,16 +86,19 @@ def normalize_schema(schema) -> tuple:
     sorted by name — the same convention ``repro.plan.logical`` uses.
 
     Accepts a ``{name: dtype}`` mapping (scalar columns), an iterable of
-    ``(name, dtype, tail)`` triples, or an already-normalized tuple.
+    ``(name, dtype, tail)`` triples, or an already-normalized tuple. The
+    dtype ``"dict"`` (or any numpy string dtype, which normalizes to it)
+    marks a dict-encoded string column — int32 codes on disk/device plus a
+    manifest-level vocabulary (see docs/TYPES.md).
     """
     if isinstance(schema, Mapping):
-        items = [(str(n), np.dtype(d).name, ()) for n, d in schema.items()]
+        items = [(str(n), _dtype_name(d), ()) for n, d in schema.items()]
     else:
         items = []
         for entry in schema:
             name, dt = entry[0], entry[1]
             tail = tuple(int(x) for x in (entry[2] if len(entry) > 2 else ()))
-            items.append((str(name), np.dtype(dt).name, tail))
+            items.append((str(name), _dtype_name(dt), tail))
     return tuple(sorted(items))
 
 
@@ -89,6 +121,12 @@ class DatasetManifest:
     stats: tuple | None = None
     #: KMV sketch size the stats were computed with
     stats_k: int = 128
+    #: merged vocabularies of the dict-encoded columns:
+    #: ``((name, (word, ...)), ...)`` sorted by name. Chunk files carry
+    #: their own (smaller) per-chunk vocabs; ``read_chunk`` remaps codes
+    #: into this manifest-level space so every decoded batch shares one
+    #: code space per column.
+    vocabs: tuple = ()
 
     @property
     def num_rows(self) -> int:
@@ -99,12 +137,18 @@ class DatasetManifest:
     def column_names(self) -> tuple:
         return tuple(n for n, _, _ in self.schema)
 
+    @property
+    def vocab_map(self) -> dict:
+        """Dict-column vocabularies as ``{name: DictVocab}``."""
+        return {n: DictVocab(tuple(words)) for n, words in self.vocabs}
+
     def row_bytes(self) -> float:
-        """Bytes per row implied by the schema (drives batch sizing)."""
+        """Bytes per row implied by the schema (drives batch sizing);
+        dict columns count their int32 storage width."""
         total = 0.0
         for _, dt, tail in self.schema:
-            total += np.dtype(dt).itemsize * float(np.prod(tail)) if tail \
-                else np.dtype(dt).itemsize
+            size = np.dtype(storage_dtype(dt)).itemsize
+            total += size * float(np.prod(tail)) if tail else size
         return max(total, 1.0)
 
     def save(self) -> str:
@@ -126,6 +170,8 @@ class DatasetManifest:
                 "k": int(self.stats_k),
                 "chunks": [cs.to_json() for cs in self.stats],
             }
+        if self.vocabs:
+            payload["vocabs"] = {n: list(words) for n, words in self.vocabs}
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f, indent=1)
@@ -157,7 +203,11 @@ class DatasetManifest:
                 stats_k = int(raw.get("k", DEFAULT_KMV_K))
                 stats = tuple(ChunkStats.from_json(c, stats_k)
                               for c in raw["chunks"])
-        return cls(directory, schema, chunks, stats=stats, stats_k=stats_k)
+        vocabs = tuple(sorted(
+            (str(n), tuple(str(w) for w in words))
+            for n, words in (payload.get("vocabs") or {}).items()))
+        return cls(directory, schema, chunks, stats=stats, stats_k=stats_k,
+                   vocabs=vocabs)
 
 
 class DatasetWriter:
@@ -245,6 +295,12 @@ class DatasetWriter:
         lengths = {len(v) for v in cols.values()}
         if len(lengths) != 1:
             raise ValueError(f"append: column lengths disagree: {lengths}")
+        for cn, dt, _ in self._schema:
+            if dt == DICT_DTYPE and cols[cn].dtype.kind not in ("U", "S", "O"):
+                raise DatasetSchemaError(
+                    f"append: column {cn!r} is dict-encoded (string) but got "
+                    f"a {cols[cn].dtype} array — dict columns take decoded "
+                    "string values; codes are assigned at flush time")
         n = lengths.pop()
         if n == 0:
             return
@@ -261,8 +317,19 @@ class DatasetWriter:
         head = {k: v[:rows] for k, v in merged.items()}
         tail = {k: v[rows:] for k, v in merged.items()}
         fname = f"chunk-{len(self._chunks):05d}.npz"
+        # dict columns flush as int32 codes + a per-chunk sorted vocab under
+        # the reserved __vocab__<name> member; read_chunk remaps the codes
+        # into the manifest-level merged vocab space. Sketches see the
+        # *decoded* strings so min/max bounds and KMV distinct stay in value
+        # space (chunk skipping on string predicates).
+        payload = dict(head)
+        for n, dt, _ in self._schema:
+            if dt == DICT_DTYPE:
+                codes, cv = encode_strings(head[n])
+                payload[n] = codes
+                payload[_VOCAB_MEMBER + n] = cv.values
         save = np.savez_compressed if self.compress else np.savez
-        save(os.path.join(self.directory, fname), **head)
+        save(os.path.join(self.directory, fname), **payload)
         if self.stats_enabled:
             from ..stats.sketch import ChunkStats  # local: avoid cycle
             self._stats.append(ChunkStats.from_columns(head, self.stats_k))
@@ -289,9 +356,25 @@ class DatasetWriter:
                  else None)
         self._manifest = DatasetManifest(self.directory, self._schema,
                                          tuple(self._chunks), stats=stats,
-                                         stats_k=self.stats_k)
+                                         stats_k=self.stats_k,
+                                         vocabs=self._merged_vocabs())
         self._manifest.save()
         return self._manifest
+
+    def _merged_vocabs(self) -> tuple:
+        """Manifest-level vocabs: the sorted union of every flushed chunk's
+        per-chunk vocab, read back from disk (robust to :meth:`resume` —
+        pre-snapshot chunk vocabs live in their files, not this process)."""
+        dict_cols = [n for n, dt, _ in self._schema if dt == DICT_DTYPE]
+        if not dict_cols:
+            return ()
+        acc = {n: DictVocab(()) for n in dict_cols}
+        for fname, _ in self._chunks:
+            with np.load(os.path.join(self.directory, fname)) as z:
+                for n in dict_cols:
+                    acc[n] = acc[n].merge(
+                        DictVocab(tuple(z[_VOCAB_MEMBER + n])))
+        return tuple(sorted((n, acc[n].words) for n in dict_cols))
 
 
 def write_dataset(data: Mapping[str, np.ndarray], directory: str,
@@ -316,15 +399,28 @@ def open_dataset(directory: str) -> DatasetManifest:
 def read_chunk(manifest: DatasetManifest, index: int,
                columns: Sequence[str] | None = None) -> dict:
     """Decode one chunk (optionally a column projection — only the requested
-    ``.npz`` members are decompressed)."""
+    ``.npz`` members are decompressed). Dict-encoded columns come back as
+    int32 codes remapped from the chunk's own vocab into the manifest-level
+    merged vocab (a monotone ``np.searchsorted`` gather), so all chunks of
+    one dataset share one code space per column."""
     fname, rows = manifest.chunks[index]
     names = tuple(columns) if columns is not None else manifest.column_names
     unknown = [n for n in names if n not in manifest.column_names]
     if unknown:
         raise KeyError(f"read_chunk: unknown column(s) {unknown}; "
                        f"schema: {list(manifest.column_names)}")
+    dict_cols = {n for n, dt, _ in manifest.schema if dt == DICT_DTYPE}
+    vocabs = manifest.vocab_map if dict_cols & set(names) else {}
     with np.load(os.path.join(manifest.directory, fname)) as z:
-        out = {n: z[n] for n in names}
+        out = {}
+        for n in names:
+            v = z[n]
+            if n in dict_cols and n in vocabs:
+                chunk_vocab = DictVocab(tuple(z[_VOCAB_MEMBER + n]))
+                remap = chunk_vocab.recode_map(vocabs[n])
+                v = (remap[v] if len(remap)
+                     else np.zeros_like(v)).astype(np.int32)
+            out[n] = v
     for n, v in out.items():
         if len(v) != rows:
             raise ValueError(f"{fname}: column {n!r} has {len(v)} rows, "
@@ -361,7 +457,8 @@ def read_rows(manifest: DatasetManifest, start: int, stop: int,
     for n in names:
         dt, tail = dtypes[n]
         out[n] = (np.concatenate(parts[n]) if parts[n]
-                  else np.zeros((0,) + tuple(tail), dtype=np.dtype(dt)))
+                  else np.zeros((0,) + tuple(tail),
+                                dtype=np.dtype(storage_dtype(dt))))
     return out
 
 
@@ -405,8 +502,28 @@ def _typed_chunk(rows: list, schema_t: tuple, idx: dict) -> dict:
     out = {}
     for n, dt, _tail in schema_t:
         col = [r[idx[n]] for r in rows]
-        out[n] = np.asarray(col, dtype=np.dtype(dt))
+        if dt == DICT_DTYPE:
+            # string columns route into the dict-encoded path: kept as
+            # decoded strings here, code-assigned by the DatasetWriter
+            out[n] = np.asarray(col, dtype=np.str_)
+            continue
+        try:
+            out[n] = np.asarray(col, dtype=np.dtype(dt))
+        except ValueError as exc:
+            bad = next((c for c in col if not _parses_as(c, dt)), col[0])
+            raise DatasetSchemaError(
+                f"column {n!r}: CSV value {bad!r} cannot be parsed as "
+                f"{dt} — declare the column as 'dict' to ingest strings "
+                f"(dict-encoded), or fix the schema dtype") from exc
     return out
+
+
+def _parses_as(cell: str, dt: str) -> bool:
+    try:
+        np.asarray([cell], dtype=np.dtype(dt))
+        return True
+    except ValueError:
+        return False
 
 
 def csv_to_dataset(files: Iterable[str], schema, directory: str,

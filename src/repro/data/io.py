@@ -17,9 +17,15 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from ..core import DDF, DDFContext
+from ..core.vocab import DICT_DTYPE, DictVocab
 from .dataset import iter_csv_chunks
 
 __all__ = ["read_csv_dist", "write_csv_dist", "assign_files"]
+
+
+def _np_dtype(d) -> np.dtype:
+    """Host numpy dtype for one schema entry (``"dict"`` reads as strings)."""
+    return np.dtype(np.str_) if str(d) == DICT_DTYPE else np.dtype(d)
 
 
 def assign_files(files: Sequence[str], nworkers: int,
@@ -38,7 +44,7 @@ def _read_csv(path: str, schema: Mapping[str, np.dtype]) -> dict[str, np.ndarray
     (``dataset.iter_csv_chunks`` — no row-at-a-time dict materialization)."""
     chunks = list(iter_csv_chunks(path, schema))
     if not chunks:
-        return {k: np.zeros((0,), dtype=d) for k, d in schema.items()}
+        return {k: np.zeros((0,), dtype=_np_dtype(d)) for k, d in schema.items()}
     return {k: np.concatenate([c[k] for c in chunks]) for k in schema}
 
 
@@ -61,7 +67,21 @@ def read_csv_dist(files: Sequence[str], schema: Mapping[str, np.dtype],
         if parts:
             per_worker.append({k: np.concatenate([p[k] for p in parts]) for k in schema})
         else:
-            per_worker.append({k: np.zeros((0,), dtype=d) for k, d in schema.items()})
+            per_worker.append({k: np.zeros((0,), dtype=_np_dtype(d))
+                               for k, d in schema.items()})
+
+    # dict-encode string columns against ONE vocab shared by all partitions:
+    # the distributed invariant every shuffle relies on (codes comparable
+    # across workers) holds by construction for a single ingest.
+    vocabs: dict[str, DictVocab] = {}
+    for k, d in schema.items():
+        if str(d) != DICT_DTYPE:
+            continue
+        vocabs[k] = DictVocab.from_values(
+            np.concatenate([np.asarray(p[k], dtype=np.str_) for p in per_worker])
+            if any(len(p[k]) for p in per_worker) else np.zeros(0, np.str_))
+        for p in per_worker:
+            p[k] = vocabs[k].encode(p[k])
 
     lens = [len(next(iter(p.values()))) for p in per_worker]
     cap = capacity or max(max(lens), 1)
@@ -76,13 +96,16 @@ def read_csv_dist(files: Sequence[str], schema: Mapping[str, np.dtype],
     cols = {}
     counts = np.zeros((nw,), np.int32)
     for k, d in schema.items():
-        buf = np.zeros((nw, cap), dtype=d)
+        buf = np.zeros((nw, cap),
+                       dtype=np.int32 if str(d) == DICT_DTYPE else d)
         for w, p in enumerate(per_worker):
             v = p[k]
             buf[w, : len(v)] = v
             counts[w] = len(v)
         cols[k] = jax.device_put(buf.reshape(nw * cap), ctx.sharding())
-    return DDF(cols, jax.device_put(counts, ctx.sharding()), ctx)
+    out = DDF(cols, jax.device_put(counts, ctx.sharding()), ctx)
+    out.vocabs = vocabs
+    return out
 
 
 def write_csv_dist(ddf: DDF, directory: str, prefix: str = "part") -> list[str]:
@@ -93,6 +116,9 @@ def write_csv_dist(ddf: DDF, directory: str, prefix: str = "part") -> list[str]:
     names = sorted(ddf.columns)
     paths = []
     host = {k: np.asarray(v).reshape(ddf.ctx.nworkers, cap) for k, v in ddf.columns.items()}
+    for k, vocab in getattr(ddf, "vocabs", {}).items():
+        if k in host:  # write decoded strings, not int32 codes
+            host[k] = vocab.decode(host[k])
     for w in range(ddf.ctx.nworkers):
         path = os.path.join(directory, f"{prefix}-{w:05d}.csv")
         with open(path, "w", newline="") as f:

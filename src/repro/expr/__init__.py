@@ -23,6 +23,7 @@ from .tree import (  # noqa: F401
     Expr,
     Lit,
     UnaryOp,
+    bind_vocabs,
     col,
     ensure_columns,
     ensure_row_expr,
@@ -63,6 +64,7 @@ __all__ = [
     "is_when_builder",
     "prepare_row_expr",
     "host_portable",
+    "bind_vocabs",
     "parse_agg_specs",
     "warn_callable_deprecated",
 ]

@@ -59,6 +59,7 @@ __all__ = [
     "is_when_builder",
     "prepare_row_expr",
     "host_portable",
+    "bind_vocabs",
 ]
 
 # op key -> (render symbol, python/array implementation)
@@ -191,6 +192,21 @@ class Expr:
         """Elementwise inequality predicate (``!=`` is structural)."""
         return BinOp("ne", self, _to_expr(o))
 
+    def is_in(self, values) -> "Expr":
+        """Membership predicate: ``col("c").is_in(["iad", "sfo"])``.
+
+        Desugars to an OR chain of :meth:`eq` comparisons, so each literal
+        binds independently against a dict-encoded column's vocab (absent
+        values fold to elementwise false); an empty value list is the
+        constant-false predicate."""
+        vals = list(values)
+        if not vals:
+            return lit(False)
+        out = self.eq(vals[0])
+        for v in vals[1:]:
+            out = BinOp("or", out, self.eq(v))
+        return out
+
     # -- boolean / bitwise ----------------------------------------------------
     # A bare Python bool operand here is almost always the `col(x) == v`
     # mistake (structural equality returns a bool); reject it instead of
@@ -273,7 +289,7 @@ class Col(Expr):
 
 @dataclasses.dataclass(frozen=True)
 class Lit(Expr):
-    """Scalar literal. ``kind`` (bool/int/float) is derived from the value so
+    """Scalar literal. ``kind`` (bool/int/float/str) is derived from the value so
     ``lit(3)`` and ``lit(3.0)`` never alias structurally (Python's
     ``3 == 3.0`` would otherwise make them cache-equal); ``dtype`` pins a
     concrete dtype (else the literal stays weakly typed, letting the column
@@ -294,10 +310,16 @@ class Lit(Expr):
             k = "int"
         elif isinstance(v, float):
             k = "float"
+        elif isinstance(v, str):
+            # string literals only ever compare against dict-encoded
+            # columns; prepare_row_expr rewrites them into int32 code
+            # space (bind_vocabs) before compilation — an unbound string
+            # literal is a typed build-time error, never a device value.
+            k = "str"
         else:
             raise TypeError(
-                f"lit() takes a Python/numpy scalar (bool/int/float), got "
-                f"{type(v).__name__}")
+                f"lit() takes a Python/numpy scalar (bool/int/float/str), "
+                f"got {type(v).__name__}")
         object.__setattr__(self, "kind", k)
 
     def __str__(self):
@@ -395,7 +417,9 @@ def col(name: str) -> Col:
 
 def lit(value, dtype=None) -> Lit:
     """Scalar literal. Weakly typed unless ``dtype`` pins one, mirroring how
-    a bare Python scalar promotes against column dtypes in jax."""
+    a bare Python scalar promotes against column dtypes in jax. String
+    literals are build-time-only: they bind against a dict-encoded column's
+    vocab (``prepare_row_expr``) and never reach the device."""
     return Lit(value, None if dtype is None else str(np.dtype(dtype)))
 
 
@@ -498,14 +522,22 @@ def is_when_builder(value) -> bool:
     return isinstance(value, (_When, _WhenThen))
 
 
-def prepare_row_expr(value, available, op: str) -> "Expr":
+def prepare_row_expr(value, available, op: str, vocabs=None) -> "Expr":
     """The shared normalize-and-validate entry for row-level expression
     inputs (``select`` predicates, ``with_column`` values, scan
     predicates): coerce scalars to literals, reject unfinished ``when``
-    builders and aggregation nodes with guidance, constant-fold, and
-    validate referenced columns against ``available`` (``KeyError`` with
-    the eager wording). Every layer calls this one helper so eager, lazy
-    and scan behavior cannot drift apart."""
+    builders and aggregation nodes with guidance, constant-fold, rewrite
+    string literals into dict-code space against ``vocabs``
+    (:func:`bind_vocabs`), and validate referenced columns against
+    ``available`` (``KeyError`` with the eager wording). Every layer calls
+    this one helper so eager, lazy and scan behavior cannot drift apart.
+
+    Args:
+      vocabs: optional mapping ``column name -> DictVocab`` for the
+        dict-encoded columns in scope. A string literal that still
+        compares against a non-dict column after binding raises a typed
+        ``TypeError`` naming the operation.
+    """
     if is_when_builder(value):
         raise TypeError(
             f"{op}: incomplete when(...) expression: finish the builder "
@@ -513,9 +545,112 @@ def prepare_row_expr(value, available, op: str) -> "Expr":
     _reject_bare_bool(value, op)
     e = value if isinstance(value, Expr) else lit(value)
     e = fold_constants(e)
+    if vocabs:
+        e = fold_constants(bind_vocabs(e, vocabs))
+    _ensure_strings_bound(e, op)
     ensure_row_expr(e, op)
     ensure_columns(e, available, op)
     return e
+
+
+#: comparison flip table for Lit-op-Col orderings (``"x" < col("c")`` is
+#: ``col("c") > "x"``)
+_CMP_FLIP = {"gt": "lt", "ge": "le", "lt": "gt", "le": "ge",
+             "eq": "eq", "ne": "ne"}
+
+
+def _ensure_strings_bound(e: Expr, op: str) -> None:
+    """Reject string literals that survived vocab binding: they compare
+    against a column with no dict vocab in scope (or appear outside a
+    comparison), which has no device meaning."""
+
+    def rec(x: Expr) -> None:
+        if isinstance(x, Lit) and x.kind == "str":
+            raise TypeError(
+                f"{op}: string literal {x.value!r} does not compare against "
+                "a dict-encoded string column here — string comparisons "
+                "require a dict-encoded column (see docs/TYPES.md)")
+        for c in _children(x):
+            rec(c)
+
+    rec(e)
+
+
+def bind_vocabs(e: Expr, vocabs: Mapping) -> Expr:
+    """Rewrite string-literal comparisons into dict-code space.
+
+    For every comparison between ``col(name)`` (with ``name`` in
+    ``vocabs``) and a string literal, emit the equivalent ``int32``
+    code-space predicate against the column's sorted vocab:
+
+    - ``eq``/``ne`` with a *present* literal become code equality; with an
+      *absent* literal they fold to elementwise false / true
+      (``codes < 0`` / ``codes >= 0``) — never an error, matching SQL
+      semantics for a value the data cannot contain;
+    - ordered comparisons use the ``np.searchsorted`` boundary of the
+      literal, which is exact whether or not the literal is present
+      (sorted vocab => codes are order-isomorphic with strings);
+    - a comparison between two dict *columns* requires identical vocabs
+      (join/union unification recodes them first) and raises ``TypeError``
+      otherwise.
+
+    ``vocabs`` maps column name -> :class:`repro.core.vocab.DictVocab`
+    (anything providing ``code_of``/``bound`` works). Non-string parts of
+    the tree pass through untouched.
+    """
+
+    def cmp_code(op: str, name: str, s: str) -> Expr:
+        v = vocabs[name]
+        c = Col(name)
+        if op in ("eq", "ne"):
+            code = v.code_of(s)
+            if code is None:
+                # absent from the vocab: no row can match (eq) / every row
+                # matches (ne) — fold to a constant-valued elementwise
+                # predicate over the codes so shapes stay row-wise
+                return BinOp("lt" if op == "eq" else "ge", c, Lit(0))
+            return BinOp(op, c, Lit(int(code)))
+        side = "left" if op in ("lt", "ge") else "right"
+        bound = int(v.bound(s, side))
+        return BinOp("lt" if op in ("lt", "le") else "ge", c, Lit(bound))
+
+    def rec(x: Expr) -> Expr:
+        if isinstance(x, BinOp):
+            if x.op in _CMP_FLIP:
+                le, ri = x.left, x.right
+                if isinstance(le, Col) and isinstance(ri, Lit) \
+                        and ri.kind == "str" and le.name in vocabs:
+                    return cmp_code(x.op, le.name, ri.value)
+                if isinstance(ri, Col) and isinstance(le, Lit) \
+                        and le.kind == "str" and ri.name in vocabs:
+                    return cmp_code(_CMP_FLIP[x.op], ri.name, le.value)
+                if isinstance(le, Col) and isinstance(ri, Col) \
+                        and le.name in vocabs and ri.name in vocabs \
+                        and vocabs[le.name] != vocabs[ri.name]:
+                    raise TypeError(
+                        f"comparison between dict columns {le.name!r} and "
+                        f"{ri.name!r} with different vocabularies; join or "
+                        "union them first so vocab unification recodes "
+                        "both sides")
+            left, right = rec(x.left), rec(x.right)
+            if left is x.left and right is x.right:
+                return x
+            return BinOp(x.op, left, right)
+        if isinstance(x, UnaryOp):
+            child = rec(x.child)
+            return x if child is x.child else UnaryOp(x.op, child)
+        if isinstance(x, Cond):
+            p, t, f = rec(x.pred), rec(x.if_true), rec(x.if_false)
+            if p is x.pred and t is x.if_true and f is x.if_false:
+                return x
+            return Cond(p, t, f)
+        if isinstance(x, (Cast, Agg, Alias)):
+            child = rec(x.child)
+            return x if child is x.child else \
+                dataclasses.replace(x, child=child)
+        return x
+
+    return rec(e) if vocabs else e
 
 
 def host_portable(e: Expr, schema) -> bool:

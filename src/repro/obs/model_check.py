@@ -139,6 +139,11 @@ def _pattern_for(node):
         return "sample_shuffle_compute", "sort"
     if isinstance(node, L.Rebalance):
         return "shuffle_compute", "map"
+    if isinstance(node, L.Recode):
+        # vocab unification: a pure per-row gather, no communication — the
+        # one EP node charged individually (it is deliberately kept out of
+        # fusion so its cost stays visible)
+        return "embarrassingly_parallel", "map"
     return None
 
 

@@ -53,6 +53,7 @@ from .logical import (
     Node,
     Project,
     Rebalance,
+    Recode,
     Rename,
     Scan,
     Select,
@@ -158,6 +159,14 @@ def _apply_ep(step: Node, t: Table) -> Table:
         return Table(dict(step.fn(t.columns)), t.nvalid)
     if isinstance(step, WithColumn):
         return local_with_column(t, step.name, step.fn)
+    if isinstance(step, Recode):
+        # vocab unification: one int32 gather per recoded column into the
+        # merged code space (maps are tiny host constants baked into the
+        # compiled program — plan identity includes their values)
+        cols = dict(t.columns)
+        for name, m in step.mappings:
+            cols[name] = jnp.asarray(np.asarray(m, np.int32))[cols[name]]
+        return Table(cols, t.nvalid)
     raise TypeError(step)
 
 
@@ -187,7 +196,7 @@ def _make_plan_fn(root: Node, ordered_sids: tuple):
                 for step in node.steps:
                     out = _apply_ep(step, out)
             elif isinstance(node, (Select, Project, Rename, MapColumns,
-                                   WithColumn)):
+                                   WithColumn, Recode)):
                 out = _apply_ep(node, lower(node.child))
             elif isinstance(node, Join):
                 l, r = lower(node.left), lower(node.right)

@@ -32,6 +32,7 @@ from .logical import (
     Node,
     Project,
     Rebalance,
+    Recode,
     Rename,
     Select,
     Sort,
@@ -60,12 +61,16 @@ class LazyDDF:
     """
 
     def __init__(self, root: Node, ctx: DDFContext, sources: Mapping,
-                 scans: Mapping | None = None):
+                 scans: Mapping | None = None, vocabs: Mapping | None = None):
         self._root = root
         self._ctx = ctx
         self._sources = dict(sources)
         # scan sid -> DatasetManifest (out-of-core leaves, repro.stream)
         self._scans = dict(scans or {})
+        # host-side vocabularies of dict-encoded string columns of the
+        # plan's OUTPUT (name -> repro.core.vocab.DictVocab); the device
+        # plan only ever sees their int32 code columns
+        self._vocabs = dict(vocabs or {})
         self.last_info: dict | None = None
         self.last_profile = None  # repro.obs.Profile after collect(profile=True)
 
@@ -75,7 +80,8 @@ class LazyDDF:
         sid = next(_SIDS)
         schema = tuple(sorted(
             (n, str(v.dtype), tuple(v.shape[1:])) for n, v in ddf.columns.items()))
-        return cls(Source(sid, schema, ddf.capacity), ddf.ctx, {sid: ddf})
+        return cls(Source(sid, schema, ddf.capacity), ddf.ctx, {sid: ddf},
+                   vocabs=dict(ddf.vocabs))
 
     # -- introspection ----------------------------------------------------------
     @property
@@ -99,7 +105,8 @@ class LazyDDF:
             raise KeyError(f"{op}: unknown column(s) {missing}; "
                            f"available schema: {sorted(have)}")
 
-    def _derive(self, node: Node, other: "LazyDDF | None" = None) -> "LazyDDF":
+    def _derive(self, node: Node, other: "LazyDDF | None" = None,
+                vocabs: Mapping | None = None) -> "LazyDDF":
         srcs = dict(self._sources)
         scans = dict(self._scans)
         if other is not None:
@@ -107,7 +114,39 @@ class LazyDDF:
                 raise ValueError("cannot combine LazyDDFs from different contexts")
             srcs.update(other._sources)
             scans.update(other._scans)
-        return LazyDDF(node, self._ctx, srcs, scans)
+        return LazyDDF(node, self._ctx, srcs, scans,
+                       vocabs=self._vocabs if vocabs is None else vocabs)
+
+    def _unify(self, other: "LazyDDF", op: str):
+        """Vocab unification at a binary plan boundary: merge each shared
+        dict column's vocabs host-side and wrap either input in an explicit
+        ``RECODE`` node when its codes must move into the merged space —
+        visible in ``explain()`` and charged by the cost model. Returns
+        ``(left_root, right_root, merged_vocabs)``."""
+        lv = {n: v for n, v in self._vocabs.items() if n in self.column_names}
+        rv = {n: v for n, v in other._vocabs.items()
+              if n in other.column_names}
+        mixed = sorted((set(lv) ^ set(rv))
+                       & set(self.column_names) & set(other.column_names))
+        if mixed:
+            raise TypeError(
+                f"{op}: column(s) {mixed} are dict-encoded strings on one "
+                f"side but plain numerics on the other — codes and raw "
+                f"values are not comparable; encode both sides or neither")
+        merged = {**rv, **lv}
+        lmaps, rmaps = [], []
+        for n in sorted(set(lv) & set(rv)):
+            if lv[n].words == rv[n].words:
+                continue
+            mv = lv[n].merge(rv[n])
+            merged[n] = mv
+            if not lv[n].is_identity_into(mv):
+                lmaps.append((n, tuple(int(c) for c in lv[n].recode_map(mv))))
+            if not rv[n].is_identity_into(mv):
+                rmaps.append((n, tuple(int(c) for c in rv[n].recode_map(mv))))
+        lroot = Recode(self._root, tuple(lmaps)) if lmaps else self._root
+        rroot = Recode(other._root, tuple(rmaps)) if rmaps else other._root
+        return lroot, rroot, merged
 
     @staticmethod
     def _coerce(other) -> "LazyDDF":
@@ -140,7 +179,8 @@ class LazyDDF:
         legacy contract that its column-access pattern is data-independent
         (dict iteration / ``in``-membership disable pushdown)."""
         if isinstance(pred, (_expr.Expr, bool)) or _expr.is_when_builder(pred):
-            pred = _expr.prepare_row_expr(pred, self.column_names, "select")
+            pred = _expr.prepare_row_expr(pred, self.column_names, "select",
+                                          vocabs=self._vocabs or None)
             return self._derive(Select(
                 self._root, _expr.to_jax_fn(pred), name,
                 tuple(sorted(_expr.referenced_columns(pred))), expr=pred))
@@ -155,22 +195,28 @@ class LazyDDF:
         literals. The output dtype/shape is inferred from the tree (jax
         promotion rules) for schema propagation; unknown column references
         raise ``KeyError`` at build time."""
-        e = _expr.prepare_row_expr(value, self.column_names, "with_column")
-        return self._derive(WithColumn(self._root, str(name), e,
-                                       fn=_expr.to_jax_fn(e)))
+        e = _expr.prepare_row_expr(value, self.column_names, "with_column",
+                                   vocabs=self._vocabs or None)
+        return self._derive(
+            WithColumn(self._root, str(name), e, fn=_expr.to_jax_fn(e)),
+            vocabs={n: v for n, v in self._vocabs.items() if n != name})
 
     def project(self, names: Sequence[str]) -> "LazyDDF":
         """Keep only ``names`` (validated against the propagated schema)."""
         names = tuple(names)
         self._check(names, "project")
-        return self._derive(Project(self._root, names))
+        return self._derive(
+            Project(self._root, names),
+            vocabs={n: v for n, v in self._vocabs.items() if n in set(names)})
 
     def drop(self, names: Sequence[str]) -> "LazyDDF":
         """Drop columns — inverse of :meth:`project`."""
         names = tuple(names)
         self._check(names, "drop")
         keep = tuple(n for n in self.column_names if n not in set(names))
-        return self._derive(Project(self._root, keep))
+        return self._derive(
+            Project(self._root, keep),
+            vocabs={n: v for n, v in self._vocabs.items() if n in set(keep)})
 
     def rename(self, mapping: Mapping[str, str]) -> "LazyDDF":
         """Rename columns (old -> new). Colliding targets raise ValueError
@@ -180,7 +226,9 @@ class LazyDDF:
         dup = {t for t in targets if targets.count(t) > 1}
         if dup:
             raise ValueError(f"rename: duplicate target column(s) {sorted(dup)}")
-        return self._derive(Rename(self._root, tuple(sorted(mapping.items()))))
+        return self._derive(
+            Rename(self._root, tuple(sorted(mapping.items()))),
+            vocabs={mapping.get(n, n): v for n, v in self._vocabs.items()})
 
     def map_columns(self, fn: Callable, name: str = "map") -> "LazyDDF":
         """Legacy column-wise map over the raw column dict (deprecated —
@@ -193,7 +241,8 @@ class LazyDDF:
                 f"map_columns '{name}': fn must return a column mapping when "
                 "probed on a tiny table (needed for schema propagation)")
         return self._derive(MapColumns(self._root, fn, name, used, out_schema,
-                                       fn_sig=callable_signature(fn)))
+                                       fn_sig=callable_signature(fn)),
+                            vocabs={})  # opaque map: code semantics unknown
 
     # -- keyed / shuffle ops ------------------------------------------------------
     def join(self, other, on: Sequence[str], strategy: str = "auto",
@@ -205,8 +254,10 @@ class LazyDDF:
         on = tuple(on)
         self._check(on, "join")
         other._check(on, "join(right)")
-        return self._derive(Join(self._root, other._root, on, strategy,
-                                 quota, capacity, num_chunks), other)
+        lroot, rroot, merged = self._unify(other, "join")
+        return self._derive(Join(lroot, rroot, on, strategy,
+                                 quota, capacity, num_chunks), other,
+                            vocabs=merged)
 
     def groupby(self, by: Sequence[str], aggs,
                 pre_combine: bool | None = None,
@@ -226,8 +277,23 @@ class LazyDDF:
         self._check(by, "groupby")
         self._check(tuple(aggs), "groupby(aggs)")
         aggs_t = tuple(sorted((k, tuple(v)) for k, v in aggs.items()))
+        bad = sorted(f"{c}.{o}" for c, ops_ in aggs_t for o in ops_
+                     if c in self._vocabs and o in ("sum", "mean"))
+        if bad:
+            raise TypeError(
+                f"groupby: aggregation(s) {bad} are arithmetic over a "
+                f"dict-encoded string column — codes have order but no "
+                f"arithmetic; only min/max/count apply to strings")
+        out_vocabs = {n: v for n, v in self._vocabs.items() if n in set(by)}
+        for c, ops_ in aggs_t:
+            if c in self._vocabs:  # ordered aggs of a dict column stay dict
+                for o in ops_:
+                    if o in ("min", "max"):
+                        out_vocabs[f"{c}_{o}"] = self._vocabs[c]
         out = self._derive(GroupBy(self._root, by, aggs_t, pre_combine,
-                                   cardinality_hint, quota, capacity, num_chunks))
+                                   cardinality_hint, quota, capacity,
+                                   num_chunks),
+                           vocabs=out_vocabs)
         return out.rename(dict(renames)) if renames else out
 
     def unique(self, subset: Sequence[str], quota: int | None = None,
@@ -249,8 +315,9 @@ class LazyDDF:
             raise ValueError(
                 f"union: schema mismatch {sorted(self.column_names)} vs "
                 f"{sorted(other.column_names)}")
-        return self._derive(Union(self._root, other._root, on, quota,
-                                  capacity, num_chunks), other)
+        lroot, rroot, merged = self._unify(other, "union")
+        return self._derive(Union(lroot, rroot, on, quota,
+                                  capacity, num_chunks), other, vocabs=merged)
 
     def difference(self, other, on: Sequence[str], quota: int | None = None,
                    capacity: int | None = None,
@@ -260,8 +327,10 @@ class LazyDDF:
         on = tuple(on)
         self._check(on, "difference")
         other._check(on, "difference(right)")
-        return self._derive(Difference(self._root, other._root, on, quota,
-                                       capacity, num_chunks), other)
+        lroot, rroot, merged = self._unify(other, "difference")
+        return self._derive(Difference(lroot, rroot, on, quota,
+                                       capacity, num_chunks), other,
+                            vocabs=merged)
 
     def sort_values(self, by: str, descending: bool = False,
                     quota: int | None = None, capacity: int | None = None,
@@ -313,6 +382,8 @@ class LazyDDF:
         out, info = executor.execute(self._root, self._ctx, self._sources,
                                      src_rows=self._rows(), level=level)
         self.last_info = info
+        out.vocabs = {n: v for n, v in self._vocabs.items()
+                      if n in out.columns}
         return out
 
     def collect_stream(self, batch_rows: int | None = None,
@@ -327,6 +398,8 @@ class LazyDDF:
         out, info = _runner.collect(self, batch_rows=batch_rows,
                                     prefetch=prefetch, **opts)
         self.last_info = info
+        out.vocabs = {n: v for n, v in self._vocabs.items()
+                      if n in out.columns}
         return out
 
     def to_batches(self, batch_rows: int | None = None,
@@ -337,10 +410,21 @@ class LazyDDF:
         each yielded batch is one morsel through the compiled plan and the
         full result never materializes. Plans whose tail needs carry/spill
         finalization finalize first, then yield the result in
-        ``batch_rows``-sized slices."""
+        ``batch_rows``-sized slices. Dict-encoded string columns are
+        decoded per batch — consumers see strings, never codes."""
         from ..stream import runner as _runner
-        return _runner.to_batches(self, batch_rows=batch_rows,
-                                  prefetch=prefetch, **opts)
+        batches = _runner.to_batches(self, batch_rows=batch_rows,
+                                     prefetch=prefetch, **opts)
+        if not self._vocabs:
+            return batches
+        vocabs = dict(self._vocabs)
+
+        def decoded():
+            for b in batches:
+                yield {n: (vocabs[n].decode(v) if n in vocabs else v)
+                       for n, v in b.items()}
+
+        return decoded()
 
     def collect_with_info(self, level: str = "all"):
         """Like :meth:`collect` but returns ``(DDF, info dict)``."""

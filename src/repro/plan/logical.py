@@ -60,6 +60,7 @@ __all__ = [
     "Difference",
     "Sort",
     "Rebalance",
+    "Recode",
     "Fused",
     "Schema",
     "schema_of",
@@ -321,6 +322,27 @@ class Rebalance(Node):
 
 
 @dataclasses.dataclass(frozen=True)
+class Recode(Node):
+    """Vocab-unification recode of dict-encoded code columns
+    (embarrassingly parallel). Inserted at Join/Union/Difference boundaries
+    where the two inputs carry *different* vocabularies for a shared string
+    column: the merged vocab is computed host-side at plan-build time and
+    ``mappings`` holds the per-column monotone gather maps into the merged
+    code space — ``((name, (new_code_for_old_code_i, ...)), ...)`` sorted
+    by name. Execution is one ``int32`` gather per column
+    (``new = map[old]``).
+
+    Deliberately *not* fused into EP chains: it stays a standalone node so
+    ``explain()`` shows the RECODE step and the cost model charges it
+    individually (``repro.obs.model_check``)."""
+
+    child: Node
+    mappings: tuple
+
+    _CHILD_FIELDS: ClassVar[tuple] = ("child",)
+
+
+@dataclasses.dataclass(frozen=True)
 class Fused(Node):
     """A chain of embarrassingly-parallel steps compiled as one shard_map
     body (the optimizer's fusion pass). ``steps`` apply in order to the
@@ -470,7 +492,7 @@ def schema_of(node: Node, memo: dict | None = None) -> Schema:
         else:
             keep = set(node.columns)
             s = tuple(x for x in node.schema if x[0] in keep)
-    elif isinstance(node, (Select, Sort, Rebalance, Unique)):
+    elif isinstance(node, (Select, Sort, Rebalance, Unique, Recode)):
         s = schema_of(node.child, memo)
     elif isinstance(node, Project):
         d = {n: (dt, tail) for n, dt, tail in schema_of(node.child, memo)}
@@ -516,7 +538,8 @@ def capacity_of(node: Node, nworkers: int) -> int:
     """Static per-partition output capacity, mirroring the eager defaults."""
     if isinstance(node, (Source, Scan)):
         return node.capacity
-    if isinstance(node, (Select, Project, Rename, MapColumns, WithColumn, Fused)):
+    if isinstance(node, (Select, Project, Rename, MapColumns, WithColumn,
+                         Recode, Fused)):
         return capacity_of(node.child, nworkers)
     if isinstance(node, Join):
         return node.capacity if node.capacity else 2 * capacity_of(node.left, nworkers)
@@ -576,6 +599,12 @@ def partitioning_of(node: Node) -> tuple | None:
         return partitioning_of(node.left) if node.elide_shuffle else node.on
     if isinstance(node, (Sort, Rebalance)):
         return None  # range/round-robin placement, not hash
+    if isinstance(node, Recode):
+        p = partitioning_of(node.child)
+        # rows don't move, but a recoded key column's hash placement no
+        # longer matches hash_partition_ids over its (new) values
+        recoded = {n for n, _ in node.mappings}
+        return None if p and (set(p) & recoded) else p
     if isinstance(node, Fused):
         p = partitioning_of(node.child)
         for step in node.steps:
@@ -624,7 +653,7 @@ def estimate_rows(node: Node, src_rows: Mapping, memo: dict | None = None,
         r = SELECT_SELECTIVITY * estimate_rows(node.child, src_rows, memo,
                                                stats)
     elif isinstance(node, (Project, Rename, MapColumns, WithColumn, Sort,
-                           Rebalance)):
+                           Rebalance, Recode)):
         r = estimate_rows(node.child, src_rows, memo, stats)
     elif isinstance(node, Join):
         r = max(estimate_rows(node.left, src_rows, memo, stats),
@@ -752,6 +781,9 @@ def _describe(node: Node) -> str:
         if node.num_chunks is not None:
             parts.append(f"num_chunks={node.num_chunks}")
         return "REBALANCE" + ((" " + " ".join(parts)) if parts else "")
+    if isinstance(node, Recode):
+        shown = " ".join(f"{n}->|{len(m)}|" for n, m in node.mappings)
+        return f"RECODE {shown}"
     if isinstance(node, Fused):
         inner = []
         for s in node.steps:

@@ -46,6 +46,7 @@ from .logical import (
     Node,
     Project,
     Rebalance,
+    Recode,
     Rename,
     Scan,
     Select,
@@ -271,6 +272,15 @@ def pushdown_projections(root: Node) -> Node:
         if isinstance(node, Rebalance):
             child = _maybe_project(prune(node.child, needed), frozenset(needed))
             return dataclasses.replace(node, child=child)
+        if isinstance(node, Recode):
+            # keep only the gather maps for columns an ancestor reads; a
+            # fully-pruned recode disappears (the merged-vocab metadata
+            # lives on the LazyDDF, not the node)
+            maps = tuple((n, m) for n, m in node.mappings if n in needed)
+            child = prune(node.child, needed)
+            if not maps:
+                return child
+            return dataclasses.replace(node, mappings=maps, child=child)
         # Source (and any leaf): narrowing happens at the consumer boundary.
         return node
 
@@ -351,6 +361,16 @@ def pushdown_scans(root: Node) -> Node:
             sel = node.child
             return dataclasses.replace(
                 sel, child=dataclasses.replace(node, child=sel.child))
+        if isinstance(node, Project) and isinstance(node.child, Recode):
+            # PROJECT(RECODE(x)) -> RECODE(PROJECT(x)): projections keep
+            # sinking toward the scan; maps for projected-away columns drop
+            rc = node.child
+            keep = set(node.names)
+            maps = tuple((n, m) for n, m in rc.mappings if n in keep)
+            proj = dataclasses.replace(node, child=rc.child)
+            if not maps:
+                return proj
+            return dataclasses.replace(rc, mappings=maps, child=proj)
         return node
 
     prev = None

@@ -38,6 +38,7 @@ from typing import Mapping
 
 import numpy as np
 
+from ..core.vocab import DICT_DTYPE
 from ..expr.tree import (
     Alias,
     BinOp,
@@ -52,6 +53,7 @@ from ..plan.logical import (
     GroupBy,
     Project,
     Rebalance,
+    Recode,
     Scan,
     Select,
     Unique,
@@ -75,8 +77,10 @@ _FIXED_SELECTIVITY = 0.5  # mirror of plan.logical.SELECT_SELECTIVITY
 #: node types that pass key columns through from a scan unchanged — the
 #: transparency condition for trusting scan-level key sketches at a
 #: downstream groupby/unique (Rename/WithColumn/MapColumns/Join all may
-#: rewrite or multiply keys, so they opt out of estimation)
-_KEY_TRANSPARENT = (Scan, Select, Project, Rebalance)
+#: rewrite or multiply keys, so they opt out of estimation). Recode is a
+#: per-column injective code remap: it changes code *values* but never the
+#: number of distinct keys, which is all the cardinality path consumes.
+_KEY_TRANSPARENT = (Scan, Select, Project, Rebalance, Recode)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +193,10 @@ def expr_interval(e, ranges: Mapping[str, Interval]) -> Interval | None:
     if isinstance(e, Lit):
         if e.kind == "bool":
             return _TRUE if e.value else _FALSE
+        if e.kind == "str":
+            # an *unbound* string literal (bound ones are int code
+            # literals); no numeric interval exists for it
+            return None
         v = float(e.value)
         if math.isnan(v):
             return None
@@ -264,12 +272,32 @@ def expr_interval(e, ranges: Mapping[str, Interval]) -> Interval | None:
     return None  # Agg and future node types: unknown
 
 
-def _chunk_ranges(cs: ChunkStats, schema: tuple) -> dict:
-    """Column bound intervals for one chunk (unusable bounds omitted)."""
-    kinds = {n: np.dtype(dt).kind for n, dt, tail in schema if not tail}
+def _chunk_ranges(cs: ChunkStats, schema: tuple, vocabs=None) -> dict:
+    """Column bound intervals for one chunk (unusable bounds omitted).
+
+    Dict-encoded string columns sketch their *string* min/max; because the
+    manifest vocab is sorted, mapping both bounds to their codes yields a
+    valid interval over the int32 code column the device (and every bound
+    predicate literal) actually sees. Chunk bounds are values present in
+    the dataset, so the lookup always hits; a miss (stale stats) just
+    omits the column — conservative, never wrong."""
+    kinds = {}
+    for n, dt, tail in schema:
+        if not tail:
+            kinds[n] = ("dict" if str(dt) == DICT_DTYPE
+                        else np.dtype(dt).kind)
     out = {}
     for name, col in cs.columns:
         if col.min is None or col.max is None:
+            continue
+        if kinds.get(name) == "dict":
+            v = (vocabs or {}).get(name)
+            if v is None:
+                continue
+            lo, hi = v.code_of(str(col.min)), v.code_of(str(col.max))
+            if lo is None or hi is None:
+                continue
+            out[name] = Interval(float(lo), float(hi))
             continue
         boolish = kinds.get(name) == "b"
         out[name] = Interval(float(col.min), float(col.max), boolish)
@@ -294,13 +322,14 @@ def chunk_skip_mask(manifest, pred_sigs) -> np.ndarray:
     if stats is None or len(stats) != n:
         return skip
     exprs = [s for s in pred_sigs if isinstance(s, Expr)]
+    vocabs = getattr(manifest, "vocab_map", None) or {}
     for i, cs in enumerate(stats):
         if cs.count == 0:
             skip[i] = True
             continue
         if not exprs:
             continue
-        ranges = _chunk_ranges(cs, manifest.schema)
+        ranges = _chunk_ranges(cs, manifest.schema, vocabs)
         if any(_provably_empty(expr_interval(e, ranges)) for e in exprs):
             skip[i] = True
     return skip
@@ -347,13 +376,16 @@ def _range_fraction(op: str, lo: float, hi: float, v: float,
     return min(max(f, 0.0), 1.0)
 
 
-def predicate_selectivity(e, cs: ChunkStats, schema: tuple) -> float:
+def predicate_selectivity(e, cs: ChunkStats, schema: tuple,
+                          vocabs=None) -> float:
     """Estimated fraction of one chunk's rows passing predicate ``e``.
 
     Interval-provable outcomes give exact 0/1; ``col <op> literal`` uses
     the uniform-range fraction (equality via the KMV distinct estimate);
-    anything else falls back to the fixed 0.5 ratio."""
-    ranges = _chunk_ranges(cs, schema)
+    anything else falls back to the fixed 0.5 ratio. Dict columns compare
+    in code space: bound predicates carry code literals and the chunk's
+    string bounds map through ``vocabs``."""
+    ranges = _chunk_ranges(cs, schema, vocabs)
     iv = expr_interval(e, ranges)
     if iv is not None and iv.boolish:
         if iv.lo == 1:
@@ -365,8 +397,14 @@ def predicate_selectivity(e, cs: ChunkStats, schema: tuple) -> float:
         op, name, v = m
         col = cs.column(name)
         if col is not None and col.min is not None and col.max is not None:
+            lo, hi = col.min, col.max
+            voc = (vocabs or {}).get(name)
+            if voc is not None:
+                lo, hi = voc.code_of(str(lo)), voc.code_of(str(hi))
+                if lo is None or hi is None:
+                    return _FIXED_SELECTIVITY
             try:
-                return _range_fraction(op, float(col.min), float(col.max),
+                return _range_fraction(op, float(lo), float(hi),
                                        float(v), col.distinct())
             except (TypeError, ValueError):
                 return _FIXED_SELECTIVITY
@@ -382,6 +420,7 @@ def _scan_chunk_rows(manifest, scan) -> tuple | None:
     if stats is None or len(stats) != len(manifest.chunks):
         return None
     skip = chunk_skip_mask(manifest, scan.pred_sigs)
+    vocabs = getattr(manifest, "vocab_map", None) or {}
     out = []
     for i, cs in enumerate(stats):
         if skip[i]:
@@ -390,7 +429,8 @@ def _scan_chunk_rows(manifest, scan) -> tuple | None:
         est = float(cs.count)
         for sig in scan.pred_sigs:
             if isinstance(sig, Expr):
-                est *= predicate_selectivity(sig, cs, manifest.schema)
+                est *= predicate_selectivity(sig, cs, manifest.schema,
+                                             vocabs)
             else:
                 est *= _FIXED_SELECTIVITY  # legacy callable: fixed ratio
         out.append(est)

@@ -59,7 +59,15 @@ def hash32(col: np.ndarray) -> np.ndarray:
     and the runner's host spill bucketing apply, so KMV distinct estimates
     are statements about the very hash space keys are partitioned in."""
     x = np.asarray(col)
-    if x.dtype in (np.int64, np.uint64):
+    if x.dtype.kind in ("U", "S"):
+        # decoded dict-column values: a stable per-string hash (crc32)
+        # seeds the same lowbias finalizer. Distinct strings == distinct
+        # codes, so KMV over decoded values estimates exactly the key
+        # cardinality the code-space shuffle partitions on.
+        import zlib
+        x = np.fromiter((zlib.crc32(str(s).encode("utf-8")) for s in x.ravel()),
+                        dtype=np.uint32, count=x.size)
+    elif x.dtype in (np.int64, np.uint64):
         u = x.astype(np.uint64)
         x = (u ^ (u >> np.uint64(32))).astype(np.uint32)
     elif x.dtype == np.bool_:
@@ -109,9 +117,15 @@ class ColumnStats:
         arr = np.asarray(arr)
         if arr.size == 0:
             return cls(None, None, (), k)
-        lo, hi = _scalar(arr.min()), _scalar(arr.max())
-        if lo is None or hi is None:
-            lo = hi = None  # non-finite somewhere: bounds unusable
+        if arr.dtype.kind in ("U", "S"):
+            # decoded dict-column strings: bounds in value space (JSON
+            # strings), so chunk skipping can compare string predicates
+            u = np.unique(arr.astype(np.str_))
+            lo, hi = str(u[0]), str(u[-1])
+        else:
+            lo, hi = _scalar(arr.min()), _scalar(arr.max())
+            if lo is None or hi is None:
+                lo = hi = None  # non-finite somewhere: bounds unusable
         hashes = np.unique(hash32(arr))
         kmv = tuple(int(h) for h in hashes[:k])
         return cls(lo, hi, kmv, k)
@@ -227,8 +241,17 @@ def backfill_stats(directory: str, k: int = DEFAULT_KMV_K,
     man = DatasetManifest.load(directory)
     if man.stats is not None and not force:
         return man
+    vocabs = man.vocab_map
+
+    def decoded(i: int) -> dict:
+        # dict columns come back as codes; sketch the decoded strings so
+        # backfilled stats match write-time stats exactly
+        cols = read_chunk(man, i)
+        return {n: (vocabs[n].decode(v) if n in vocabs else v)
+                for n, v in cols.items()}
+
     stats = tuple(
-        ChunkStats.from_columns(read_chunk(man, i), k)
+        ChunkStats.from_columns(decoded(i), k)
         for i in range(len(man.chunks)))
     dataclasses.replace(man, stats=stats, stats_k=k).save()
     return DatasetManifest.load(directory)

@@ -106,6 +106,7 @@ from ..plan.logical import (
     Node,
     Project,
     Rebalance,
+    Recode,
     Rename,
     Scan,
     Select,
@@ -124,7 +125,8 @@ from .checkpoint import StreamCheckpoint
 
 __all__ = ["collect", "to_batches", "StreamExecution"]
 
-_EPLIKE = (Select, Project, Rename, MapColumns, WithColumn, Fused, Rebalance)
+_EPLIKE = (Select, Project, Rename, MapColumns, WithColumn, Fused, Rebalance,
+           Recode)
 _SIDS = itertools.count(1 << 20)  # runner-created Source ids, disjoint range
 
 _M1 = np.uint32(0x7FEB352D)
@@ -342,6 +344,15 @@ class _CkptSession:
                 "resume=True but the checkpoint under "
                 f"{self.store.directory!r} belongs to a different query "
                 "(plan / worker count / scanned dataset changed)")
+        want = {n: list(v.words)
+                for n, v in sorted(self.runner.vocabs.items())}
+        got = manifest.get("vocabs", want)
+        if got != want:
+            raise ValueError(
+                "resume=True but the checkpoint's string vocabularies do "
+                "not match this query's (carried code columns would decode "
+                f"to different strings): checkpoint has {sorted(got)}, "
+                f"query has {sorted(want)}")
         self.resumed = True
         self._step = int(manifest["step"]) + 1
         self._ticks = int(manifest.get("ticks", 0))
@@ -420,6 +431,10 @@ class _CkptSession:
             "active_stage": self._cur_stage,
             "active_meta": meta,
             "info": info_scalars,
+            # dict-column vocabs: carried/completed-stage code arrays are
+            # meaningless without these, so they are snapshot state too
+            "vocabs": {n: list(v.words)
+                       for n, v in sorted(self.runner.vocabs.items())},
         }
         step = self._step
         # the checkpoint_publish fault site fires inside store.save (between
@@ -450,6 +465,10 @@ class _Runner:
         self.params = cost_model.params_for_fabric(self.ctx.fabric)
         self.sources = dict(lazy._sources)
         self.scans: dict[int, DatasetManifest] = dict(lazy._scans)
+        # dict-encoded string columns: host-side vocab metadata riding the
+        # LazyDDF — folded into the checkpoint query_key (codes only mean
+        # something under one vocab) and persisted/validated across resume
+        self.vocabs = dict(getattr(lazy, "_vocabs", {}) or {})
         self.prefetch = bool(prefetch)
         self.carry_capacity = carry_capacity
         self.spill_dir = spill_dir
@@ -614,6 +633,10 @@ class _Runner:
                 # capacity: the cursor's meaning depends on the batch size
                 h.update(repr((len(done), int(n.capacity), m.schema,
                                m.chunks)).encode())
+                # dict columns: carried codes only decode under this vocab
+                h.update(repr(getattr(m, "vocabs", ())).encode())
+        h.update(repr(sorted((n, v.words)
+                             for n, v in self.vocabs.items())).encode())
         return h.hexdigest()
 
     def _stage_enter(self, kind: str):

@@ -16,6 +16,7 @@ from typing import Iterable, Mapping
 from .. import expr as _expr
 from ..core import cost_model
 from ..core.api import DDFContext
+from ..core.vocab import storage_schema
 from ..data.dataset import (
     DEFAULT_CHUNK_ROWS,
     DatasetManifest,
@@ -82,6 +83,11 @@ def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
         else open_dataset(str(dataset))
     cap = _batch_capacity(manifest, ctx, batch_rows, memory_budget_bytes)
     sid = next(_frame._SIDS)
+    # the plan/device layers only ever see the STORAGE schema: dict-encoded
+    # string columns appear as their int32 code columns, with the vocab
+    # riding on the LazyDDF as host metadata
+    vocabs = manifest.vocab_map
+    stored = storage_schema(manifest.schema)
     have = schema_names(manifest.schema)
     cols = None
     if columns is not None:
@@ -99,8 +105,9 @@ def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
                 "scan predicate must be a repro.expr expression (e.g. "
                 "col('v') > 3); for legacy callables chain .select() and "
                 "let the optimizer probe it")
-        e = _expr.prepare_row_expr(predicate, have, "scan")
-        if _expr.host_portable(e, manifest.schema):
+        e = _expr.prepare_row_expr(predicate, have, "scan",
+                                   vocabs=vocabs or None)
+        if _expr.host_portable(e, stored):
             preds = (("pred",), (e,), (_expr.to_numpy_fn(e),))
         else:
             # host numpy would evaluate this differently than the device
@@ -115,13 +122,14 @@ def scan_dataset(dataset, ctx: DDFContext, batch_rows: int | None = None,
                     "include them in columns= or use a host-portable "
                     "(integer/comparison) predicate")
             device_pred = e
-    root = Scan(sid=sid, schema=manifest.schema, capacity=cap, columns=cols,
+    root = Scan(sid=sid, schema=stored, capacity=cap, columns=cols,
                 pred_names=preds[0], pred_sigs=preds[1], pred_fns=preds[2])
     if device_pred is not None:
         root = Select(root, _expr.to_jax_fn(device_pred), "pred",
                       tuple(sorted(_expr.referenced_columns(device_pred))),
                       expr=device_pred)
-    return _frame.LazyDDF(root, ctx, {}, scans={sid: manifest})
+    return _frame.LazyDDF(root, ctx, {}, scans={sid: manifest},
+                          vocabs=vocabs)
 
 
 def scan_csv(files: Iterable[str], schema: Mapping, ctx: DDFContext,

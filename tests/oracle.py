@@ -1,0 +1,177 @@
+"""Pure-numpy single-process reference semantics ("the oracle").
+
+Differential testing needs an implementation whose correctness is obvious:
+every operator here is a direct transcription of its relational definition
+over a plain ``{column: np.ndarray}`` table — no partitioning, no hashing,
+no capacity, no device. ``tests/test_differential.py`` drives random
+pipelines through the eager engine, the lazy optimizer, and the streaming
+engine and asserts each one's result equals the oracle's.
+
+Row order is NOT part of the contract for shuffle-based operators (hash
+order and tie order are engine details), so results are compared through
+:func:`canonical` — the sorted multiset of rows with every value
+normalized to plain Python. Sortedness after an explicit sort is asserted
+separately by the test via :func:`is_sorted_by`.
+
+Aggregation ops mirror the engine's ``{col}_{op}`` output naming and its
+string-column rules (min/max/count are ordered ops and apply to strings;
+sum/mean do not).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "canonical",
+    "is_sorted_by",
+    "o_select",
+    "o_project",
+    "o_join",
+    "o_groupby",
+    "o_unique",
+    "o_union",
+    "o_difference",
+    "o_sort",
+]
+
+
+def _norm(v):
+    """One cell -> plain Python (so int32 == int64 == python int compares)."""
+    if isinstance(v, (np.str_, str)):
+        return str(v)
+    if isinstance(v, (np.bool_, bool)):
+        return bool(v)
+    if isinstance(v, (np.floating, float)):
+        return float(v)
+    return int(v)
+
+
+def canonical(table) -> tuple:
+    """Order-insensitive comparable form: (sorted column names, sorted rows
+    of normalized cells, columns in sorted-name order)."""
+    names = sorted(table)
+    arrays = [np.asarray(table[c]) for c in names]
+    n = len(arrays[0]) if arrays else 0
+    rows = sorted(tuple(_norm(a[i]) for a in arrays) for i in range(n))
+    return tuple(names), tuple(rows)
+
+
+def is_sorted_by(table, by: str, descending: bool = False) -> bool:
+    """True when column ``by`` is monotone in the given direction."""
+    a = np.asarray(table[by])
+    if len(a) <= 1:
+        return True
+    return bool(np.all(a[:-1] >= a[1:]) if descending
+                else np.all(a[:-1] <= a[1:]))
+
+
+def o_select(table, mask) -> dict:
+    mask = np.asarray(mask, bool)
+    return {c: np.asarray(v)[mask] for c, v in table.items()}
+
+
+def o_project(table, names) -> dict:
+    return {c: np.asarray(table[c]) for c in names}
+
+
+def o_join(left, right, on) -> dict:
+    """Inner equi-join, nested-loop definition. Right-side key columns are
+    dropped (they equal the left's); non-key name collisions are the
+    caller's problem, as in the engine."""
+    on = tuple(on)
+    lkeys = list(zip(*(np.asarray(left[c]) for c in on)))
+    rkeys = list(zip(*(np.asarray(right[c]) for c in on)))
+    li, ri = [], []
+    for i, lk in enumerate(lkeys):
+        for j, rk in enumerate(rkeys):
+            if lk == rk:
+                li.append(i)
+                ri.append(j)
+    out = {c: np.asarray(v)[li] for c, v in left.items()}
+    for c, v in right.items():
+        if c not in on:
+            out[c] = np.asarray(v)[ri]
+    return out
+
+
+_ORDERED_ONLY = ("min", "max", "count")
+
+
+def o_groupby(table, by, aggs) -> dict:
+    """GroupBy-aggregate; output columns are the keys plus ``{col}_{op}``.
+
+    Mirrors the engine's typing rule: arithmetic aggregations (sum/mean)
+    over string columns raise TypeError; min/max/count are order-only and
+    apply to everything."""
+    by = tuple(by)
+    keys = list(zip(*(np.asarray(table[c]) for c in by)))
+    groups: dict[tuple, list] = {}
+    for i, k in enumerate(keys):
+        groups.setdefault(k, []).append(i)
+    uniq = sorted(groups)
+    out = {c: np.asarray([k[j] for k in uniq])
+           for j, c in enumerate(by)}
+    for c, ops in aggs.items():
+        vals = np.asarray(table[c])
+        if vals.dtype.kind in ("U", "S"):
+            bad = [o for o in ops if o not in _ORDERED_ONLY]
+            if bad:
+                raise TypeError(f"oracle groupby: {bad} over string {c!r}")
+        for op in ops:
+            col = []
+            for k in uniq:
+                g = vals[groups[k]]
+                if op == "sum":
+                    col.append(g.sum())
+                elif op == "count":
+                    col.append(len(g))
+                elif op == "min":
+                    # python min/max: numpy's reductions have no unicode loop
+                    col.append(min(g.tolist()))
+                elif op == "max":
+                    col.append(max(g.tolist()))
+                elif op == "mean":
+                    col.append(g.sum() / len(g))
+                else:
+                    raise ValueError(f"oracle groupby: unknown op {op!r}")
+            out[f"{c}_{op}"] = np.asarray(col)
+    return out
+
+
+def o_unique(table, subset) -> dict:
+    """Distinct rows over ``subset`` (the table is expected to be already
+    projected to ``subset``, which makes first-occurrence unambiguous)."""
+    subset = tuple(subset)
+    keys = list(zip(*(np.asarray(table[c]) for c in subset)))
+    seen, idx = set(), []
+    for i, k in enumerate(keys):
+        if k not in seen:
+            seen.add(k)
+            idx.append(i)
+    return {c: np.asarray(v)[idx] for c, v in table.items()}
+
+
+def o_union(left, right, on) -> dict:
+    """Set union by key = concat + distinct (tables projected to keys)."""
+    both = {c: np.concatenate([np.asarray(left[c]), np.asarray(right[c])])
+            for c in left}
+    return o_unique(both, on)
+
+
+def o_difference(left, right, on) -> dict:
+    """Anti-join: every left row whose key has no match in right."""
+    on = tuple(on)
+    rkeys = set(zip(*(np.asarray(right[c]) for c in on))) if len(
+        np.asarray(right[on[0]])) else set()
+    lkeys = list(zip(*(np.asarray(left[c]) for c in on)))
+    mask = np.asarray([k not in rkeys for k in lkeys], bool) if lkeys \
+        else np.zeros(0, bool)
+    return {c: np.asarray(v)[mask] for c, v in left.items()}
+
+
+def o_sort(table, by: str, descending: bool = False) -> dict:
+    order = np.argsort(np.asarray(table[by]), kind="stable")
+    if descending:
+        order = order[::-1]
+    return {c: np.asarray(v)[order] for c, v in table.items()}

@@ -1,0 +1,276 @@
+"""Differential oracle tests: eager == lazy == streaming == numpy oracle.
+
+Random pipelines over mixed numeric + dict-encoded string tables run four
+ways — the eager per-op ``DDF`` path, one lazy plan through the full
+optimizer, the out-of-core streaming engine over on-disk chunked datasets
+(scan leaves, so vocab unification happens at Recode boundaries), and the
+pure-numpy reference in ``tests/oracle.py`` — and every result must agree
+as a multiset of rows (hash/tie order is an engine detail; explicit sorts
+additionally assert monotonicity).
+
+Pipelines are drawn from a seeded generator (deterministic: the suite
+replays bit-identically); when hypothesis is installed an extra
+hypothesis-driven variant of the same property runs too. String predicates
+exercise both vocab-present and vocab-absent literals, joins/set-ops run
+over *divergent* per-side vocabularies, and string-keyed groupbys cover
+ordered aggregation (min/max) of dict columns.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import DDF, DDFContext
+from repro.data.dataset import DatasetWriter
+from repro.expr import col
+from repro.stream import scan_dataset
+
+import oracle as O
+
+N = 48
+CAP = 8 * N
+WORDS = ("atl", "bos", "den", "dfw", "iad", "jfk", "lax", "ord",
+         "sea", "sfo")
+TAGS = ("blue", "green", "red")
+OP_KINDS = ("select", "project", "join", "groupby", "unique", "sort",
+            "difference", "union")
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    return DDFContext(mesh=mesh, axes=("data",))
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(11)
+    # divergent key vocabularies: the two sides only share WORDS[2:8], so
+    # every join/union/difference crosses a real vocab-unification boundary
+    L = {"k": np.asarray(WORDS[:8])[rng.integers(0, 8, N)],
+         "g": np.asarray(TAGS)[rng.integers(0, 3, N)],
+         "v": rng.integers(0, 1000, N).astype(np.int32)}
+    R = {"k": np.asarray(WORDS[2:])[rng.integers(0, 8, N)],
+         "w": rng.integers(0, 1000, N).astype(np.int32)}
+    return L, R
+
+
+@pytest.fixture(scope="module")
+def datasets(data, tmp_path_factory):
+    L, R = data
+    out = []
+    for name, tbl in (("L", L), ("R", R)):
+        d = tmp_path_factory.mktemp(f"diff{name}")
+        schema = {c: ("dict" if tbl[c].dtype.kind == "U" else str(tbl[c].dtype))
+                  for c in tbl}
+        w = DatasetWriter(str(d), schema, chunk_rows=16)
+        w.append(tbl)
+        out.append(w.close())
+    return tuple(out)
+
+
+def _value_col(names):
+    for c in ("v", "w", "v_sum", "v_count", "v_min", "v_max", "w_sum",
+              "w_count", "g_min", "g_max"):
+        if c in names:
+            return c
+    return None
+
+
+def _names(frame, mode):
+    if mode == "oracle":
+        return set(frame)
+    return set(frame.column_names)
+
+
+def _select_pred(p1, p2, vcol):
+    """(expr for engines, numpy mask fn for the oracle). Words are drawn
+    from the full pool, so some literals are absent from a side's vocab."""
+    word = WORDS[p2 % len(WORDS)]
+    kind = p1 % 5
+    if kind == 0:
+        return col("k").eq(word), lambda t: np.asarray(t["k"]) == word
+    if kind == 1:
+        return col("k").ne(word), lambda t: np.asarray(t["k"]) != word
+    if kind == 2:
+        return col("k") < word, lambda t: np.asarray(t["k"]) < word
+    if kind == 3:
+        return col("k") >= word, lambda t: np.asarray(t["k"]) >= word
+    m = 2 + p2 % 5
+    if vcol is None or vcol.startswith("g_"):
+        return None, None
+    return (col(vcol) % m).ne(0), \
+        lambda t: (np.asarray(t[vcol]) % m) != 0
+
+
+def _apply(frame, rights, op, mode):
+    """Apply one drawn op in one execution mode; ops whose requirements
+    are unmet degrade to a no-op (identically in every mode, because the
+    four modes always hold the same schema)."""
+    names = _names(frame, mode)
+    kind, p1, p2 = op
+    vcol = _value_col(names)
+    right = rights[mode]
+    eager = mode == "eager"
+    if kind == "select" and "k" in names:
+        pred, mask = _select_pred(p1, p2, vcol)
+        if pred is None:
+            return frame
+        if mode == "oracle":
+            return O.o_select(frame, mask(frame))
+        return frame.select(pred, name=f"p{p1 % 5}_{p2 % 10}")
+    if kind == "project" and "k" in names and vcol is not None:
+        keep = ["k", vcol] + (["g"] if "g" in names and p1 % 2 else [])
+        if mode == "oracle":
+            return O.o_project(frame, keep)
+        return frame.project(keep)
+    if kind == "join" and "k" in names and "w" not in names:
+        if mode == "oracle":
+            return O.o_join(frame, right, ("k",))
+        out = frame.join(right, on=("k",), strategy="shuffle",
+                         capacity=CAP * 8)
+        return out[0] if eager else out
+    if kind == "groupby" and "k" in names and vcol is not None:
+        by = ("k", "g") if "g" in names and p2 % 2 else ("k",)
+        if p1 % 4 == 3 and "g" in names and "g" not in by:
+            aggs = {"g": ("min", "max")}
+        elif vcol.startswith("g_"):
+            aggs = {vcol: ("min", "max")}
+        else:
+            aggs = {vcol: ("sum", "count") if p1 % 2 else ("min", "max")}
+        if mode == "oracle":
+            return O.o_groupby(frame, by, aggs)
+        out = frame.groupby(by, aggs)
+        return out[0] if eager else out
+    if kind == "unique" and "k" in names:
+        keys = ("k", "g") if "g" in names and p1 % 2 else ("k",)
+        if mode == "oracle":
+            return O.o_unique(O.o_project(frame, keys), keys)
+        out = frame.project(list(keys)).unique(keys)
+        return out[0] if eager else out
+    if kind == "sort" and names:
+        by = "k" if (p1 % 2 or vcol is None) and "k" in names else vcol
+        if by is None:
+            return frame
+        if mode == "oracle":
+            return O.o_sort(frame, by, descending=bool(p2 % 2))
+        out = frame.sort_values(by, descending=bool(p2 % 2))
+        return out[0] if eager else out
+    if kind == "difference" and "k" in names:
+        # the engine's difference is a SET op (left is deduplicated by
+        # key), so run it key-only to keep non-key survivors unambiguous
+        if mode == "oracle":
+            return O.o_unique(
+                O.o_difference(O.o_project(frame, ["k"]),
+                               O.o_project(right, ["k"]), ("k",)), ("k",))
+        out = frame.project(["k"]).difference(right.project(["k"]),
+                                              on=("k",))
+        return out[0] if eager else out
+    if kind == "union" and "k" in names:
+        if mode == "oracle":
+            return O.o_union(O.o_project(frame, ["k"]),
+                             O.o_project(right, ["k"]), ("k",))
+        out = frame.project(["k"]).union(right.project(["k"]), on=("k",))
+        return out[0] if eager else out
+    return frame
+
+
+def _final_sort(ops, result):
+    """(by, descending) when the pipeline's last op is a sort; a sort
+    changes no columns, so its key resolves against the final schema."""
+    if not ops or ops[-1][0] != "sort":
+        return None
+    _, p1, p2 = ops[-1]
+    names = set(result)
+    vcol = _value_col(names)
+    by = "k" if (p1 % 2 or vcol is None) and "k" in names else vcol
+    return (by, bool(p2 % 2)) if by is not None else None
+
+
+def _check_pipeline(ctx, data, datasets, ops):
+    L, R = data
+    manL, manR = datasets
+    dl = DDF.from_numpy(L, ctx, capacity=CAP)
+    dr = DDF.from_numpy(R, ctx, capacity=CAP)
+    frames = {
+        "eager": dl,
+        "lazy": dl.lazy(),
+        "stream": scan_dataset(manL, ctx, batch_rows=16),
+        "oracle": {c: np.asarray(v) for c, v in L.items()},
+    }
+    rights = {
+        "eager": dr,
+        "lazy": dr.lazy(),
+        "stream": scan_dataset(manR, ctx, batch_rows=16),
+        "oracle": {c: np.asarray(v) for c, v in R.items()},
+    }
+    for mode in frames:
+        f = frames[mode]
+        for op in ops:
+            f = _apply(f, rights, op, mode)
+        frames[mode] = f
+    results = {
+        "eager": frames["eager"].to_numpy(),
+        "lazy": frames["lazy"].to_numpy(),
+        "stream": frames["stream"].collect_stream().to_numpy(),
+        "oracle": frames["oracle"],
+    }
+    want = O.canonical(results["oracle"])
+    for mode in ("eager", "lazy", "stream"):
+        got = O.canonical(results[mode])
+        assert got[0] == want[0], (mode, ops, got[0], want[0])
+        assert got[1] == want[1], (mode, ops, got[1][:4], want[1][:4])
+    srt = _final_sort(ops, results["eager"])
+    if srt is not None:
+        by, desc = srt
+        for mode in ("eager", "lazy", "stream"):
+            assert O.is_sorted_by(results[mode], by, desc), (mode, ops)
+
+
+def _draw_ops(rng, max_ops=3):
+    n_ops = int(rng.integers(1, max_ops + 1))
+    return [(OP_KINDS[int(rng.integers(len(OP_KINDS)))],
+             int(rng.integers(8)), int(rng.integers(10)))
+            for _ in range(n_ops)]
+
+
+# 200+ seeded pipelines split into chunks so a failure names its block and
+# the whole sweep shows progress under -v
+@pytest.mark.parametrize("block", range(10))
+def test_differential_seeded(ctx, data, datasets, block):
+    """Deterministic sweep: 10 blocks x 20 pipelines = 200 pipelines."""
+    rng = np.random.default_rng(7000 + block)
+    for _ in range(20):
+        _check_pipeline(ctx, data, datasets, _draw_ops(rng))
+
+
+def test_differential_string_heavy(ctx, data, datasets):
+    """Hand-picked worst cases: every op touches a dict column."""
+    cases = [
+        [("select", 0, 4), ("groupby", 3, 1), ("sort", 1, 0)],
+        [("join", 0, 0), ("select", 2, 7), ("groupby", 0, 0)],
+        [("union", 0, 0), ("sort", 1, 1)],
+        [("difference", 0, 0), ("unique", 1, 0), ("sort", 1, 0)],
+        [("select", 0, 9), ("join", 0, 0)],  # literal absent on one side
+        [("groupby", 3, 0), ("sort", 0, 0)],  # g_min/g_max keep vocab
+    ]
+    for ops in cases:
+        _check_pipeline(ctx, data, datasets, ops)
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.tuples(st.sampled_from(OP_KINDS),
+                  st.integers(0, 7), st.integers(0, 9)),
+        min_size=1, max_size=3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(_ops)
+    def test_differential_hypothesis(ctx, data, datasets, ops):
+        _check_pipeline(ctx, data, datasets, ops)

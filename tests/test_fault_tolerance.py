@@ -56,7 +56,9 @@ def _table(n, nkeys, seed):
 
 @pytest.fixture(scope="module")
 def ds(tmp_path_factory):
-    """Two chunked datasets; 4096 rows / batch_rows=512 -> 8 morsels."""
+    """Three chunked datasets; 4096 rows / batch_rows=512 -> 8 morsels.
+    ``sleft`` keys are dict-encoded strings (same key distribution as
+    ``left``) so the matrix also covers vocab state in carry tables."""
     root = tmp_path_factory.mktemp("faultds")
     left = write_dataset(_table(4096, 50, CHAOS_SEED), str(root / "left"),
                          chunk_rows=256)
@@ -65,15 +67,21 @@ def ds(tmp_path_factory):
         {"k": rng.integers(0, 50, 1536).astype(np.int64),
          "w": rng.standard_normal(1536).astype(np.float32)},
         str(root / "right"), chunk_rows=192)
-    return left, right
+    t = _table(4096, 50, CHAOS_SEED + 2)
+    words = np.asarray([f"city{i:02d}" for i in range(50)])
+    sleft = write_dataset({"k": words[t["k"]], "v": t["v"]},
+                          str(root / "sleft"), chunk_rows=256)
+    return left, right, sleft
 
 
 def _pipeline(name, ctx, ds):
     """Named 8+-morsel pipelines covering every blocking-tail strategy."""
-    left, right = ds
+    left, right, sleft = ds
     scan = lambda m: stream.scan_dataset(m, ctx, batch_rows=512)
     if name == "groupby":        # device carry table
         return scan(left).groupby(("k",), {"v": ("sum", "count")})
+    if name == "strgroupby":     # carry table keyed by dict-encoded strings
+        return scan(sleft).groupby(("k",), {"v": ("sum", "count")})
     if name == "unique":         # device carry table (distinct rows)
         return scan(left).unique(("k",))
     if name == "sort":           # host spill + stable merge
@@ -86,7 +94,7 @@ def _pipeline(name, ctx, ds):
     raise ValueError(name)
 
 
-PIPELINES = ("groupby", "unique", "sort", "join", "multi")
+PIPELINES = ("groupby", "strgroupby", "unique", "sort", "join", "multi")
 
 
 def _run(name, ctx, ds, **opts):
@@ -339,6 +347,10 @@ KILL_CASES = [
     # morsels in, after at least one periodic snapshot has been published
     ("join", "spill_write", 40),
     ("multi", "chunk_decode", 6),
+    # string-keyed carry table: the snapshot must persist vocab state and
+    # the resumed codes must decode to the same strings
+    ("strgroupby", "device_op", 5),
+    ("strgroupby", "chunk_decode", 5),
 ]
 
 
@@ -402,6 +414,34 @@ def test_resume_rejects_different_query(ctx, ds, tmp_path):
             _run("groupby", ctx, ds, checkpoint_dir=ck, checkpoint_every=2)
     with pytest.raises(ValueError, match="different query"):
         _run("sort", ctx, ds, checkpoint_dir=ck, resume=True)
+
+
+def test_resume_rejects_different_vocab(ctx, tmp_path):
+    """Two datasets with IDENTICAL plan shape, chunk layout, and code
+    streams but different string vocabularies: a checkpoint from one must
+    refuse to resume the other — carried codes would silently decode to
+    the wrong strings."""
+    t = _table(4096, 50, CHAOS_SEED + 3)
+    qs = {}
+    for stem in ("city", "town"):
+        words = np.asarray([f"{stem}{i:02d}" for i in range(50)])
+        man = write_dataset({"k": words[t["k"]], "v": t["v"]},
+                            str(tmp_path / stem), chunk_rows=256)
+        qs[stem] = lambda m=man: stream.scan_dataset(
+            m, ctx, batch_rows=512).groupby(("k",), {"v": ("sum",)})
+    ck = str(tmp_path / "ck")
+    plan = FaultPlan(seed=CHAOS_SEED, kill_after={"device_op": 5})
+    with fault_scope(plan):
+        with pytest.raises(InjectedFault):
+            qs["city"]().collect_stream(checkpoint_dir=ck,
+                                        checkpoint_every=2)
+    with pytest.raises(ValueError, match="different query"):
+        qs["town"]().collect_stream(checkpoint_dir=ck, resume=True)
+    # the same query still resumes fine
+    out = qs["city"]().collect_stream(checkpoint_dir=ck,
+                                      resume=True).to_numpy()
+    assert sorted(out["k"].tolist()) == sorted(
+        f"city{i:02d}" for i in range(50))
 
 
 def test_resume_requires_checkpoint_dir(ctx, ds):

@@ -1,0 +1,283 @@
+"""Dict-encoded string columns: vocab algebra, distributed unification,
+worker-count and kernel-backend invariance, and the CSV typed-error
+regression.
+
+The tentpole invariants under test:
+
+1. ``DictVocab`` is a *sorted* dictionary, so codes are order-isomorphic
+   with their strings — every ordered kernel (sort, min/max, range
+   partition) works on codes unchanged.
+2. Vocab unification at binary boundaries (join/union/difference) is pure
+   metadata + an injective per-row recode: it NEVER changes the row set,
+   and results are bit-identical whether the two sides' vocabularies are
+   identical, overlapping, or disjoint.
+3. Results are invariant across worker counts (P ∈ {1, 4, 8}, forced host
+   devices in a subprocess) and across kernel backends
+   (``set_backend("pallas")`` vs ``"jnp"``).
+4. Non-numeric CSV cells in numeric columns raise the typed
+   ``DatasetSchemaError`` naming the column; string columns declared as
+   ``"dict"`` ingest into the dict-encoded path.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DDF, DDFContext
+from repro.core.vocab import DictVocab, encode_strings, storage_schema
+from repro.data.dataset import DatasetSchemaError, csv_to_dataset, read_rows
+from repro.expr import col
+from repro.kernels import use_backend
+
+N = 32
+CAP = 4 * N
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    return DDFContext(mesh=mesh, axes=("data",))
+
+
+# -- vocab algebra -------------------------------------------------------------
+
+def test_vocab_sorted_dedup_and_codes():
+    v = DictVocab.from_values(["sfo", "iad", "sfo", "atl"])
+    assert v.words == ("atl", "iad", "sfo")
+    assert [v.code_of(w) for w in v.words] == [0, 1, 2]
+    assert v.code_of("zzz") is None
+    codes, v2 = encode_strings(np.array(["iad", "atl", "iad"]))
+    assert v2.words == ("atl", "iad")
+    assert codes.tolist() == [1, 0, 1]
+    assert codes.dtype == np.int32
+    assert v2.decode(codes).tolist() == ["iad", "atl", "iad"]
+
+
+def test_vocab_merge_and_recode_injective():
+    a = DictVocab.from_values(["atl", "iad", "sfo"])
+    b = DictVocab.from_values(["bos", "iad", "jfk"])
+    m = a.merge(b)
+    assert m.words == ("atl", "bos", "iad", "jfk", "sfo")
+    ra, rb = a.recode_map(m), b.recode_map(m)
+    # injective, order-preserving, and exact on every word
+    for v, r in ((a, ra), (b, rb)):
+        assert sorted(set(r.tolist())) == r.tolist()
+        for i, w in enumerate(v.words):
+            assert m.words[r[i]] == w
+    # identity detection: merging into itself needs no recode
+    assert a.is_identity_into(a.merge(a))
+    with pytest.raises(ValueError):
+        b.recode_map(a)  # not a superset
+
+
+def test_vocab_encode_names_absent_value():
+    v = DictVocab.from_values(["atl", "iad"])
+    with pytest.raises(KeyError, match="sfo"):
+        v.encode(np.array(["atl", "sfo"]))
+
+
+def test_storage_schema_maps_dict_to_int32():
+    s = (("k", "dict", ()), ("v", "int32", ()))
+    assert storage_schema(s) == (("k", "int32", ()), ("v", "int32", ()))
+
+
+# -- recode never changes the row set -----------------------------------------
+
+def test_recode_preserves_row_set(ctx):
+    rng = np.random.default_rng(5)
+    words = np.asarray(["atl", "bos", "iad", "sfo"])
+    L = {"k": words[rng.integers(0, 4, N)],
+         "v": rng.integers(0, 100, N).astype(np.int32)}
+    d = DDF.from_numpy(L, ctx, capacity=CAP)
+    merged = d.vocabs["k"].merge(DictVocab.from_values(["den", "jfk", "zzz"]))
+    r = d._recode({"k": d.vocabs["k"].recode_map(merged)})
+    r.vocabs = {"k": merged}
+    before = sorted(zip(L["k"].tolist(), L["v"].tolist()))
+    after_tbl = r.to_numpy()
+    after = sorted(zip(after_tbl["k"].tolist(), after_tbl["v"].tolist()))
+    assert before == after
+
+
+def test_lazy_recode_visible_and_bit_identical(ctx):
+    rng = np.random.default_rng(6)
+    L = {"k": np.asarray(["atl", "bos", "iad", "sfo"])[rng.integers(0, 4, N)],
+         "v": rng.integers(0, 100, N).astype(np.int32)}
+    R = {"k": np.asarray(["bos", "den", "iad", "jfk"])[rng.integers(0, 4, N)],
+         "w": rng.integers(0, 100, N).astype(np.int32)}
+    dl = DDF.from_numpy(L, ctx, capacity=CAP)
+    dr = DDF.from_numpy(R, ctx, capacity=CAP)
+    lz = dl.lazy().join(dr.lazy(), on=("k",), strategy="shuffle",
+                        capacity=CAP * 4)
+    # divergent vocabs => the planned DAG carries an explicit RECODE node
+    assert "RECODE" in lz.explain(optimized=False)
+    assert "RECODE" in lz.explain()
+    eager = dl.join(dr, on=("k",), strategy="shuffle", capacity=CAP * 4)[0]
+    a, b = eager.to_numpy(), lz.to_numpy()
+    assert sorted(a) == sorted(b)
+    for c in a:
+        assert sorted(a[c].tolist()) == sorted(b[c].tolist()), c
+
+
+# -- unification across vocab regimes, backends, worker counts -----------------
+
+def _regime_tables(regime: str):
+    """(L, R) numpy tables whose key vocabularies are identical /
+    overlapping / disjoint by construction."""
+    rng = np.random.default_rng(17)
+    pools = {
+        "identical": (("atl", "bos", "iad", "sfo"),
+                      ("atl", "bos", "iad", "sfo")),
+        "overlapping": (("atl", "bos", "iad", "sfo"),
+                        ("bos", "den", "iad", "jfk")),
+        "disjoint": (("atl", "bos", "iad", "sfo"),
+                     ("den", "jfk", "lax", "ord")),
+    }
+    lp, rp = pools[regime]
+    L = {"k": np.asarray(lp)[rng.integers(0, 4, N)],
+         "v": rng.integers(0, 100, N).astype(np.int32)}
+    R = {"k": np.asarray(rp)[rng.integers(0, 4, N)],
+         "w": rng.integers(0, 100, N).astype(np.int32)}
+    return L, R
+
+
+def _unification_results(ctx, regime: str):
+    """Canonicalized decoded results of every binary set/join op for one
+    vocab regime — the worker-count/backend-invariant payload."""
+    L, R = _regime_tables(regime)
+    dl = DDF.from_numpy(L, ctx, capacity=CAP)
+    dr = DDF.from_numpy(R, ctx, capacity=CAP)
+    out = {}
+    j = dl.join(dr, on=("k",), strategy="shuffle", capacity=CAP * 4)[0]
+    t = j.to_numpy()
+    out["join"] = sorted(zip(t["k"].tolist(), t["v"].tolist(),
+                             t["w"].tolist()))
+    u = dl.project(["k"]).union(dr.project(["k"]), on=("k",))[0].to_numpy()
+    out["union"] = sorted(u["k"].tolist())
+    d = dl.project(["k"]).difference(dr.project(["k"]), on=("k",))[0].to_numpy()
+    out["difference"] = sorted(d["k"].tolist())
+    g = dl.groupby(("k",), {"v": ("min", "max")})[0].to_numpy()
+    out["groupby"] = sorted(zip(g["k"].tolist(), g["v_min"].tolist(),
+                                g["v_max"].tolist()))
+    return out
+
+
+def _expected_results(regime: str):
+    L, R = _regime_tables(regime)
+    lk, rk = L["k"].tolist(), R["k"].tolist()
+    out = {}
+    out["join"] = sorted((k, int(v), int(w))
+                         for k, v in zip(lk, L["v"])
+                         for k2, w in zip(rk, R["w"]) if k == k2)
+    out["union"] = sorted(set(lk) | set(rk))
+    out["difference"] = sorted(set(lk) - set(rk))
+    out["groupby"] = sorted(
+        (k, int(min(L["v"][L["k"] == k])), int(max(L["v"][L["k"] == k])))
+        for k in set(lk))
+    return out
+
+
+@pytest.mark.parametrize("regime", ["identical", "overlapping", "disjoint"])
+def test_unification_regimes_match_numpy(ctx, regime):
+    assert _unification_results(ctx, regime) == _expected_results(regime)
+
+
+@pytest.mark.parametrize("regime", ["identical", "overlapping", "disjoint"])
+def test_unification_backend_invariant(ctx, regime):
+    """pallas (interpret mode off-TPU) vs jnp kernels: same decoded rows."""
+    with use_backend("jnp"):
+        a = _unification_results(ctx, regime)
+    with use_backend("pallas"):
+        b = _unification_results(ctx, regime)
+    assert a == b == _expected_results(regime)
+
+
+@pytest.mark.slow
+def test_unification_worker_count_invariant():
+    """P ∈ {1, 4, 8} (forced host devices, subprocess): identical decoded
+    results for every vocab regime."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.dirname(os.environ["TYPES_TEST_FILE"]))
+import jax
+from repro.core import DDFContext
+tt = __import__("test_types")
+results = {}
+for P in (1, 4, 8):
+    mesh = jax.make_mesh((P,), ("data",))
+    ctx = DDFContext(mesh=mesh, axes=("data",))
+    results[P] = {r: tt._unification_results(ctx, r)
+                  for r in ("identical", "overlapping", "disjoint")}
+for P in (4, 8):
+    assert results[P] == results[1], f"P={P} diverged from P=1"
+for r in ("identical", "overlapping", "disjoint"):
+    assert results[1][r] == tt._expected_results(r), r
+print("WORKER COUNT INVARIANT OK")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["TYPES_TEST_FILE"] = os.path.abspath(__file__)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    res = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, timeout=600, env=env)
+    assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]
+    assert "WORKER COUNT INVARIANT OK" in res.stdout
+
+
+# -- string predicates bind to code space --------------------------------------
+
+def test_string_predicates(ctx):
+    L = {"k": np.asarray(["atl", "bos", "iad", "sfo"] * 8),
+         "v": np.arange(N, dtype=np.int32)}
+    d = DDF.from_numpy(L, ctx, capacity=CAP)
+    eq = d.select(col("k").eq("iad")).to_numpy()
+    assert set(eq["k"].tolist()) == {"iad"}
+    absent = d.select(col("k").eq("zzz")).to_numpy()
+    assert len(absent["k"]) == 0  # absent literal: provably-false filter
+    ne_absent = d.select(col("k").ne("zzz")).to_numpy()
+    assert len(ne_absent["k"]) == N  # absent ne: provably-true filter
+    lt = d.select(col("k") < "bos").to_numpy()
+    assert set(lt["k"].tolist()) == {"atl"}
+    isin = d.select(col("k").is_in(["atl", "sfo", "zzz"])).to_numpy()
+    assert set(isin["k"].tolist()) == {"atl", "sfo"}
+
+
+def test_string_sum_raises(ctx):
+    L = {"k": np.asarray(["atl", "bos"] * 16),
+         "v": np.arange(N, dtype=np.int32)}
+    d = DDF.from_numpy(L, ctx, capacity=CAP)
+    with pytest.raises(TypeError, match="no arithmetic"):
+        d.groupby(("v",), {"k": ("sum",)})
+    with pytest.raises(TypeError, match="no arithmetic"):
+        d.agg("k", "sum")
+    assert d.agg("k", "min") == "atl"
+    assert d.agg("k", "max") == "bos"
+
+
+# -- CSV ingestion: typed errors + dict routing (regression) -------------------
+
+def test_csv_bad_cell_names_column(tmp_path):
+    f = tmp_path / "bad.csv"
+    f.write_text("k,v\n1,banana\n2,3\n")
+    with pytest.raises(DatasetSchemaError, match=r"'v'.*banana"):
+        csv_to_dataset([str(f)], {"k": "int32", "v": "int32"},
+                       str(tmp_path / "ds"))
+
+
+def test_csv_dict_column_roundtrip(tmp_path):
+    f = tmp_path / "ok.csv"
+    f.write_text("k,v\nsfo,1\niad,2\nsfo,3\n")
+    man = csv_to_dataset([str(f)], {"k": "dict", "v": "int32"},
+                         str(tmp_path / "ds"))
+    assert dict((n, dt) for n, dt, _ in man.schema)["k"] == "dict"
+    vocab = man.vocab_map["k"]
+    assert vocab.words == ("iad", "sfo")
+    codes = read_rows(man, 0, 3)["k"]
+    assert vocab.decode(np.asarray(codes)).tolist() == ["sfo", "iad", "sfo"]
